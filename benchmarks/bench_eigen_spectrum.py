@@ -1,0 +1,45 @@
+"""Theorems 5.22 (top eigenvalue) and 5.17 (EMD spectrum).
+
+derived: eigen -> "rel_err=<e>;kernel_evals=<n>" (both power-method modes);
+spectrum -> "emd=<e>;kernel_evals=<n>" vs walk budget.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.eigen import top_eigenvalue, top_eigenvalue_exact
+from repro.core.kernels_fn import gaussian
+from repro.core.spectrum import approximate_spectrum, emd_1d, exact_spectrum
+
+
+def run(quick: bool = False):
+    n = 600 if quick else 1500
+    rng = np.random.default_rng(0)
+    x = rng.normal(0, 0.35, (n, 5)).astype(np.float32)
+    ker = gaussian(bandwidth=2.0)
+    rows = []
+
+    lam = top_eigenvalue_exact(ker, x)
+    for method in ("power", "noisy_power"):
+        for t in (100, 300):
+            t0 = time.perf_counter()
+            res = top_eigenvalue(x, ker, t=t, method=method, seed=0)
+            us = (time.perf_counter() - t0) * 1e6
+            rel = abs(res.eigenvalue - lam) / lam
+            rows.append(emit(f"eigen/{method}/t={t}", us,
+                             f"rel_err={rel:.4f};kernel_evals={res.kernel_evals}"))
+
+    truth = exact_spectrum(ker, x)
+    budgets = [(12, 24)] if quick else [(12, 24), (32, 64)]
+    for srcs, walks in budgets:
+        t0 = time.perf_counter()
+        sp = approximate_spectrum(x, ker, length=8, num_sources=srcs,
+                                  walks_per_source=walks, seed=0)
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append(emit(f"spectrum/{srcs}x{walks}", us,
+                         f"emd={emd_1d(sp.eigenvalues, truth):.4f};"
+                         f"kernel_evals={sp.kernel_evals}"))
+    return rows

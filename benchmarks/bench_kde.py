@@ -1,0 +1,43 @@
+"""Table 1 analog: KDE query cost per estimator x kernel.
+
+derived = "evals_per_query=<n>;rel_err=<e>" -- the paper's cost model is
+kernel evaluations (query time ~ d / (eps^2 tau^p)); we report both wall
+time and the hardware-independent eval count.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core.kde.base import ExactKDE, make_estimator
+from repro.core.kernels_fn import (exponential, gaussian, laplacian,
+                                   rational_quadratic)
+
+
+def run(quick: bool = False):
+    n = 2000 if quick else 4000
+    d = 16 if quick else 32
+    m = 32
+    rng = np.random.default_rng(0)
+    x = rng.normal(0, 0.4, (n, d)).astype(np.float32)
+    q = rng.normal(0, 0.4, (m, d)).astype(np.float32)
+    kernels = [gaussian(2.0), exponential(2.0), laplacian(4.0),
+               rational_quadratic(bandwidth=2.0)]
+    rows = []
+    for ker in kernels:
+        oracle = ExactKDE(x, ker)
+        truth = np.asarray(oracle.query(q))
+        for name in ("exact", "rs", "stratified", "grid_hbe"):
+            if name == "grid_hbe" and ker.name != "laplacian":
+                continue
+            est = make_estimator(name, x, ker, seed=0, tau=0.05, eps=0.3)
+            est.evals = 0
+            us = timeit(lambda: np.asarray(est.query(q)),
+                        repeats=2 if name == "grid_hbe" else 3)
+            evals_per_q = est.evals / max(m * 3, 1)
+            vals = np.asarray(est.query(q))
+            rel = float(np.mean(np.abs(vals / truth - 1)))
+            rows.append(emit(
+                f"kde_query/{ker.name}/{name}", us / m,
+                f"evals_per_query={evals_per_q:.0f};rel_err={rel:.4f}"))
+    return rows

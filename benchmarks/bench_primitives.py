@@ -1,0 +1,77 @@
+"""Table 2 analog: measured KDE-query / kernel-eval budgets for every
+reduction and application.
+
+derived = "kernel_evals=<n>;frac_of_n2=<f>" -- each application's measured
+cost relative to materializing the kernel matrix (n^2 evals).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core.eigen import top_eigenvalue
+from repro.core.graph.arboricity import estimate_arboricity
+from repro.core.graph.triangles import estimate_triangle_weight
+from repro.core.kde.base import make_estimator
+from repro.core.kernels_fn import gaussian
+from repro.core.lowrank import fkv_lowrank
+from repro.core.sampling.edge import NeighborSampler
+from repro.core.sampling.vertex import DegreeSampler
+from repro.core.sampling.walks import random_walks
+from repro.core.sparsify import spectral_sparsify
+from repro.core.spectrum import approximate_spectrum
+
+
+def run(quick: bool = False):
+    n = 1000 if quick else 2000
+    rng = np.random.default_rng(0)
+    x = rng.normal(0, 0.35, (n, 6)).astype(np.float32)
+    ker = gaussian(bandwidth=2.0)
+    n2 = float(n * n)
+    rows = []
+
+    est = make_estimator("stratified", x, ker, seed=0)
+    ds = DegreeSampler(est, seed=1)
+    rows.append(emit("primitive/degree_preprocessing", 0.0,
+                     f"kernel_evals={est.evals};frac_of_n2={est.evals/n2:.4f}"))
+
+    nb = NeighborSampler(x, ker, mode="blocked", samples_per_block=8, seed=2)
+    nb.sample(np.zeros(256, np.int64))
+    per_sample = nb.evals / 256
+    rows.append(emit("primitive/neighbor_sample", 0.0,
+                     f"kernel_evals={per_sample:.0f};frac_of_n2={per_sample/n2:.6f}"))
+
+    e0 = nb.evals
+    random_walks(nb, np.zeros(64, np.int64), 8)
+    per_walk = (nb.evals - e0) / 64
+    rows.append(emit("primitive/random_walk_len8", 0.0,
+                     f"kernel_evals={per_walk:.0f};frac_of_n2={per_walk/n2:.6f}"))
+
+    g = spectral_sparsify(x, ker, num_edges=8 * n, estimator="stratified",
+                          samples_per_block=8, seed=0)
+    rows.append(emit("app/spectral_sparsification", 0.0,
+                     f"kernel_evals={g.kernel_evals};frac_of_n2={g.kernel_evals/n2:.3f}"))
+
+    res = fkv_lowrank(x, ker, rank=8, num_rows=200, estimator="rs", seed=0)
+    rows.append(emit("app/low_rank_approx", 0.0,
+                     f"kernel_evals={res.kernel_evals};frac_of_n2={res.kernel_evals/n2:.3f}"))
+
+    er = top_eigenvalue(x, ker, t=150, seed=0)
+    rows.append(emit("app/top_eigenvalue", 0.0,
+                     f"kernel_evals={er.kernel_evals};frac_of_n2={er.kernel_evals/n2:.3f}"))
+
+    sp = approximate_spectrum(x, ker, length=6, num_sources=12,
+                              walks_per_source=24, seed=0)
+    rows.append(emit("app/spectrum_emd", 0.0,
+                     f"kernel_evals={sp.kernel_evals};frac_of_n2={sp.kernel_evals/n2:.3f}"))
+
+    tr = estimate_triangle_weight(x, ker, num_edges=200, neighbor_samples=8,
+                                  estimator="stratified", seed=0)
+    rows.append(emit("app/triangle_weight", 0.0,
+                     f"kernel_evals={tr.kernel_evals};frac_of_n2={tr.kernel_evals/n2:.3f}"))
+
+    ar = estimate_arboricity(x, ker, num_edges=4 * n, estimator="stratified",
+                             seed=0)
+    rows.append(emit("app/arboricity", 0.0,
+                     f"kernel_evals={ar.kernel_evals};frac_of_n2={ar.kernel_evals/n2:.3f}"))
+    return rows

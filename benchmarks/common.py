@@ -1,0 +1,25 @@
+"""Shared benchmark utilities.  Every benchmark prints CSV rows:
+``name,us_per_call,derived`` (derived = benchmark-specific metric)."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+
+def timeit(fn: Callable, repeats: int = 3, warmup: int = 1) -> float:
+    """Median wall time in microseconds."""
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        times.append((time.perf_counter() - t0) * 1e6)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def emit(name: str, us: float, derived) -> str:
+    row = f"{name},{us:.1f},{derived}"
+    print(row, flush=True)
+    return row

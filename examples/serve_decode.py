@@ -1,0 +1,61 @@
+"""Batched serving with KDE attention: exact vs sub-quadratic decode.
+
+Generates with a small model twice -- once with exact cached attention, once
+with the paper's KDE attention (top-P blocks + estimated residual mass) --
+and reports the agreement and the compute fraction.
+
+  PYTHONPATH=src python examples/serve_decode.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ShapeConfig, get_reduced
+from repro.data.pipeline import make_batch
+from repro.models import transformer as T
+from repro.train.train_step import make_decode_step
+
+
+def main():
+    cfg = dataclasses.replace(get_reduced("yi_6b"), dtype="float32")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    batch, prompt_len, gen = 2, 192, 12
+    kde_bk = 32
+    max_len = ((prompt_len + gen + kde_bk - 1) // kde_bk) * kde_bk
+    shape = ShapeConfig("serve", prompt_len, batch, "prefill")
+    prompts = jnp.asarray(make_batch(cfg, shape, 0)["tokens"])
+
+    kde_cfg = {"top_p": 5, "bk": kde_bk, "stride": 2}
+    outs, logit_traces = {}, {}
+    for impl in ("xla", "kde"):
+        cache = T.init_cache(cfg, batch, max_len, jnp.float32)
+        step = jax.jit(make_decode_step(
+            cfg, impl=impl, kde_cfg=kde_cfg if impl == "kde" else None))
+        tok = prompts[:, :1]
+        toks, lgs = [], []
+        for pos in range(prompt_len + gen - 1):
+            nxt, logits, cache = step(params, cache, tok, jnp.int32(pos))
+            tok = prompts[:, pos + 1:pos + 2] if pos + 1 < prompt_len \
+                else nxt[:, None]
+            if pos + 1 >= prompt_len:
+                toks.append(np.asarray(nxt))
+                lgs.append(np.asarray(logits[:, -1, :cfg.vocab_size]))
+        outs[impl] = np.stack(toks, 1)
+        logit_traces[impl] = np.stack(lgs, 1)
+        print(f"{impl:4s}: generated {outs[impl].shape[1]} tokens/seq "
+              f"-> {outs[impl][0][:8].tolist()}...")
+
+    a, b = logit_traces["xla"][:, 0], logit_traces["kde"][:, 0]
+    cos = np.mean([np.corrcoef(x1, x2)[0, 1] for x1, x2 in zip(a, b)])
+    nb = max_len // kde_cfg["bk"]
+    frac = (1 / kde_cfg["stride"]) + kde_cfg["top_p"] / nb
+    print(f"first-step logits correlation exact vs KDE: {cos:.4f}")
+    print(f"KDE attention touches ~{min(frac, 1.0):.0%} of cache entries "
+          f"per step at this toy scale; at 500k context with the production "
+          f"config (bk=512, top_p=16, stride=16) it touches ~8%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""granite-3-2b: dense GQA [hf:ibm-granite/granite-3.0-2b-base; hf]."""
+import dataclasses
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="granite_3_2b", family="dense", num_layers=40, d_model=2048,
+    num_heads=32, num_kv_heads=8, d_ff=8192, vocab_size=49155,
+)
+
+
+def reduced() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG, num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+        d_ff=128, vocab_size=255)

@@ -1,0 +1,15 @@
+"""qwen2.5-14b: dense GQA with QKV bias [hf:Qwen/Qwen2.5-0.5B; hf]."""
+import dataclasses
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2_5_14b", family="dense", num_layers=48, d_model=5120,
+    num_heads=40, num_kv_heads=8, d_ff=13824, vocab_size=152064,
+    qkv_bias=True, tie_embeddings=False,
+)
+
+
+def reduced() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG, num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+        d_ff=160, vocab_size=256)

@@ -1,0 +1,28 @@
+"""Public API: the paper's algorithms, composable over black-box KDE queries.
+
+    from repro.core import (gaussian, spectral_sparsify, fkv_lowrank,
+                            top_eigenvalue, approximate_spectrum, ...)
+"""
+from repro.core.kernels_fn import (Kernel, exponential, gaussian, laplacian,
+                                   make_kernel, median_bandwidth,
+                                   rational_quadratic)
+from repro.core.kde.base import (ExactBlockKDE, ExactKDE, RSKDE,
+                                 StratifiedKDE, make_estimator)
+from repro.core.kde.multilevel import MultiLevelKDE
+from repro.core.sampling.vertex import DegreeSampler, approximate_degrees
+from repro.core.sampling.edge import EdgeSampler, NeighborSampler
+from repro.core.sampling.walks import random_walks
+from repro.core.sampling.rownorm import RowNormSampler
+from repro.core.sparsify import SparseGraph, resparsify, spectral_sparsify
+from repro.core.laplacian import cg_laplacian, solve_kernel_laplacian
+from repro.core.lowrank import (countsketch_lowrank, fkv_lowrank,
+                                subspace_iteration)
+from repro.core.spectrum import approximate_spectrum, emd_1d, exact_spectrum
+from repro.core.eigen import top_eigenvalue, top_eigenvalue_exact
+from repro.core.cluster.local import same_cluster_test
+from repro.core.cluster.spectral import (cluster_accuracy,
+                                         laplacian_eigenvectors, kmeans,
+                                         spectral_cluster)
+from repro.core.graph.arboricity import estimate_arboricity, exact_arboricity
+from repro.core.graph.triangles import (estimate_triangle_weight,
+                                        exact_triangle_weight)

@@ -1,0 +1,113 @@
+"""Top eigenvalue/eigenvector approximation -- Algorithm 5.18 / Theorem 5.22.
+
+Step 1 (BMR21, Lemma 5.21): a random t x t principal submatrix K_S, scaled by
+n/t, preserves eigenvalues to +- n/sqrt(t); with lambda_1 >= n tau
+(Lemma 5.19) choosing t = O(1/(eps^2 tau^2)) keeps a (1 - eps) factor.
+
+Step 2: top eigenvalue of K_S via either the standard gap-independent power
+method (MM15) or the BIMW21 kernel *noisy* power method, whose matvec is
+estimated with sampled kernel evaluations only (our TPU-adapted stand-in for
+their KDE-query matvec: importance-sample indices j ~ |v_j|, evaluate
+k(x_i, x_j) on the sample -- an unbiased estimate of (K v)_i).
+
+The returned eigenvector is sparse: supported only on S (Remark after
+Alg 5.18).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kernels_fn import Kernel
+
+
+@dataclasses.dataclass
+class EigenResult:
+    eigenvalue: float
+    eigenvector: np.ndarray      # (n,) sparse: nonzero only on sampled set
+    support: np.ndarray
+    kernel_evals: int
+
+
+def _noisy_matvec(ksub: np.ndarray, v: np.ndarray, num_samples: int,
+                  rng) -> Tuple[np.ndarray, int]:
+    """Unbiased (K v)_i estimate via importance sampling j ~ |v_j|."""
+    t = len(v)
+    absv = np.abs(v)
+    z = absv.sum()
+    if z <= 0:
+        return np.zeros_like(v), 0
+    p = absv / z
+    idx = rng.choice(t, size=min(num_samples, 4 * t), p=p)
+    contrib = np.sign(v[idx]) * z / len(idx)
+    # In the KDE setting each (i, j) pair is one kernel evaluation; here the
+    # submatrix is materialized, so we count t * |idx| evals-equivalent.
+    out = ksub[:, idx] @ contrib
+    return out, t * len(idx)
+
+
+def power_method(ksub: np.ndarray, iters: int, rng) -> Tuple[float, np.ndarray]:
+    v = rng.standard_normal(ksub.shape[0])
+    v /= np.linalg.norm(v)
+    for _ in range(iters):
+        w = ksub @ v
+        nw = np.linalg.norm(w)
+        if nw <= 0:
+            break
+        v = w / nw
+    lam = float(v @ (ksub @ v))
+    return lam, v
+
+
+def noisy_power_method(ksub: np.ndarray, iters: int, num_samples: int,
+                       rng) -> Tuple[float, np.ndarray, int]:
+    """BIMW21 Algorithm 1 (noisy power method) on the submatrix."""
+    t = ksub.shape[0]
+    v = rng.standard_normal(t)
+    v /= np.linalg.norm(v)
+    evals = 0
+    for _ in range(iters):
+        w, e = _noisy_matvec(ksub, v, num_samples, rng)
+        evals += e
+        nw = np.linalg.norm(w)
+        if nw <= 0:
+            break
+        v = w / nw
+    # Rayleigh quotient with an exact final matvec (t^2 evals).
+    lam = float(v @ (ksub @ v))
+    evals += t * t
+    return lam, v, evals
+
+
+def top_eigenvalue(x, kernel: Kernel, eps: float = 0.25, tau: float = 0.1,
+                   t: Optional[int] = None, method: str = "power",
+                   seed: int = 0) -> EigenResult:
+    """Algorithm 5.18."""
+    n = int(x.shape[0])
+    rng = np.random.default_rng(seed)
+    t = int(t if t is not None else min(n, int(np.ceil(1.0 / (eps * eps * tau * tau)))))
+    support = rng.choice(n, size=t, replace=False)
+    xj = jnp.asarray(x)
+    ksub = np.asarray(kernel.pairwise(xj[jnp.asarray(support)],
+                                      xj[jnp.asarray(support)]), np.float64)
+    evals = t * t
+    iters = max(int(np.ceil(np.log(max(t, 2) / eps) / np.sqrt(eps))), 8)
+    if method == "noisy_power":
+        lam, v, extra = noisy_power_method(ksub, iters,
+                                           num_samples=max(t // 2, 8), rng=rng)
+        evals += extra
+    else:
+        lam, v = power_method(ksub, iters, rng)
+    vec = np.zeros(n)
+    vec[support] = v
+    return EigenResult(eigenvalue=float(lam * n / t), eigenvector=vec,
+                       support=support, kernel_evals=evals)
+
+
+def top_eigenvalue_exact(kernel: Kernel, x) -> float:
+    """Oracle: lambda_1(K) by dense eigendecomposition."""
+    k = np.asarray(kernel.matrix(jnp.asarray(x)), np.float64)
+    return float(np.linalg.eigvalsh(k)[-1])

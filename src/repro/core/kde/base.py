@@ -1,0 +1,186 @@
+"""KDE data structures (Definition 1.1).
+
+A KDE structure over a fixed dataset ``X`` answers queries
+``KDE_X(y) ~= sum_{x in X} k(x, y)`` within ``(1 +- eps)`` multiplicative
+error, assuming ``k(x, y) >= tau``.  The paper uses these strictly as black
+boxes; everything in ``repro.core`` is written against this interface.
+
+Backends
+--------
+* ``ExactKDE``      -- brute force oracle (the Pallas ``kde_rowsum`` kernel on
+                       TPU; a blocked jnp sweep on CPU).
+* ``RSKDE``         -- uniform random sampling, the ``p = 1`` estimator the
+                       paper describes in Section 3.1.
+* ``StratifiedKDE`` -- beyond-paper variance reduction: the dataset is split
+                       into contiguous blocks and each block contributes an
+                       independent uniform subsample (same cost as RS, strictly
+                       lower variance; on TPU every block is one VMEM tile).
+* ``GridHBE``       -- practical hash-based estimator (``hbe.py``).
+
+All estimators count kernel evaluations (``.evals``) -- the paper's headline
+cost metric in Section 7.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kernels_fn import Kernel
+
+
+@functools.partial(jax.jit, static_argnames=("pairwise",))
+def _rowsum(pairwise, y, x):
+    return jnp.sum(pairwise(y, x), axis=1)
+
+
+class KDEBase:
+    """Common interface: query(y: (m, d)) -> (m,) estimated row sums."""
+
+    def __init__(self, x: jnp.ndarray, kernel: Kernel):
+        self.x = jnp.asarray(x, jnp.float32)
+        self.kernel = kernel
+        self.n = int(x.shape[0])
+        self.d = int(x.shape[1])
+        self.evals = 0  # number of kernel evaluations performed
+
+    def query(self, y: jnp.ndarray) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def query1(self, y: jnp.ndarray) -> float:
+        return float(self.query(y[None, :])[0])
+
+
+class ExactKDE(KDEBase):
+    """Brute-force oracle; the Pallas kernel computes this on TPU."""
+
+    def __init__(self, x, kernel: Kernel, chunk: int = 8192,
+                 use_pallas: bool = False):
+        super().__init__(x, kernel)
+        self.chunk = chunk
+        self.use_pallas = use_pallas
+
+    def query(self, y: jnp.ndarray) -> jnp.ndarray:
+        y = jnp.asarray(y, jnp.float32)
+        self.evals += y.shape[0] * self.n
+        if self.use_pallas:
+            from repro.kernels.kde_rowsum import ops as rs_ops
+            return rs_ops.kde_rowsum(y, self.x, self.kernel)
+        out = jnp.zeros((y.shape[0],), jnp.float32)
+        for lo in range(0, self.n, self.chunk):
+            out = out + _rowsum(self.kernel.pairwise, y, self.x[lo:lo + self.chunk])
+        return out
+
+
+class RSKDE(KDEBase):
+    """Random-sampling estimator (p = 1): n/|R| * sum_{x in R} k(x, y).
+
+    ``num_samples = O(1/(tau * eps^2))`` per Section 3.1.
+    """
+
+    def __init__(self, x, kernel: Kernel, num_samples: int, seed: int = 0):
+        super().__init__(x, kernel)
+        self.num_samples = min(int(num_samples), self.n)
+        self._rng = np.random.default_rng(seed)
+
+    def query(self, y: jnp.ndarray) -> jnp.ndarray:
+        y = jnp.asarray(y, jnp.float32)
+        idx = self._rng.integers(0, self.n, size=self.num_samples)
+        self.evals += y.shape[0] * self.num_samples
+        sub = self.x[jnp.asarray(idx)]
+        return _rowsum(self.kernel.pairwise, y, sub) * (self.n / self.num_samples)
+
+
+class StratifiedKDE(KDEBase):
+    """Blocked stratified sampling: per-block uniform subsamples.
+
+    Unbiased: each block contributes |block| * mean(sampled kernel values).
+    Variance is the within-block variance only -- strictly <= RS variance at
+    equal sample count (law of total variance).  This is the TPU-native
+    estimator: each block is a contiguous VMEM tile and the subsample is a
+    strided load.
+    """
+
+    def __init__(self, x, kernel: Kernel, block_size: int = 256,
+                 samples_per_block: int = 16, seed: int = 0):
+        super().__init__(x, kernel)
+        self.block_size = int(block_size)
+        self.num_blocks = (self.n + self.block_size - 1) // self.block_size
+        self.samples_per_block = min(int(samples_per_block), self.block_size)
+        self._rng = np.random.default_rng(seed)
+
+    def _block_bounds(self, b: int):
+        lo = b * self.block_size
+        return lo, min(lo + self.block_size, self.n)
+
+    def block_sums(self, y: jnp.ndarray) -> jnp.ndarray:
+        """(m, B) estimated per-block kernel sums -- the level-1 'tree' read."""
+        y = jnp.asarray(y, jnp.float32)
+        m = y.shape[0]
+        cols = []
+        sizes = []
+        for b in range(self.num_blocks):
+            lo, hi = self._block_bounds(b)
+            size = hi - lo
+            s = min(self.samples_per_block, size)
+            idx = lo + self._rng.choice(size, size=s, replace=False)
+            cols.append(np.pad(idx, (0, self.samples_per_block - s),
+                               constant_values=idx[0] if s else lo))
+            sizes.append(size * (1.0 / max(s, 1)))
+        idx = jnp.asarray(np.stack(cols))                 # (B, s)
+        scale = jnp.asarray(np.array(sizes), jnp.float32)  # (B,)
+        self.evals += m * idx.size
+        sub = self.x[idx.reshape(-1)]                      # (B*s, d)
+        kv = self.kernel.pairwise(y, sub)                  # (m, B*s)
+        kv = kv.reshape(m, self.num_blocks, self.samples_per_block)
+        return jnp.sum(kv, axis=-1) * scale[None, :]
+
+    def query(self, y: jnp.ndarray) -> jnp.ndarray:
+        return jnp.sum(self.block_sums(y), axis=-1)
+
+
+class ExactBlockKDE(StratifiedKDE):
+    """Exact per-block sums (one dense sweep); deterministic ``block_sums``.
+
+    Used where the sparsifier needs *reproducible* sampling probabilities
+    (Algorithm 5.1 computes the probability q_uv with which the sampler picks
+    an edge; a deterministic level-1 read makes q exactly recomputable).
+    """
+
+    def __init__(self, x, kernel: Kernel, block_size: int = 256):
+        super().__init__(x, kernel, block_size=block_size,
+                         samples_per_block=block_size)
+
+    def block_sums(self, y: jnp.ndarray) -> jnp.ndarray:
+        y = jnp.asarray(y, jnp.float32)
+        m = y.shape[0]
+        self.evals += m * self.n
+        pad = self.num_blocks * self.block_size - self.n
+        xp = jnp.pad(self.x, ((0, pad), (0, 0)))
+        kv = self.kernel.pairwise(y, xp)                   # (m, B*bs)
+        if pad:
+            mask = jnp.arange(xp.shape[0]) < self.n
+            kv = kv * mask[None, :]
+        kv = kv.reshape(m, self.num_blocks, self.block_size)
+        return jnp.sum(kv, axis=-1)
+
+
+def make_estimator(name: str, x, kernel: Kernel, seed: int = 0,
+                   tau: float = 0.05, eps: float = 0.5, **kw) -> KDEBase:
+    """Factory.  ``rs``/``stratified`` budgets default to O(1/(tau eps^2))."""
+    if name == "exact":
+        return ExactKDE(x, kernel, **kw)
+    if name == "rs":
+        ns = kw.pop("num_samples", int(np.ceil(1.0 / (tau * eps * eps))))
+        return RSKDE(x, kernel, num_samples=ns, seed=seed, **kw)
+    if name == "stratified":
+        return StratifiedKDE(x, kernel, seed=seed, **kw)
+    if name == "exact_block":
+        return ExactBlockKDE(x, kernel, **kw)
+    if name == "grid_hbe":
+        from repro.core.kde.hbe import GridHBE
+        return GridHBE(x, kernel, seed=seed, **kw)
+    raise ValueError(f"unknown estimator {name!r}")

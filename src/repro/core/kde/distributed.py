@@ -1,0 +1,101 @@
+"""Distributed KDE queries -- the multi-pod substrate for every reduction.
+
+The dataset X is sharded over the ("pod", "data") mesh axes (each device
+holds n/shards points); a KDE query computes local partial kernel row sums
+and one psum.  Degree vectors, squared-row-norm distributions (Section 5.2),
+and level-1 block sums all reduce to this primitive, so every paper
+algorithm distributes the same way: sampling decisions happen on the host
+against the psum'd totals while the O(n d) sweeps stay sharded.
+
+Built with shard_map so the collective schedule is explicit (one
+psum per query batch; no resharding of X ever).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.kernels_fn import Kernel
+
+
+def sharded_kde_query(mesh: Mesh, kernel: Kernel,
+                      data_axes: Sequence[str] = ("data",)):
+    """Returns a jitted f(y: (m, d), x: (n, d)) -> (m,) with x sharded along
+    ``data_axes`` and y replicated."""
+    axes = tuple(data_axes)
+
+    def local(y, x_shard):
+        part = jnp.sum(kernel.pairwise(y, x_shard), axis=1)
+        return jax.lax.psum(part, axes)
+
+    shmap = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(), P(axes)),
+        out_specs=P(),
+    )
+    return jax.jit(shmap)
+
+
+def sharded_block_sums(mesh: Mesh, kernel: Kernel, num_blocks_per_shard: int,
+                       data_axes: Sequence[str] = ("data",)):
+    """Level-1 read of the depth-2 sampler, distributed: each shard returns
+    its local per-block sums; the global block-sum matrix is the concat over
+    shards (no collective needed -- sampling uses the psum of totals only).
+
+    f(y: (m, d), x: (n, d)) -> (m, shards * B) block sums, fully addressable.
+    """
+    axes = tuple(data_axes)
+
+    def local(y, x_shard):
+        ns = x_shard.shape[0]
+        bs = ns // num_blocks_per_shard
+        kv = kernel.pairwise(y, x_shard)              # (m, ns)
+        kv = kv.reshape(y.shape[0], num_blocks_per_shard, bs).sum(-1)
+        return kv
+
+    shmap = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(), P(axes)),
+        out_specs=P(None, axes),
+    )
+    return jax.jit(shmap)
+
+
+def degree_preprocessing(mesh: Mesh, kernel: Kernel,
+                         data_axes: Sequence[str] = ("data",)):
+    """Algorithm 4.3 distributed: every shard queries its own points against
+    the full (sharded) dataset via a ring of collective permutes -- O(n^2/P)
+    work per device, the optimal balance; returns the degree vector sharded
+    the same way as X."""
+    axes = tuple(data_axes)
+
+    def local(x_shard):
+        # Ring all-to-all accumulation: rotate shards around the ring, each
+        # step adds the kernel sums against one remote shard.
+        def step(carry, _):
+            acc, blk = carry
+            acc = acc + jnp.sum(kernel.pairwise(x_shard, blk), axis=1)
+            blk = jax.lax.ppermute(
+                blk, axes[0] if len(axes) == 1 else axes,
+                perm=[(i, (i + 1) % jax.lax.axis_size(axes[0]))
+                      for i in range(jax.lax.axis_size(axes[0]))])
+            return (acc, blk), None
+
+        size = jax.lax.axis_size(axes[0])
+        # derive from x_shard so the carry is 'varying' over the mesh axes
+        acc0 = jnp.sum(x_shard, axis=1) * 0.0
+        (acc, _), _ = jax.lax.scan(step, (acc0, x_shard), None, length=size)
+        return acc - 1.0  # remove self kernel
+
+    shmap = jax.shard_map(local, mesh=mesh, in_specs=(P(axes),),
+                          out_specs=P(axes))
+    return jax.jit(shmap)
+
+
+def make_sharded_dataset(mesh: Mesh, x, data_axes: Sequence[str] = ("data",)):
+    sharding = NamedSharding(mesh, P(tuple(data_axes)))
+    return jax.device_put(x, sharding)

@@ -1,0 +1,67 @@
+"""Multi-level KDE (Algorithm 4.1) -- estimators over a dyadic partition tree.
+
+Faithful construction: one KDE structure on X, then recursively on each half.
+Lemma 4.2: if a single structure costs f(n) linear in n, the tree costs
+f(n log n).  The tree is consumed by the faithful (``mode="tree"``) neighbor
+sampler, which descends it with two child-segment queries per level
+(Algorithm 4.11).
+
+The TPU-adapted depth-2 variant lives in ``base.StratifiedKDE/ExactBlockKDE``
+(per-block sums in one dense sweep); see DESIGN.md §2.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.kde.base import KDEBase
+from repro.core.kernels_fn import Kernel
+
+
+class MultiLevelKDE:
+    """KDE structures over dyadic segments [lo, hi) of X.
+
+    ``factory(x_segment, seed)`` builds a Definition-1.1 estimator for one
+    segment.  Level l has 2^l segments; depth stops when segments reach
+    ``leaf_size`` (leaves are evaluated exactly -- a leaf *is* its points).
+    """
+
+    def __init__(self, x: jnp.ndarray, kernel: Kernel,
+                 factory: Callable[[jnp.ndarray, int], KDEBase],
+                 leaf_size: int = 32, seed: int = 0):
+        self.x = jnp.asarray(x, jnp.float32)
+        self.kernel = kernel
+        self.n = int(x.shape[0])
+        self.leaf_size = leaf_size
+        self._nodes: Dict[Tuple[int, int], KDEBase] = {}
+        self.depth = 0
+        # Build breadth-first over dyadic segments.
+        frontier: List[Tuple[int, int]] = [(0, self.n)]
+        level = 0
+        while frontier:
+            nxt: List[Tuple[int, int]] = []
+            for (lo, hi) in frontier:
+                self._nodes[(lo, hi)] = factory(self.x[lo:hi],
+                                                seed + 977 * lo + hi)
+                if hi - lo > leaf_size:
+                    mid = lo + (hi - lo) // 2
+                    nxt.extend([(lo, mid), (mid, hi)])
+            frontier = nxt
+            level += 1
+        self.depth = level
+
+    @property
+    def evals(self) -> int:
+        return sum(node.evals for node in self._nodes.values())
+
+    def segment_query(self, y: jnp.ndarray, lo: int, hi: int) -> jnp.ndarray:
+        """Estimate sum_{j in [lo, hi)} k(y_i, x_j) via the node estimator."""
+        return self._nodes[(lo, hi)].query(y)
+
+    def children(self, lo: int, hi: int):
+        mid = lo + (hi - lo) // 2
+        return (lo, mid), (mid, hi)
+
+    def is_leaf(self, lo: int, hi: int) -> bool:
+        return hi - lo <= self.leaf_size

@@ -1,0 +1,250 @@
+"""Weighted neighbor / edge sampling -- Algorithms 4.11 and 4.13.
+
+Given a vertex u, sample a neighbor v with Pr[v] ~= k(u, v) / deg(u)
+(Definition 4.10) using segment KDE estimates only.
+
+Two interchangeable factorizations of the same telescoping product
+(Theorem 4.12):
+
+* ``mode="tree"``   -- the paper's dyadic descent: at every internal node,
+  query the two child-segment KDE structures and branch proportionally;
+  O(log n) KDE queries per sample, error (1 +- eps')^depth.
+* ``mode="blocked"``-- TPU-adapted depth-2 tree (DESIGN.md §2): one dense
+  Pallas/jnp sweep yields *all* sqrt(n)-block sums at once (level-1 read),
+  then the chosen block's <= sqrt(n) kernel values are computed exactly and
+  sampled exactly (level-2).  Same sampling law; one level of estimation
+  error instead of log n.
+
+Both modes vectorize over a batch of source vertices (random-walk frontier).
+``sample`` returns the *realized* sampling probability of each drawn
+neighbor, and ``prob_of`` evaluates the probability the sampler would assign
+to an arbitrary (u, v) -- both are required by the sparsifier (Alg 5.1 steps
+(c)-(d)).
+
+Theorem 4.12's exactness step (O(1/tau) rejection rounds) is implemented in
+``sample_exact`` as fixed-round vectorized accept/reject.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kde.base import ExactBlockKDE, StratifiedKDE
+from repro.core.kde.multilevel import MultiLevelKDE
+from repro.core.kernels_fn import Kernel
+
+
+class NeighborSampler:
+    def __init__(self, x: jnp.ndarray, kernel: Kernel, mode: str = "blocked",
+                 block_size: Optional[int] = None, samples_per_block: int = 16,
+                 exact_blocks: bool = False, tree: Optional[MultiLevelKDE] = None,
+                 seed: int = 0):
+        self.x = jnp.asarray(x, jnp.float32)
+        self.kernel = kernel
+        self.n = int(x.shape[0])
+        self.mode = mode
+        self._rng = np.random.default_rng(seed)
+        if mode == "blocked":
+            bs = block_size or max(int(np.sqrt(self.n)), 16)
+            if exact_blocks:
+                self._blocks = ExactBlockKDE(x, kernel, block_size=bs)
+            else:
+                self._blocks = StratifiedKDE(x, kernel, block_size=bs,
+                                             samples_per_block=samples_per_block,
+                                             seed=seed)
+            self.block_size = self._blocks.block_size
+            self.num_blocks = self._blocks.num_blocks
+        elif mode == "tree":
+            assert tree is not None, "tree mode needs a MultiLevelKDE"
+            self._tree = tree
+        else:
+            raise ValueError(mode)
+
+    # ------------------------------------------------------------------ #
+    @property
+    def evals(self) -> int:
+        if self.mode == "blocked":
+            return self._blocks.evals + getattr(self, "_extra_evals", 0)
+        return self._tree.evals + getattr(self, "_extra_evals", 0)
+
+    def _count(self, k: int):
+        self._extra_evals = getattr(self, "_extra_evals", 0) + k
+
+    # ------------------------------------------------------------------ #
+    # blocked mode
+    def _masked_block_sums(self, src: np.ndarray) -> np.ndarray:
+        """Level-1: (w, B) block-sum estimates with the self-kernel removed
+        from each source's own block (Alg 4.11 lines (c)/(d))."""
+        q = self.x[jnp.asarray(src)]
+        bs = np.array(self._blocks.block_sums(q))            # (w, B) copy
+        own = src // self.block_size
+        bs[np.arange(len(src)), own] = np.maximum(
+            bs[np.arange(len(src)), own] - 1.0, 1e-12)       # k(x,x) = 1
+        return np.maximum(bs, 1e-12)
+
+    def _in_block_row(self, src: np.ndarray, blk: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Level-2: exact kernel row of each src against its chosen block."""
+        w = len(src)
+        lo = blk * self.block_size
+        cols = lo[:, None] + np.arange(self.block_size)[None, :]
+        valid = cols < self.n
+        cols_c = np.minimum(cols, self.n - 1)
+        xs = self.x[jnp.asarray(src)]                        # (w, d)
+        xb = self.x[jnp.asarray(cols_c.reshape(-1))].reshape(w, self.block_size, -1)
+        kv = np.asarray(_pairwise_rows(self.kernel, xs, xb))
+        self._count(w * self.block_size)
+        kv = kv * valid
+        kv[cols_c == src[:, None]] = 0.0                     # mask self edge
+        return kv, cols_c
+
+    def sample(self, src: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Sample one neighbor per source.  Returns (neighbors, probs)."""
+        src = np.asarray(src)
+        if self.mode == "tree":
+            return self._sample_tree(src)
+        bs = self._masked_block_sums(src)                    # (w, B)
+        pb = bs / bs.sum(axis=1, keepdims=True)
+        blk = _categorical_rows(pb, self._rng)
+        kv, cols = self._in_block_row(src, blk)
+        rowsum = kv.sum(axis=1)
+        pin = kv / np.maximum(rowsum, 1e-30)[:, None]
+        j = _categorical_rows(pin, self._rng)
+        nb = cols[np.arange(len(src)), j]
+        prob = pb[np.arange(len(src)), blk] * pin[np.arange(len(src)), j]
+        return nb, prob
+
+    def prob_of(self, src: np.ndarray, dst: np.ndarray) -> np.ndarray:
+        """Probability the sampler assigns to edge (src -> dst)."""
+        src, dst = np.asarray(src), np.asarray(dst)
+        if self.mode == "tree":
+            return self._prob_of_tree(src, dst)
+        bs = self._masked_block_sums(src)
+        pb = bs / bs.sum(axis=1, keepdims=True)
+        blk = dst // self.block_size
+        kv, cols = self._in_block_row(src, blk)
+        rowsum = np.maximum(kv.sum(axis=1), 1e-30)
+        kd = kv[np.arange(len(src)), dst - blk * self.block_size]
+        return pb[np.arange(len(src)), blk] * kd / rowsum
+
+    # ------------------------------------------------------------------ #
+    # tree mode (faithful Algorithm 4.11)
+    def _sample_tree(self, src: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        out = np.zeros(len(src), np.int64)
+        probs = np.ones(len(src), np.float64)
+        for i, s in enumerate(src):
+            lo, hi = 0, self._tree.n
+            p = 1.0
+            q = self.x[int(s)][None, :]
+            while not self._tree.is_leaf(lo, hi):
+                (l0, l1), (r0, r1) = self._tree.children(lo, hi)
+                a = float(self._tree.segment_query(q, l0, l1)[0])
+                b = float(self._tree.segment_query(q, r0, r1)[0])
+                if l0 <= s < l1:
+                    a = max(a - 1.0, 1e-12)
+                if r0 <= s < r1:
+                    b = max(b - 1.0, 1e-12)
+                pa = a / max(a + b, 1e-30)
+                if self._rng.uniform() <= pa:
+                    lo, hi, p = l0, l1, p * pa
+                else:
+                    lo, hi, p = r0, r1, p * (1.0 - pa)
+            kv = np.array(self.kernel.pairwise(q, self.x[lo:hi]))[0]
+            self._count(hi - lo)
+            idx = np.arange(lo, hi)
+            kv[idx == s] = 0.0
+            pin = kv / max(kv.sum(), 1e-30)
+            j = self._rng.choice(len(pin), p=pin / pin.sum())
+            out[i] = lo + j
+            probs[i] = p * pin[j]
+        return out, probs
+
+    def _prob_of_tree(self, src: np.ndarray, dst: np.ndarray) -> np.ndarray:
+        out = np.zeros(len(src), np.float64)
+        for i, (s, t) in enumerate(zip(src, dst)):
+            lo, hi = 0, self._tree.n
+            p = 1.0
+            q = self.x[int(s)][None, :]
+            while not self._tree.is_leaf(lo, hi):
+                (l0, l1), (r0, r1) = self._tree.children(lo, hi)
+                a = float(self._tree.segment_query(q, l0, l1)[0])
+                b = float(self._tree.segment_query(q, r0, r1)[0])
+                if l0 <= s < l1:
+                    a = max(a - 1.0, 1e-12)
+                if r0 <= s < r1:
+                    b = max(b - 1.0, 1e-12)
+                pa = a / max(a + b, 1e-30)
+                if l0 <= t < l1:
+                    lo, hi, p = l0, l1, p * pa
+                else:
+                    lo, hi, p = r0, r1, p * (1.0 - pa)
+            kv = np.array(self.kernel.pairwise(q, self.x[lo:hi]))[0]
+            self._count(hi - lo)
+            idx = np.arange(lo, hi)
+            kv[idx == s] = 0.0
+            out[i] = p * kv[t - lo] / max(kv.sum(), 1e-30)
+        return out
+
+    # ------------------------------------------------------------------ #
+    def sample_exact(self, src: np.ndarray, rounds: int = 8,
+                     slack: float = 2.0) -> np.ndarray:
+        """Theorem 4.12 exactness: rejection-sample against exact weights.
+
+        Proposal = this sampler; target ~ k(u, v).  Accept v with probability
+        k(u,v) / (c * q(v) * Z_hat) where Z_hat estimates deg(u) and c covers
+        the estimator distortion.  Vectorized fixed-round accept/reject; falls
+        back to the last proposal if all rounds reject (prob (1-1/c)^rounds).
+        """
+        src = np.asarray(src)
+        cur, _ = self.sample(src)
+        if self.mode == "blocked":
+            zs = self._masked_block_sums(src).sum(axis=1)
+        else:
+            zs = np.maximum(np.asarray(
+                self._tree.segment_query(self.x[jnp.asarray(src)], 0, self._tree.n)) - 1.0, 1e-12)
+        accepted = np.zeros(len(src), bool)
+        for _ in range(rounds):
+            cand, q = self.sample(src)
+            kuv = np.asarray(self.kernel.pairwise(
+                self.x[jnp.asarray(src)], self.x[jnp.asarray(cand)]))
+            kuv = np.diagonal(kuv)
+            self._count(len(src))
+            ratio = kuv / np.maximum(slack * q * zs, 1e-30)
+            acc = (~accepted) & (self._rng.uniform(size=len(src)) < np.minimum(ratio, 1.0))
+            cur = np.where(acc, cand, cur)
+            accepted |= acc
+        return cur
+
+
+class EdgeSampler:
+    """Algorithm 4.13: vertex by degree, then neighbor by weight."""
+
+    def __init__(self, degree_sampler, neighbor_sampler: NeighborSampler):
+        self.deg = degree_sampler
+        self.nbr = neighbor_sampler
+
+    def sample(self, size: int) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Returns (u, v, p) with p the realized directional probability
+        p_hat(u) * q_hat(v | u)."""
+        u = self.deg.sample(size)
+        v, q = self.nbr.sample(u)
+        return u, v, self.deg.prob(u) * q
+
+
+def _pairwise_rows(kernel: Kernel, xs: jnp.ndarray, xb: jnp.ndarray) -> jnp.ndarray:
+    """k(xs_i, xb_i_j) for batched per-row blocks: xs (w, d), xb (w, bs, d)."""
+    import jax
+
+    def one(a, b):
+        return kernel.pairwise(a[None, :], b)[0]
+
+    return jax.vmap(one)(xs, xb)
+
+
+def _categorical_rows(p: np.ndarray, rng) -> np.ndarray:
+    """Sample one index per row of a row-stochastic matrix."""
+    c = np.cumsum(p, axis=1)
+    c = c / c[:, -1:]
+    u = rng.uniform(size=(p.shape[0], 1))
+    return (u > c).sum(axis=1).clip(0, p.shape[1] - 1)

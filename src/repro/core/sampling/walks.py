@@ -1,0 +1,38 @@
+"""Random walks on the kernel graph -- Algorithm 4.16 / Theorem 4.15.
+
+T steps = T neighbor-sampling calls; total variation error O(T * eps), or the
+true walk distribution with the rejection-sampling exactness step.  Walks are
+vectorized over the frontier (every step advances all walkers with one
+level-1 sweep + one level-2 gather).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.sampling.edge import NeighborSampler
+
+
+def random_walks(sampler: NeighborSampler, starts: np.ndarray, length: int,
+                 exact: bool = False, record_path: bool = False):
+    """Run |starts| walks of ``length`` steps.  Returns endpoints (and the
+    full (length+1, w) path if requested)."""
+    cur = np.asarray(starts).copy()
+    path = [cur.copy()] if record_path else None
+    for _ in range(length):
+        if exact:
+            cur = sampler.sample_exact(cur)
+        else:
+            cur, _ = sampler.sample(cur)
+        if record_path:
+            path.append(cur.copy())
+    if record_path:
+        return cur, np.stack(path)
+    return cur
+
+
+def endpoint_counts(sampler: NeighborSampler, start: int, length: int,
+                    num_walks: int, n: int, exact: bool = False) -> np.ndarray:
+    """Empirical endpoint distribution p_u^t from ``num_walks`` walks."""
+    ends = random_walks(sampler, np.full(num_walks, start, np.int64), length,
+                        exact=exact)
+    return np.bincount(ends, minlength=n).astype(np.float64)

@@ -1,0 +1,165 @@
+"""Sharding rules: FSDP('data') x TP/EP('model') x DP('pod').
+
+Every parameter gets a (tp_dim, fsdp_dim) preference by name; dimensions are
+sharded only when divisible by the mesh axis (fallback: replicate that dim --
+e.g. granite's vocab 49155 is not divisible by 16, so the embed falls back to
+sharding d_model; yi's 4 KV heads < 16 leave KV projections TP-replicated).
+
+Stacked (scanned) layer parameters carry a leading L axis that is never
+sharded.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+# name -> (tp_dim, fsdp_dim) in the *unstacked* parameter's dims;
+# None entries mean "replicate".
+_RULES: Dict[str, Tuple[Optional[int], Optional[int]]] = {
+    "wq": (1, 0), "wk": (1, 0), "wv": (1, 0), "wo": (0, 1),
+    "bq": (0, None), "bk": (0, None), "bv": (0, None),
+    "w1": (None, None),  # resolved per-arity below (dense vs moe)
+    "w2": (None, None),
+    "w3": (None, None),
+    "router": (1, 0),
+    "wr": (1, 0), "wg": (1, 0), "ww": (1, 0),
+    "w0": (0, None), "u": (0, None),
+    "in_proj": (1, 0), "bc_proj": (1, 0), "dt_proj": (1, 0),
+    "out_proj": (0, 1),
+    # embed/head: TP only (no FSDP) -- keeps the logits matmul collective-free
+    # (x(b['data'],s,D) @ head(D, V['model']) is fully local) and the embed
+    # lookup a cheap local gather + 'model' psum.
+    "embed": (0, None), "lm_head": (1, None),
+    "mu": (None, 1),
+}
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.shape else 1
+
+
+def _maybe(dim_size: int, size: int) -> bool:
+    return size > 1 and dim_size % size == 0 and dim_size >= size
+
+
+def param_spec(path, leaf, mesh: Mesh) -> P:
+    names = [getattr(p, "key", getattr(p, "name", None)) for p in path]
+    name = names[-1] if names else None
+    stacked = "layers" in names
+    nd = leaf.ndim - (1 if stacked else 0)
+    dsize = _axis_size(mesh, "data")
+    msize = _axis_size(mesh, "model")
+
+    if nd <= 0 or name is None:
+        return P()
+
+    if name in ("w1", "w2", "w3"):
+        if nd == 3:        # MoE (E, D, F)/(E, F, D): EP on experts
+            tp, fsdp = 0, 1
+        elif name == "w2":  # dense (F, D)
+            tp, fsdp = 0, 1
+        else:               # dense (D, F)
+            tp, fsdp = 1, 0
+    elif name in _RULES:
+        tp, fsdp = _RULES[name]
+    else:
+        return P()  # norms, scalars, biases -> replicated
+
+    spec = [None] * leaf.ndim
+    off = 1 if stacked else 0
+    if tp is not None and tp < nd and _maybe(leaf.shape[off + tp], msize):
+        spec[off + tp] = "model"
+    else:
+        tp = None
+    if fsdp is not None and fsdp < nd and (off + fsdp) != (off + tp if tp is not None else -1) \
+            and _maybe(leaf.shape[off + fsdp], dsize):
+        spec[off + fsdp] = "data"
+    # embed fallback: vocab not divisible -> TP the d_model dim instead
+    if name == "embed" and spec[0] is None and _maybe(leaf.shape[1], msize) \
+            and spec[1] != "data":
+        spec[1] = "model"
+    return P(*spec)
+
+
+def param_shardings(params, mesh: Mesh):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, param_spec(path, leaf, mesh)),
+        params)
+
+
+def param_specs_tree(params, mesh: Mesh):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_spec(path, leaf, mesh), params)
+
+
+# ------------------------------------------------------------------ data
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def batch_spec(mesh: Mesh, ndim: int, batch_size: Optional[int] = None) -> P:
+    axes = batch_axes(mesh)
+    if batch_size is not None:
+        nshards = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+        if batch_size % max(nshards, 1) != 0:
+            return P(*([None] * ndim))
+    return P(axes, *([None] * (ndim - 1)))
+
+
+def data_shardings(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh, specs):
+    out = {}
+    for k, v in specs.items():
+        out[k] = NamedSharding(mesh, batch_spec(mesh, v.ndim))
+    return out
+
+
+def cache_spec(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+               leaf_name: str, leaf) -> P:
+    """Decode-cache sharding.
+
+    batch >= data shards -> shard batch (and kv-heads over 'model' when
+    divisible); batch == 1 (long-context) -> shard the *sequence* dim over
+    every available axis (flash-decode logsumexp combine is sound under the
+    softmax decomposition; GSPMD inserts the psum).
+    """
+    baxes = batch_axes(mesh)
+    nshards = int(np.prod([mesh.shape[a] for a in baxes]))
+    msize = _axis_size(mesh, "model")
+    spec = [None] * leaf.ndim
+    if leaf_name in ("k", "v"):
+        # (L, B, Hkv, S, hd)
+        if leaf.shape[1] % nshards == 0 and leaf.shape[1] >= nshards:
+            spec[1] = baxes
+            if _maybe(leaf.shape[2], msize):
+                spec[2] = "model"
+            else:
+                spec[3] = "model" if _maybe(leaf.shape[3], msize) else None
+        else:
+            axes = baxes if _maybe(leaf.shape[2], msize) else baxes + ("model",)
+            if _maybe(leaf.shape[2], msize):
+                spec[2] = "model"
+            spec[3] = axes
+    elif leaf_name == "ssm":
+        # (L, B, H, ., .) -- state is small; shard batch if possible
+        if leaf.shape[1] % nshards == 0 and leaf.shape[1] >= nshards:
+            spec[1] = baxes
+        if _maybe(leaf.shape[2], msize):
+            spec[2] = "model"
+    elif leaf_name in ("shift", "memory"):
+        if leaf.shape[-3 if leaf_name == "memory" else 1] % nshards == 0:
+            spec[0 if leaf_name == "memory" else 1] = baxes
+        if leaf_name == "memory":
+            spec = [baxes if leaf.shape[0] % nshards == 0 else None, None, None]
+    return P(*spec)
+
+
+def cache_shardings(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh, cache):
+    def go(path, leaf):
+        name = getattr(path[-1], "key", None) or "k"
+        return NamedSharding(mesh, cache_spec(cfg, shape, mesh, name, leaf))
+    return jax.tree_util.tree_map_with_path(go, cache)

@@ -1,0 +1,105 @@
+"""Pallas TPU kernel: blocked online-softmax attention (flash), causal + GQA.
+
+Used by train/prefill paths and as the exact stage of kde_attention.  Tiling:
+one (batch, q-head, q-block) owns a VMEM accumulator (bq, dh) plus running
+max/sum vectors; key/value tiles (bk, dh) stream along the innermost grid
+dimension.  GQA is expressed in the k/v index_map (q-head -> kv-head via
+integer division), so no head replication ever materializes.
+
+Also emits the log-sum-exp per query row -- kde_attention uses it to combine
+exact top-P mass with the KDE-estimated residual mass (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1.0e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref,
+                 m_scr, l_scr, acc_scr, *, scale, causal, offset, bq, bk,
+                 kv_valid):
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+
+    @pl.when(kj == 0)
+    def _():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)              # (bq, dh)
+    k = k_ref[0, 0].astype(jnp.float32)              # (bk, dh)
+    v = v_ref[0, 0].astype(jnp.float32)              # (bk, dh)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    kpos = kj * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = kpos < kv_valid
+    if causal:
+        qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + offset
+        mask = mask & (kpos <= qpos)
+    s = jnp.where(mask, s, _NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(kj == pl.num_programs(3) - 1)
+    def _():
+        l = l_scr[...]
+        safe = jnp.maximum(l, 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / safe[:, None]).astype(o_ref.dtype)
+        lse_ref[0, 0] = jnp.where(l > 0, m_scr[...] + jnp.log(safe), _NEG_INF)
+
+
+def flash_attention_pallas(q, k, v, *, causal: bool, scale: float,
+                           kv_valid: int, bq: int = 128, bk: int = 128,
+                           interpret: bool = False):
+    """q (b, hq, sq, dh); k, v (b, hkv, skv, dh); sq % bq == skv % bk == 0.
+
+    Returns (out (b, hq, sq, dh), lse (b, hq, sq))."""
+    b, hq, sq, dh = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    offset = skv - sq  # decode: queries sit at the end of the key timeline
+    body = functools.partial(_attn_kernel, scale=scale, causal=causal,
+                             offset=offset, bq=bq, bk=bk, kv_valid=kv_valid)
+    grid = (b, hq, sq // bq, skv // bk)
+    out, lse = pl.pallas_call(
+        body,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, dh), lambda bi, hi, qi, kj: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, bk, dh),
+                         lambda bi, hi, qi, kj, g=group: (bi, hi // g, kj, 0)),
+            pl.BlockSpec((1, 1, bk, dh),
+                         lambda bi, hi, qi, kj, g=group: (bi, hi // g, kj, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bq, dh), lambda bi, hi, qi, kj: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, bq), lambda bi, hi, qi, kj: (bi, hi, qi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(q.shape, q.dtype),
+            jax.ShapeDtypeStruct((b, hq, sq), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out, lse

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for flash attention (causal, GQA), with lse output."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_NEG_INF = -1.0e30
+
+
+def attention_ref(q, k, v, *, causal: bool, scale: float,
+                  kv_valid: int | None = None):
+    """q (b, hq, sq, dh); k, v (b, hkv, skv, dh) -> (out, lse)."""
+    b, hq, sq, dh = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * scale
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if kv_valid is not None:
+        mask = mask & (kpos < kv_valid)
+    if causal:
+        qpos = jnp.arange(sq)[:, None] + (skv - sq)
+        mask = mask & (kpos <= qpos)
+    s = jnp.where(mask[None, None], s, _NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p / jnp.maximum(l, 1e-30), vv)
+    lse = (m + jnp.log(jnp.maximum(l, 1e-30)))[..., 0]
+    return out.astype(q.dtype), lse

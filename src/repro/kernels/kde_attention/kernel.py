@@ -1,0 +1,60 @@
+"""Pallas TPU kernel: per-block KDE estimates of attention mass (level-1).
+
+The paper's reduction, applied to attention (DESIGN.md §3): the softmax
+denominator sum_j exp(q . k_j) is a KDE query against the keys under the
+exponential-dot kernel, and each key block's mass is a segment estimate.
+This kernel computes, for every key block, a *strided stratified subsample*
+logsumexp estimate:
+
+    est_lse[block] = log( stride * sum_{j in block, j % stride == 0}
+                          exp(q . k_j * scale) )
+
+-- an unbiased (in exp space) estimate of the block's true mass using
+bk/stride of its keys, i.e. the StratifiedKDE estimator fused into one VMEM
+pass.  ops.py then attends exactly over the top-P blocks and folds the
+estimated residual mass into the denominator.
+
+One query per (batch, q-head) -- this is a decode-step kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _block_lse_kernel(q_ref, k_ref, o_ref, *, scale, stride, kv_valid, bk):
+    j = pl.program_id(2)
+    q = q_ref[0, 0].astype(jnp.float32)                 # (dh,)
+    ks = k_ref[0, 0, ::stride, :].astype(jnp.float32)   # (bk/stride, dh)
+    s = jnp.sum(ks * q[None, :], axis=1) * scale        # (bk/stride,)
+    kpos = j * bk + jax.lax.iota(jnp.int32, ks.shape[0]) * stride
+    s = jnp.where(kpos < kv_valid, s, -1.0e30)
+    m = jnp.max(s)
+    lse = m + jnp.log(jnp.maximum(jnp.sum(jnp.exp(s - m)), 1e-30))
+    o_ref[0, 0, 0] = lse + jnp.log(float(stride))
+
+
+def block_lse_pallas(q, k, *, scale: float, stride: int, kv_valid: int,
+                     bk: int = 256, interpret: bool = False):
+    """q (b, hq, dh); k (b, hkv, S, dh) -> (b, hq, S/bk) block lse estimates."""
+    b, hq, dh = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    nb = skv // bk
+    body = functools.partial(_block_lse_kernel, scale=scale, stride=stride,
+                             kv_valid=kv_valid, bk=bk)
+    return pl.pallas_call(
+        body,
+        grid=(b, hq, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, dh), lambda bi, hi, j: (bi, hi, 0)),
+            pl.BlockSpec((1, 1, bk, dh),
+                         lambda bi, hi, j, g=group: (bi, hi // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1), lambda bi, hi, j: (bi, hi, j)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, nb), jnp.float32),
+        interpret=interpret,
+    )(q, k)

@@ -1,0 +1,97 @@
+"""Pure-jnp oracles for kde_attention.
+
+``exact_decode_attention`` is the ground truth; ``kde_attention_ref`` mirrors
+the sampled algorithm (deterministic strided subsample -> identical block
+selection), so the Pallas pipeline can be asserted allclose against it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_NEG_INF = -1.0e30
+
+
+def exact_decode_attention(q, k, v, kv_valid: int | None = None):
+    """q (b, hq, dh); k, v (b, hkv, S, dh) -> (b, hq, dh)."""
+    b, hq, dh = q.shape
+    hkv, s = k.shape[1], k.shape[2]
+    group = hq // hkv
+    scale = 1.0 / (dh ** 0.5)
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    sc = jnp.einsum("bhd,bhsd->bhs", q.astype(jnp.float32),
+                    kk.astype(jnp.float32)) * scale
+    if kv_valid is not None:
+        sc = jnp.where(jnp.arange(s)[None, None] < kv_valid, sc, _NEG_INF)
+    p = _softmax(sc)
+    return jnp.einsum("bhs,bhsd->bhd", p, vv).astype(q.dtype)
+
+
+def _softmax(x):
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.maximum(e.sum(-1, keepdims=True), 1e-30)
+
+
+def block_lse_ref(q, k, *, scale, stride, kv_valid, bk):
+    """Mirror of the Pallas level-1 kernel."""
+    b, hq, dh = q.shape
+    hkv, s = k.shape[1], k.shape[2]
+    group = hq // hkv
+    kk = jnp.repeat(k, group, axis=1).astype(jnp.float32)
+    sc = jnp.einsum("bhd,bhsd->bhs", q.astype(jnp.float32), kk) * scale
+    sc = jnp.where(jnp.arange(s)[None, None] < kv_valid, sc, _NEG_INF)
+    nb = s // bk
+    sc = sc.reshape(b, hq, nb, bk)[..., ::stride]      # strided subsample
+    m = jnp.max(sc, axis=-1)
+    lse = m + jnp.log(jnp.maximum(
+        jnp.sum(jnp.exp(sc - m[..., None]), axis=-1), 1e-30))
+    return lse + jnp.log(float(stride))
+
+
+def kde_attention_ref(q, k, v, *, top_p, bk, stride, kv_valid=None):
+    """Pure-jnp mirror of ops.kde_attention (same block selection)."""
+    b, hq, dh = q.shape
+    hkv, s = k.shape[1], k.shape[2]
+    group = hq // hkv
+    scale = 1.0 / (dh ** 0.5)
+    kv_valid = s if kv_valid is None else kv_valid
+    est = block_lse_ref(q, k, scale=scale, stride=stride, kv_valid=kv_valid,
+                        bk=bk)                              # (b, hq, nb)
+    est_kv = _group_lse(est, group)                         # (b, hkv, nb)
+    nb = est.shape[-1]
+    sel = jnp.argsort(-est_kv, axis=-1)[..., :top_p]        # (b, hkv, P)
+
+    # gather blocks and attend exactly
+    elem = (sel[..., None] * bk + jnp.arange(bk)).reshape(b, hkv, -1)
+    kg = jnp.take_along_axis(k, elem[..., None], axis=2)
+    vg = jnp.take_along_axis(v, elem[..., None], axis=2)
+    kpos_valid = elem < kv_valid                            # (b, hkv, P*bk)
+
+    kk = jnp.repeat(kg, group, axis=1).astype(jnp.float32)
+    vv = jnp.repeat(vg, group, axis=1)
+    valid = jnp.repeat(kpos_valid, group, axis=1)
+    sc = jnp.einsum("bhd,bhsd->bhs", q.astype(jnp.float32), kk) * scale
+    sc = jnp.where(valid, sc, _NEG_INF)
+    m = jnp.max(sc, axis=-1, keepdims=True)
+    p = jnp.exp(sc - m)
+    l_sel = p.sum(-1)
+    out = jnp.einsum("bhs,bhsd->bhd", p, vv) / jnp.maximum(l_sel, 1e-30)[..., None]
+
+    # residual mass from the unselected blocks' estimates
+    sel_q = jnp.repeat(sel, group, axis=1)                  # (b, hq, P)
+    mask = jnp.any(jnp.arange(nb)[None, None, :, None] == sel_q[:, :, None, :],
+                   axis=-1)                                 # (b, hq, nb) selected?
+    est_resid = jnp.where(mask, _NEG_INF, est)
+    resid_mass = jnp.exp(est_resid - m[..., 0][..., None]).sum(-1)
+    frac = l_sel / jnp.maximum(l_sel + resid_mass, 1e-30)
+    return (out * frac[..., None]).astype(q.dtype)
+
+
+def _group_lse(est, group):
+    b, hq, nb = est.shape
+    e = est.reshape(b, hq // group, group, nb)
+    m = jnp.max(e, axis=2)
+    return m + jnp.log(jnp.maximum(
+        jnp.sum(jnp.exp(e - m[:, :, None, :]), axis=2), 1e-30))

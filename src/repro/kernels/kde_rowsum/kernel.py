@@ -1,0 +1,111 @@
+"""Pallas TPU kernel: blocked kernel-row-sums (the KDE hot spot).
+
+Computes ``out[i] = sum_j k(q_i, x_j)`` (Definition 1.1 oracle) and the
+per-block variant ``out[i, b] = sum_{j in block b} k(q_i, x_j)`` (the level-1
+read of the depth-2 sampler, DESIGN.md §2).
+
+Tiling: q tiles (bm, d) and x tiles (bn, d) stream HBM->VMEM; for L2 kernels
+(gaussian / exponential / rational quadratic) the pairwise distances use the
+MXU via the ||q||^2 + ||x||^2 - 2 q.x factorization; the L1 (laplacian)
+kernel has no matmul form, so |q - x| is accumulated over d-chunks on the VPU
+with a (bm, bn) accumulator resident in VMEM.
+
+Block sizes default to MXU-aligned 128 lanes; the row accumulator lives in a
+VMEM scratch and is flushed on the last j-step (revisiting output pattern).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_L2_KINDS = ("gaussian", "exponential", "rational_quadratic")
+
+
+def _tile_kernel_values(q, x, kind: str, inv_bw: float, beta: float,
+                        d_chunk: int = 128):
+    """(bm, bn) kernel values for one (q-tile, x-tile) pair."""
+    if kind in _L2_KINDS:
+        qq = jnp.sum(q * q, axis=1, keepdims=True)
+        xx = jnp.sum(x * x, axis=1, keepdims=True).T
+        cross = jax.lax.dot_general(q, x, (((1,), (1,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+        d2 = jnp.maximum(qq + xx - 2.0 * cross, 0.0)
+        if kind == "gaussian":
+            return jnp.exp(-d2 * (inv_bw * inv_bw))
+        if kind == "exponential":
+            return jnp.exp(-jnp.sqrt(d2) * inv_bw)
+        return (1.0 + d2 * (inv_bw * inv_bw)) ** (-beta)
+    # laplacian: accumulate |q - x| over d-chunks (VPU path).
+    d = q.shape[1]
+    steps = (d + d_chunk - 1) // d_chunk
+    acc = jnp.zeros((q.shape[0], x.shape[0]), jnp.float32)
+    for s in range(steps):  # static unroll: d is a compile-time constant
+        lo = s * d_chunk
+        hi = min(lo + d_chunk, d)
+        acc = acc + jnp.sum(
+            jnp.abs(q[:, None, lo:hi] - x[None, :, lo:hi]), axis=-1)
+    return jnp.exp(-acc * inv_bw)
+
+
+def _rowsum_kernel(q_ref, x_ref, o_ref, acc_ref, *, kind, inv_bw, beta):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kv = _tile_kernel_values(q_ref[...], x_ref[...], kind, inv_bw, beta)
+    acc_ref[...] += jnp.sum(kv, axis=1)
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _():
+        o_ref[...] = acc_ref[...]
+
+
+def _blocksum_kernel(q_ref, x_ref, o_ref, *, kind, inv_bw, beta):
+    kv = _tile_kernel_values(q_ref[...], x_ref[...], kind, inv_bw, beta)
+    o_ref[...] = jnp.sum(kv, axis=1, keepdims=True)
+
+
+def rowsum_pallas(q: jnp.ndarray, x: jnp.ndarray, kind: str, inv_bw: float,
+                  beta: float = 1.0, bm: int = 128, bn: int = 512,
+                  interpret: bool = False) -> jnp.ndarray:
+    """q (m, d), x (n, d) -> (m,); m, n must be multiples of bm, bn."""
+    m, d = q.shape
+    n = x.shape[0]
+    body = functools.partial(_rowsum_kernel, kind=kind, inv_bw=inv_bw,
+                             beta=beta)
+    return pl.pallas_call(
+        body,
+        grid=(m // bm, n // bn),
+        in_specs=[pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
+                  pl.BlockSpec((bn, d), lambda i, j: (j, 0))],
+        out_specs=pl.BlockSpec((bm,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm,), jnp.float32)],
+        interpret=interpret,
+    )(q, x)
+
+
+def blocksum_pallas(q: jnp.ndarray, x: jnp.ndarray, kind: str, inv_bw: float,
+                    beta: float = 1.0, bm: int = 128, bn: int = 256,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q (m, d), x (n, d) -> (m, n/bn) per-block sums (level-1 read)."""
+    m, d = q.shape
+    n = x.shape[0]
+    nb = n // bn
+    body = functools.partial(_blocksum_kernel, kind=kind, inv_bw=inv_bw,
+                             beta=beta)
+    return pl.pallas_call(
+        body,
+        grid=(m // bm, nb),
+        in_specs=[pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
+                  pl.BlockSpec((bn, d), lambda i, j: (j, 0))],
+        out_specs=pl.BlockSpec((bm, 1), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, nb), jnp.float32),
+        interpret=interpret,
+    )(q, x)

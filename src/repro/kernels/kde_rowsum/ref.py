@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the kde_rowsum kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def kernel_values(q, x, kind: str, inv_bw: float, beta: float = 1.0):
+    if kind == "laplacian":
+        d1 = jnp.sum(jnp.abs(q[:, None, :] - x[None, :, :]), axis=-1)
+        return jnp.exp(-d1 * inv_bw)
+    qq = jnp.sum(q * q, axis=1, keepdims=True)
+    xx = jnp.sum(x * x, axis=1, keepdims=True).T
+    d2 = jnp.maximum(qq + xx - 2.0 * (q @ x.T), 0.0)
+    if kind == "gaussian":
+        return jnp.exp(-d2 * (inv_bw * inv_bw))
+    if kind == "exponential":
+        return jnp.exp(-jnp.sqrt(d2) * inv_bw)
+    if kind == "rational_quadratic":
+        return (1.0 + d2 * (inv_bw * inv_bw)) ** (-beta)
+    raise ValueError(kind)
+
+
+def rowsum_ref(q, x, kind: str, inv_bw: float, beta: float = 1.0):
+    return jnp.sum(kernel_values(q, x, kind, inv_bw, beta), axis=1)
+
+
+def blocksum_ref(q, x, kind: str, inv_bw: float, beta: float = 1.0,
+                 bn: int = 256):
+    kv = kernel_values(q, x, kind, inv_bw, beta)
+    m, n = kv.shape
+    return kv.reshape(m, n // bn, bn).sum(-1)

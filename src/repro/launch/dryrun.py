@@ -1,0 +1,233 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: 512 host
+devices stand in for 2 pods x 256 chips; ``.lower().compile()`` must succeed
+and the compiled artifact yields memory_analysis / cost_analysis / the
+collective schedule for EXPERIMENTS.md.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi_6b --shape train_4k --multi-pod
+  python -m repro.launch.dryrun --all --out results/dryrun.json
+"""
+# The first two executable lines, BEFORE any jax-importing import: jax locks
+# the device count on first initialization.
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+from typing import Any, Dict, Optional  # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs.base import ARCH_IDS, SHAPES, ArchConfig, ShapeConfig, get_config  # noqa: E402
+from repro.data.pipeline import input_specs, token_split  # noqa: E402
+from repro.distributed import sharding as shard  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import transformer as T  # noqa: E402
+from repro.roofline.analysis import collective_bytes, roofline_terms  # noqa: E402
+from repro.roofline.flops import cell_cost  # noqa: E402
+from repro.train import optimizer as opt  # noqa: E402
+from repro.train.train_step import make_decode_step, make_prefill_step, make_train_step  # noqa: E402
+
+KDE_DECODE_CFG = {"top_p": 16, "bk": 512, "stride": 16}
+
+
+def _uses_kde_decode(cfg: ArchConfig, shape: ShapeConfig) -> bool:
+    """long_500k exact attention would be quadratic-in-context; attention
+    archs run it with the paper's KDE attention (DESIGN.md §3/§8)."""
+    return (shape.name == "long_500k" and not cfg.attention_free
+            and shape.kind == "decode")
+
+
+def _params_struct(cfg: ArchConfig):
+    def build():
+        p = T.init_params(jax.random.PRNGKey(0), cfg)
+        return T.cast_params(p, jnp.bfloat16)
+    return jax.eval_shape(build)
+
+
+def _named(tree_specs, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               donate: bool = True, microbatch: int = 4,
+               seq_mode_prefill: bool = False) -> Dict[str, Any]:
+    from repro.models.layers import activation_sharding
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    kde = _uses_kde_decode(cfg, shape)
+    record: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
+        "kde_decode": kde,
+    }
+    t0 = time.time()
+
+    params_s = _params_struct(cfg)
+    p_shard = shard.param_shardings(params_s, mesh)
+    specs = input_specs(cfg, shape)
+    batch_shard = {k: NamedSharding(mesh, shard.batch_spec(mesh, v.ndim,
+                                                           v.shape[0]))
+                   for k, v in specs.items()}
+
+    use_seq_mode = seq_mode_prefill and shape.kind == "prefill"
+    record["seq_mode"] = use_seq_mode
+    act_ctx = activation_sharding(mesh, shard.batch_axes(mesh),
+                                  seq_mode=use_seq_mode)
+    if shape.kind == "train":
+        opt_s = jax.eval_shape(opt.init_adamw, params_s)
+        o_shard = opt.AdamWState(
+            step=NamedSharding(mesh, P()),
+            m=jax.tree.map(lambda s: s, p_shard), v=jax.tree.map(lambda s: s, p_shard))
+        step = make_train_step(cfg, remat=True, microbatch=microbatch)
+        record["microbatch"] = microbatch
+        jf = jax.jit(step, in_shardings=(p_shard, o_shard, batch_shard),
+                     out_shardings=(p_shard, o_shard, None),
+                     donate_argnums=(0, 1) if donate else ())
+        with act_ctx:
+            lowered = jf.lower(params_s, opt_s, specs)
+    elif shape.kind == "prefill":
+        step = make_prefill_step(cfg)
+        jf = jax.jit(step, in_shardings=(p_shard, batch_shard))
+        with act_ctx:
+            lowered = jf.lower(params_s, specs)
+    else:  # decode
+        split = token_split(cfg, shape)
+        enc_len = split["frontend"] if (cfg.is_encdec or cfg.frontend != "none") else 0
+        cache_s = jax.eval_shape(
+            lambda: T.init_cache(cfg, shape.global_batch, shape.seq_len,
+                                 jnp.bfloat16, enc_len=max(enc_len, 1)))
+        c_shard = shard.cache_shardings(cfg, shape, mesh, cache_s)
+        step = make_decode_step(cfg, impl="kde" if kde else "xla",
+                                kde_cfg=KDE_DECODE_CFG if kde else None)
+        tok_s = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+        tok_shard = NamedSharding(mesh, shard.batch_spec(
+            mesh, 2, shape.global_batch))
+        pos_s = jax.ShapeDtypeStruct((), jnp.int32)
+        jf = jax.jit(step,
+                     in_shardings=(p_shard, c_shard, tok_shard,
+                                   NamedSharding(mesh, P())),
+                     out_shardings=(None, None, c_shard),
+                     donate_argnums=(1,) if donate else ())
+        with act_ctx:
+            lowered = jf.lower(params_s, cache_s, tok_s, pos_s)
+
+    record["lower_s"] = round(time.time() - t0, 1)
+    t1 = time.time()
+    compiled = lowered.compile()
+    record["compile_s"] = round(time.time() - t1, 1)
+
+    ma = compiled.memory_analysis()
+    record["memory"] = {
+        "argument_bytes": int(ma.argument_size_in_bytes),
+        "output_bytes": int(ma.output_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes),
+        "alias_bytes": int(ma.alias_size_in_bytes),
+        "peak_estimate_bytes": int(ma.argument_size_in_bytes
+                                   + ma.output_size_in_bytes
+                                   + ma.temp_size_in_bytes
+                                   - ma.alias_size_in_bytes),
+    }
+    ca = compiled.cost_analysis() or {}
+    record["raw_cost"] = {"flops": float(ca.get("flops", 0.0)),
+                          "bytes accessed": float(ca.get("bytes accessed", 0.0))}
+
+    text = compiled.as_text()
+    cs = collective_bytes(text, default_trip=cfg.num_layers)
+    record["collectives"] = {
+        "bytes_by_kind": {k: float(v) for k, v in cs.bytes_by_kind.items()},
+        "count_by_kind": cs.count_by_kind,
+        "total_bytes_per_device": float(cs.total_bytes),
+        "unresolved_trips": cs.unresolved_trips,
+    }
+
+    cost = cell_cost(cfg, shape, kde_decode=kde)
+    rl = roofline_terms(cost.flops, cost.model_flops, cost.hbm_bytes,
+                        cs.total_bytes, chips, record["raw_cost"])
+    record["roofline"] = rl.as_dict()
+    record["ok"] = True
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape) for the chosen mesh")
+    ap.add_argument("--archs", type=str, default="",
+                    help="comma-separated subset for --all")
+    ap.add_argument("--out", type=str, default="")
+    ap.add_argument("--force", action="store_true",
+                    help="re-run cells even if cached ok")
+    ap.add_argument("--seq-mode-prefill", action="store_true",
+                    help="context-parallel prefill (sequence over 'model')")
+    ap.add_argument("--microbatch", type=int, default=4)
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        archs = args.archs.split(",") if args.archs else ARCH_IDS
+        for a in archs:
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    results = []
+    if args.out and os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    done = set() if args.force else {
+        (r["arch"], r["shape"], r["mesh"]) for r in results if r.get("ok")}
+
+    mesh_name = "2x16x16" if args.multi_pod else "16x16"
+    for arch, sh in cells:
+        if (arch, sh, mesh_name) in done:
+            print(f"[skip] {arch} x {sh} x {mesh_name} (cached)")
+            continue
+        print(f"[dryrun] {arch} x {sh} x {mesh_name} ...", flush=True)
+        try:
+            rec = lower_cell(arch, sh, args.multi_pod,
+                             seq_mode_prefill=args.seq_mode_prefill,
+                             microbatch=args.microbatch)
+            rl = rec["roofline"]
+            print(f"  ok: compile={rec['compile_s']}s "
+                  f"mem/dev={rec['memory']['peak_estimate_bytes']/2**30:.2f}GiB "
+                  f"compute={rl['compute_s']*1e3:.2f}ms "
+                  f"memory={rl['memory_s']*1e3:.2f}ms "
+                  f"collective={rl['collective_s']*1e3:.2f}ms "
+                  f"dominant={rl['dominant']}", flush=True)
+        except Exception as e:  # record failures -- they are bugs to fix
+            rec = {"arch": arch, "shape": sh, "mesh": mesh_name, "ok": False,
+                   "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-2000:]}
+            print(f"  FAIL: {rec['error']}", flush=True)
+        results = [r for r in results
+                   if not (r["arch"] == arch and r["shape"] == sh
+                           and r["mesh"] == mesh_name)]
+        results.append(rec)
+        if args.out:
+            os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1)
+    n_ok = sum(1 for r in results if r.get("ok"))
+    print(f"[dryrun] {n_ok}/{len(results)} cells ok")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,247 @@
+"""Attention-free sequence mixers: RWKV6 (Finch) and Mamba2 (SSD).
+
+Both are implemented twice:
+  * ``*_scan``   -- the literal per-timestep recurrence (oracle; also the
+                    decode step, where the recurrence *is* the algorithm);
+  * ``*_chunked``-- the production path: chunkwise-parallel form that turns
+                    the recurrence into MXU matmuls (intra-chunk masked
+                    attention-like products + an inter-chunk state scan),
+                    the standard linear-attention chunking.  Decay ratios are
+                    computed in log space with a per-chunk clamp (-30) --
+                    contributions below e^-30 are numerically zero anyway.
+
+Simplifications vs the exact HF checkpoints (documented in DESIGN.md §9):
+rwkv6 uses full-rank decay projections and a SwiGLU channel mix; mamba2
+omits the depthwise conv1d (decode state = SSM state only).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import _dense_init, rmsnorm, swiglu
+
+_LOG_CLAMP = -30.0
+
+
+# =================================================================== RWKV6
+def init_rwkv6(key, cfg: ArchConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    h, hd = cfg.num_heads, cfg.hd
+    dh = h * hd
+    ks = jax.random.split(key, 8)
+    return {
+        "mu": jnp.full((5, d), 0.5, jnp.float32),       # token-shift lerp r,k,v,g,w
+        "wr": _dense_init(ks[0], (d, dh)),
+        "wk": _dense_init(ks[1], (d, dh)),
+        "wv": _dense_init(ks[2], (d, dh)),
+        "wg": _dense_init(ks[3], (d, dh)),
+        "ww": _dense_init(ks[4], (d, dh), scale=0.01),  # data-dependent decay
+        "w0": jnp.full((dh,), -2.0, jnp.float32),
+        "u": _dense_init(ks[5], (dh,), scale=0.5).reshape(dh),
+        "wo": _dense_init(ks[6], (dh, d)),
+    }
+
+
+def _rwkv6_projections(p, cfg: ArchConfig, x, shift_state):
+    """x (b, s, d); shift_state (b, d) = previous token's x (decode carry).
+
+    Returns r, k, v, g (b, s, h, hd), logw (b, s, h, hd) in (-inf, 0)."""
+    b, s, d = x.shape
+    h, hd = cfg.num_heads, cfg.hd
+    prev = jnp.concatenate([shift_state[:, None, :], x[:, :-1, :]], axis=1)
+    mu = p["mu"].astype(x.dtype)
+
+    def mix(i):
+        return x + mu[i] * (prev - x)
+
+    r = (mix(0) @ p["wr"].astype(x.dtype)).reshape(b, s, h, hd)
+    k = (mix(1) @ p["wk"].astype(x.dtype)).reshape(b, s, h, hd)
+    v = (mix(2) @ p["wv"].astype(x.dtype)).reshape(b, s, h, hd)
+    g = (mix(3) @ p["wg"].astype(x.dtype)).reshape(b, s, h, hd)
+    wraw = (mix(4).astype(jnp.float32) @ p["ww"].astype(jnp.float32)
+            + p["w0"]).reshape(b, s, h, hd)
+    logw = -jnp.exp(wraw)                      # log decay, always < 0
+    return r, k, v, g, logw
+
+
+def rwkv6_scan(p, cfg: ArchConfig, x, state=None, shift_state=None):
+    """Oracle / decode recurrence.  state (b, h, hd, hd); returns
+    (out (b,s,d), state, shift_state)."""
+    b, s, d = x.shape
+    h, hd = cfg.num_heads, cfg.hd
+    if state is None:
+        state = jnp.zeros((b, h, hd, hd), jnp.float32)
+    if shift_state is None:
+        shift_state = jnp.zeros((b, d), x.dtype)
+    r, k, v, g, logw = _rwkv6_projections(p, cfg, x, shift_state)
+    u = p["u"].reshape(h, hd)
+
+    def step(S, inp):
+        rt, kt, vt, lw = inp                  # (b, h, hd) each
+        rt32, kt32, vt32 = (a.astype(jnp.float32) for a in (rt, kt, vt))
+        bonus = (u[None] * kt32)              # (b, h, hd)
+        y = jnp.einsum("bhi,bhij->bhj", rt32, S) \
+            + jnp.einsum("bhi,bhi->bh", rt32, bonus)[..., None] * vt32
+        S = jnp.exp(lw)[..., None] * S + kt32[..., None] * vt32[..., None, :]
+        return S, y
+
+    xs = tuple(a.transpose(1, 0, 2, 3) for a in (r, k, v, logw))  # (s,b,h,hd)
+    state, ys = jax.lax.scan(step, state, xs)
+    y = ys.transpose(1, 0, 2, 3)              # (b, s, h, hd)
+    y = (y * jax.nn.silu(g.astype(jnp.float32))).reshape(b, s, h * hd)
+    out = y.astype(x.dtype) @ p["wo"].astype(x.dtype)
+    return out, state, x[:, -1, :]
+
+
+def rwkv6_chunked(p, cfg: ArchConfig, x, chunk: int = 128):
+    """Production chunkwise form; prefix length must divide into chunks."""
+    b, s, d = x.shape
+    h, hd = cfg.num_heads, cfg.hd
+    c = min(chunk, s)
+    assert s % c == 0, "sequence must be a multiple of the chunk size"
+    nc = s // c
+    shift0 = jnp.zeros((b, d), x.dtype)
+    r, k, v, g, logw = _rwkv6_projections(p, cfg, x, shift0)
+    u = p["u"].reshape(h, hd)
+
+    def to_chunks(a):                         # (b, s, h, hd) -> (nc, b, h, c, hd)
+        return a.reshape(b, nc, c, h, hd).transpose(1, 0, 3, 2, 4)
+
+    rc, kc, vc, lwc = map(to_chunks, (r, k, v, logw))
+    rc32, kc32, vc32 = (a.astype(jnp.float32) for a in (rc, kc, vc))
+
+    def chunk_step(S, inp):
+        rt, kt, vt, lw = inp                  # (b, h, c, hd)
+        lp = jnp.cumsum(lw, axis=2) - lw      # exclusive cumsum: P_t
+        lp_next = lp + lw                     # P_{t+1}
+        lp_end = lp_next[:, :, -1:, :]        # P_C
+        q_t = rt * jnp.exp(jnp.maximum(lp, _LOG_CLAMP))
+        k_t = kt * jnp.exp(jnp.maximum(-lp_next, _LOG_CLAMP))
+        attn = jnp.einsum("bhti,bhsi->bhts", q_t, k_t)
+        mask = jnp.tril(jnp.ones((c, c), bool), k=-1)
+        attn = attn * mask[None, None]
+        bonus = jnp.einsum("bhti,bhti->bht", rt, u[None, :, None, :] * kt)
+        y = jnp.einsum("bhts,bhsj->bhtj", attn, vt) \
+            + jnp.einsum("bhti,bhij->bhtj", q_t, S) \
+            + bonus[..., None] * vt
+        kS = kt * jnp.exp(jnp.maximum(lp_end - lp_next, _LOG_CLAMP))
+        S = jnp.exp(jnp.maximum(lp_end.squeeze(2), _LOG_CLAMP))[..., None] * S \
+            + jnp.einsum("bhsi,bhsj->bhij", kS, vt)
+        return S, y
+
+    S0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+    _, ys = jax.lax.scan(chunk_step, S0, (rc32, kc32, vc32,
+                                          lwc.astype(jnp.float32)))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(b, s, h, hd)
+    y = (y * jax.nn.silu(g.astype(jnp.float32))).reshape(b, s, h * hd)
+    return y.astype(x.dtype) @ p["wo"].astype(x.dtype)
+
+
+# =================================================================== Mamba2
+def init_mamba2(key, cfg: ArchConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    di = 2 * d
+    n = cfg.ssm_state
+    hm = di // 64                              # SSD head dim 64
+    ks = jax.random.split(key, 5)
+    return {
+        "in_proj": _dense_init(ks[0], (d, 2 * di)),
+        "bc_proj": _dense_init(ks[1], (d, 2 * n)),
+        "dt_proj": _dense_init(ks[2], (d, hm)),
+        "dt_bias": jnp.zeros((hm,), jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, float(max(hm, 2)), hm)),
+        "d_skip": jnp.ones((hm,), jnp.float32),
+        "out_proj": _dense_init(ks[3], (di, d)),
+    }
+
+
+def _mamba2_projections(p, cfg: ArchConfig, x):
+    b, s, d = x.shape
+    di = 2 * d
+    n = cfg.ssm_state
+    hm = di // 64
+    xz = x @ p["in_proj"].astype(x.dtype)
+    xin, z = jnp.split(xz, 2, axis=-1)                    # (b, s, di)
+    bc = x @ p["bc_proj"].astype(x.dtype)
+    bmat, cmat = jnp.split(bc.astype(jnp.float32), 2, axis=-1)  # (b, s, n)
+    dt = jax.nn.softplus(x.astype(jnp.float32) @ p["dt_proj"].astype(jnp.float32)
+                         + p["dt_bias"])                  # (b, s, hm)
+    a = -jnp.exp(p["a_log"])                              # (hm,)
+    logdecay = dt * a[None, None, :]                      # (b, s, hm) < 0
+    xh = xin.reshape(b, s, hm, 64)
+    return xh, z, bmat, cmat, dt, logdecay
+
+
+def mamba2_scan(p, cfg: ArchConfig, x, state=None):
+    """Oracle / decode recurrence.  state (b, hm, n, 64)."""
+    b, s, d = x.shape
+    n = cfg.ssm_state
+    hm = (2 * d) // 64
+    if state is None:
+        state = jnp.zeros((b, hm, n, 64), jnp.float32)
+    xh, z, bmat, cmat, dt, logdecay = _mamba2_projections(p, cfg, x)
+
+    def step(h, inp):
+        xt, bt, ct, dtt, ld = inp             # (b,hm,64),(b,n),(b,n),(b,hm),(b,hm)
+        xt32 = xt.astype(jnp.float32)
+        h = jnp.exp(ld)[..., None, None] * h \
+            + (dtt[..., None] * bt[:, None, :])[..., None] * xt32[:, :, None, :]
+        y = jnp.einsum("bn,bhnp->bhp", ct, h) + p["d_skip"][None, :, None] * xt32
+        return h, y
+
+    xs = (xh.transpose(1, 0, 2, 3), bmat.transpose(1, 0, 2),
+          cmat.transpose(1, 0, 2), dt.transpose(1, 0, 2),
+          logdecay.transpose(1, 0, 2))
+    state, ys = jax.lax.scan(step, state, xs)
+    y = ys.transpose(1, 0, 2, 3).reshape(b, s, 2 * d)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    return y.astype(x.dtype) @ p["out_proj"].astype(x.dtype), state
+
+
+def mamba2_chunked(p, cfg: ArchConfig, x, chunk: int = 128):
+    b, s, d = x.shape
+    n = cfg.ssm_state
+    hm = (2 * d) // 64
+    c = min(chunk, s)
+    assert s % c == 0
+    nc = s // c
+    xh, z, bmat, cmat, dt, logdecay = _mamba2_projections(p, cfg, x)
+
+    xc = xh.reshape(b, nc, c, hm, 64).transpose(1, 0, 3, 2, 4)   # (nc,b,hm,c,64)
+    bc_ = bmat.reshape(b, nc, c, n).transpose(1, 0, 2, 3)        # (nc,b,c,n)
+    cc_ = cmat.reshape(b, nc, c, n).transpose(1, 0, 2, 3)
+    dtc = dt.reshape(b, nc, c, hm).transpose(1, 0, 3, 2)         # (nc,b,hm,c)
+    ldc = logdecay.reshape(b, nc, c, hm).transpose(1, 0, 3, 2)
+
+    def chunk_step(h, inp):
+        xt, bt, ct, dtt, ld = inp
+        la = jnp.cumsum(ld, axis=2)                  # inclusive (b, hm, c)
+        la_end = la[:, :, -1:]
+        # intra: y_t = sum_{s<=t} C_t.B_s exp(la_t - la_s) dt_s x_s
+        scores = jnp.einsum("btn,bsn->bts", ct, bt)  # (b, c, c)
+        # valid (s <= t) region has la_t - la_s <= 0; clamp to [CLAMP, 0] so
+        # the masked upper triangle cannot overflow to inf before masking.
+        ratio = jnp.exp(jnp.clip(la[:, :, :, None] - la[:, :, None, :],
+                                 _LOG_CLAMP, 0.0))   # (b, hm, c, c)
+        mask = jnp.tril(jnp.ones((c, c), bool))
+        attn = scores[:, None] * ratio * mask[None, None]
+        y = jnp.einsum("bhts,bhs,bhsp->bhtp", attn, dtt, xt.astype(jnp.float32))
+        # inter: exp(la_t) C_t h0
+        y = y + jnp.exp(jnp.maximum(la, _LOG_CLAMP))[..., None] * \
+            jnp.einsum("btn,bhnp->bhtp", ct, h)
+        # state update
+        w = dtt * jnp.exp(jnp.maximum(la_end - la, _LOG_CLAMP))   # (b, hm, c)
+        h = jnp.exp(jnp.maximum(la_end.squeeze(2), _LOG_CLAMP))[..., None, None] * h \
+            + jnp.einsum("bhs,bsn,bhsp->bhnp", w, bt, xt.astype(jnp.float32))
+        y = y + p["d_skip"][None, :, None, None] * xt.astype(jnp.float32)
+        return h, y
+
+    h0 = jnp.zeros((b, hm, n, 64), jnp.float32)
+    _, ys = jax.lax.scan(chunk_step, h0, (xc, bc_, cc_, dtc, ldc))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(b, s, 2 * d)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    return y.astype(x.dtype) @ p["out_proj"].astype(x.dtype)

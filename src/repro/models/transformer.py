@@ -1,0 +1,389 @@
+"""Model assembly: decoder-only / MoE / SSM / hybrid / enc-dec, all
+scan-over-layers (compile time and HLO size independent of depth).
+
+Params layout:
+  params = {
+    "embed":      (V, D),
+    "layers":     pytree stacked on a leading L axis (scanned),
+    "final_norm": (D,),
+    ["lm_head"]:  (D, V)          (absent when tied),
+    ["shared_attn"]: {...}        (zamba2's ONE shared attention block),
+    ["encoder"]:  {"layers": ..., "final_norm": ...}   (enc-dec),
+  }
+
+Decode caches are stacked on the same leading L axis and scanned together
+with the layer params.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import ssm as S
+
+
+# ------------------------------------------------------------------ init
+def _init_dense_layer(key, cfg: ArchConfig) -> Dict[str, Any]:
+    ks = jax.random.split(key, 2)
+    p = {"ln1": jnp.ones((cfg.d_model,), jnp.float32),
+         "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+         "attn": L.init_attention(ks[0], cfg),
+         "mlp": L.init_mlp(ks[1], cfg)}
+    return p
+
+
+def _init_rwkv_layer(key, cfg: ArchConfig) -> Dict[str, Any]:
+    ks = jax.random.split(key, 2)
+    return {"ln1": jnp.ones((cfg.d_model,), jnp.float32),
+            "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+            "mix": S.init_rwkv6(ks[0], cfg),
+            "mlp": L.init_mlp(ks[1], cfg)}
+
+
+def _init_mamba_layer(key, cfg: ArchConfig) -> Dict[str, Any]:
+    ks = jax.random.split(key, 2)
+    p = {"ln1": jnp.ones((cfg.d_model,), jnp.float32),
+         "mix": S.init_mamba2(ks[0], cfg)}
+    if not cfg.hybrid_attn_every:   # hybrid: the MLP lives in the shared block
+        p["ln2"] = jnp.ones((cfg.d_model,), jnp.float32)
+        p["mlp"] = L.init_mlp(ks[1], cfg)
+    return p
+
+
+def _init_encdec_decoder_layer(key, cfg: ArchConfig) -> Dict[str, Any]:
+    ks = jax.random.split(key, 3)
+    return {"ln1": jnp.ones((cfg.d_model,), jnp.float32),
+            "ln_x": jnp.ones((cfg.d_model,), jnp.float32),
+            "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+            "attn": L.init_attention(ks[0], cfg),
+            "xattn": L.init_attention(ks[1], cfg),
+            "mlp": L.init_mlp(ks[2], cfg)}
+
+
+def _layer_init_fn(cfg: ArchConfig):
+    if cfg.ssm_kind == "rwkv6":
+        return _init_rwkv_layer
+    if cfg.ssm_kind == "mamba2":
+        return _init_mamba_layer
+    if cfg.is_encdec:
+        return _init_encdec_decoder_layer
+    return _init_dense_layer
+
+
+def init_params(key, cfg: ArchConfig) -> Dict[str, Any]:
+    ks = jax.random.split(key, 6)
+    init_one = _layer_init_fn(cfg)
+    layer_keys = jax.random.split(ks[0], cfg.num_layers)
+    stacked = jax.vmap(lambda k: init_one(k, cfg))(layer_keys)
+    params: Dict[str, Any] = {
+        "embed": jax.random.normal(ks[1], (cfg.padded_vocab, cfg.d_model),
+                                   jnp.float32) * 0.02,
+        "layers": stacked,
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = jax.random.normal(
+            ks[2], (cfg.d_model, cfg.padded_vocab), jnp.float32) * 0.02
+    if cfg.ssm_kind == "mamba2" and cfg.hybrid_attn_every:
+        params["shared_attn"] = {
+            "ln": jnp.ones((cfg.d_model,), jnp.float32),
+            "attn": L.init_attention(ks[3], cfg),
+            "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+            "mlp": L.init_mlp(ks[5], cfg),
+        }
+    if cfg.is_encdec:
+        enc_keys = jax.random.split(ks[4], cfg.encoder_layers)
+        params["encoder"] = {
+            "layers": jax.vmap(lambda k: _init_dense_layer(k, cfg))(enc_keys),
+            "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        }
+    return params
+
+
+def cast_params(params, dtype):
+    """Cast weight matrices (not norms/scalars) to the compute dtype."""
+    def cast(path, x):
+        if x.ndim >= 2:
+            return x.astype(dtype)
+        return x
+    return jax.tree_util.tree_map_with_path(cast, params)
+
+
+# ------------------------------------------------------------------ blocks
+def _dense_block(lp, cfg, x, positions, impl, memory=None):
+    h, _ = L.attention_block(lp["attn"], cfg, L.rmsnorm(x, lp["ln1"], cfg.norm_eps),
+                             positions, impl=impl)
+    x = x + h
+    if memory is not None:
+        h = L.cross_attention_block(lp["xattn"], cfg,
+                                    L.rmsnorm(x, lp["ln_x"], cfg.norm_eps),
+                                    memory)
+        x = x + h
+    inner = L.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.is_moe:
+        h, aux = L.moe_block(lp["mlp"], cfg, inner)
+    else:
+        h, aux = L.swiglu(lp["mlp"], inner), 0.0
+    return x + h, aux
+
+
+def _rwkv_block(lp, cfg, x, seq_mixer):
+    inner = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+    if seq_mixer == "chunked":
+        h = S.rwkv6_chunked(lp["mix"], cfg, inner)
+    else:
+        h, _, _ = S.rwkv6_scan(lp["mix"], cfg, inner)
+    x = x + h
+    x = x + L.swiglu(lp["mlp"], L.rmsnorm(x, lp["ln2"], cfg.norm_eps))
+    return x
+
+
+def _mamba_block(lp, cfg, x, seq_mixer):
+    inner = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+    if seq_mixer == "chunked":
+        h = S.mamba2_chunked(lp["mix"], cfg, inner)
+    else:
+        h, _ = S.mamba2_scan(lp["mix"], cfg, inner)
+    x = x + h
+    if "mlp" in lp:   # standalone mamba; hybrid keeps the MLP in shared block
+        x = x + L.swiglu(lp["mlp"], L.rmsnorm(x, lp["ln2"], cfg.norm_eps))
+    return x
+
+
+def _shared_attn(params, cfg, x, positions, impl):
+    sp = params["shared_attn"]
+    h, _ = L.attention_block(sp["attn"], cfg,
+                             L.rmsnorm(x, sp["ln"], cfg.norm_eps),
+                             positions, impl=impl)
+    x = x + h
+    x = x + L.swiglu(sp["mlp"], L.rmsnorm(x, sp["ln2"], cfg.norm_eps))
+    return x
+
+
+# ------------------------------------------------------------------ forward
+def _embed_inputs(params, cfg: ArchConfig, batch) -> Tuple[jnp.ndarray, int]:
+    """Returns (x (b, s, d), n_prefix) where the first n_prefix positions are
+    frontend embeddings (no loss there)."""
+    emb = params["embed"]
+    tok = emb[batch["tokens"]]
+    dtype = L.dtype_of(cfg)
+    tok = tok.astype(dtype)
+    if cfg.frontend != "none" and "frontend" in batch:
+        fe = batch["frontend"].astype(dtype)
+        return jnp.concatenate([fe, tok], axis=1), fe.shape[1]
+    return tok, 0
+
+
+def _run_encoder(params, cfg: ArchConfig, enc_embeds, impl):
+    dtype = L.dtype_of(cfg)
+    x = enc_embeds.astype(dtype)
+    positions = jnp.arange(x.shape[1])
+
+    def body(x, lp):
+        # encoder is bidirectional: non-causal attention
+        q, k, v = L._qkv(lp["attn"], cfg, L.rmsnorm(x, lp["ln1"], cfg.norm_eps),
+                         positions)
+        o = L.xla_attention(q, k, v, causal=False)
+        x = x + L._merge_heads(o) @ lp["attn"]["wo"].astype(x.dtype)
+        x = x + L.swiglu(lp["mlp"], L.rmsnorm(x, lp["ln2"], cfg.norm_eps))
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"]["layers"])
+    return L.rmsnorm(x, params["encoder"]["final_norm"], cfg.norm_eps)
+
+
+def forward(params, cfg: ArchConfig, batch, *, impl: str = "xla",
+            remat: bool = True, seq_mixer: str = "chunked",
+            remat_policy: Optional[str] = "none") -> Tuple[jnp.ndarray, Any]:
+    """Train/prefill forward.  Returns (logits (b, s_tok, V), aux_loss)."""
+    x, n_prefix = _embed_inputs(params, cfg, batch)
+    x = L.constrain(x, None, None)
+    positions = jnp.arange(x.shape[1])
+    memory = None
+    if cfg.is_encdec:
+        memory = _run_encoder(params, cfg, batch["frontend"], impl)
+
+    def layer_body(carry, scanned):
+        x, aux = carry
+        lp, idx = scanned
+        if cfg.ssm_kind == "rwkv6":
+            x = _rwkv_block(lp, cfg, x, seq_mixer)
+        elif cfg.ssm_kind == "mamba2":
+            x = _mamba_block(lp, cfg, x, seq_mixer)
+            if cfg.hybrid_attn_every:
+                x = jax.lax.cond(
+                    idx % cfg.hybrid_attn_every == 0,
+                    lambda x: _shared_attn(params, cfg, x, positions, impl),
+                    lambda x: x, x)
+        elif cfg.is_encdec:
+            x, a = _dense_block(lp, cfg, x, positions, impl, memory=memory)
+            aux = aux + a
+        else:
+            x, a = _dense_block(lp, cfg, x, positions, impl)
+            aux = aux + a
+        return (L.constrain(x, None, None), aux), None
+
+    body = layer_body
+    if remat:
+        policy = None
+        if remat_policy == "dots":
+            policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        body = jax.checkpoint(layer_body, policy=policy, prevent_cse=False)
+
+    idxs = jnp.arange(cfg.num_layers)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)),
+                               (params["layers"], idxs))
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if n_prefix:
+        x = x[:, n_prefix:]
+    logits = _logits(params, cfg, x)
+    return logits, aux
+
+
+def _logits(params, cfg: ArchConfig, x):
+    """(b, s, padded_vocab) logits with padded columns masked to -inf."""
+    head = params.get("lm_head", params["embed"].T)
+    logits = x.astype(jnp.float32) @ head.astype(jnp.float32)
+    logits = L.constrain(logits, None, "model")
+    if cfg.padded_vocab != cfg.vocab_size:
+        mask = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        logits = jnp.where(mask[None, None, :], logits, -1.0e30)
+    return logits
+
+
+# ------------------------------------------------------------------ decode
+def init_cache(cfg: ArchConfig, batch_size: int, max_len: int,
+               dtype=jnp.bfloat16, enc_len: int = 0) -> Dict[str, Any]:
+    hkv, hd, lcount = cfg.num_kv_heads, cfg.hd, cfg.num_layers
+    cache: Dict[str, Any] = {}
+    if cfg.ssm_kind == "rwkv6":
+        h = cfg.num_heads
+        cache["ssm"] = jnp.zeros((lcount, batch_size, h, hd, hd), jnp.float32)
+        cache["shift"] = jnp.zeros((lcount, batch_size, cfg.d_model), dtype)
+        return cache
+    if cfg.ssm_kind == "mamba2":
+        hm = (2 * cfg.d_model) // 64
+        cache["ssm"] = jnp.zeros((lcount, batch_size, hm, cfg.ssm_state, 64),
+                                 jnp.float32)
+        if cfg.hybrid_attn_every:
+            napp = (lcount + cfg.hybrid_attn_every - 1) // cfg.hybrid_attn_every
+            cache["k"] = jnp.zeros((napp, batch_size, hkv, max_len, hd), dtype)
+            cache["v"] = jnp.zeros((napp, batch_size, hkv, max_len, hd), dtype)
+        return cache
+    cache["k"] = jnp.zeros((lcount, batch_size, hkv, max_len, hd), dtype)
+    cache["v"] = jnp.zeros((lcount, batch_size, hkv, max_len, hd), dtype)
+    if cfg.is_encdec:
+        cache["memory"] = jnp.zeros((batch_size, enc_len, cfg.d_model), dtype)
+    return cache
+
+
+def decode_step(params, cfg: ArchConfig, tokens, cache, pos, *,
+                impl: str = "xla", kde_cfg: Optional[Dict] = None):
+    """One decode step.  tokens (b, 1) int32; pos: scalar int32 (current
+    write offset).  Returns (logits (b, 1, V), new_cache)."""
+    x = params["embed"][tokens].astype(L.dtype_of(cfg))
+    positions = jnp.full((tokens.shape[1],), pos, jnp.int32) + \
+        jnp.arange(tokens.shape[1])
+    memory = cache.get("memory") if cfg.is_encdec else None
+
+    if cfg.ssm_kind == "rwkv6":
+        def body(x, scanned):
+            lp, ssm, shift = scanned
+            inner = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+            h, ssm, shift = S.rwkv6_scan(lp["mix"], cfg, inner, state=ssm,
+                                         shift_state=shift)
+            x = x + h
+            x = x + L.swiglu(lp["mlp"], L.rmsnorm(x, lp["ln2"], cfg.norm_eps))
+            return x, (ssm, shift.astype(x.dtype))
+
+        x, (ssm, shift) = jax.lax.scan(
+            body, x, (params["layers"], cache["ssm"], cache["shift"]))
+        new_cache = {"ssm": ssm, "shift": shift}
+    elif cfg.ssm_kind == "mamba2":
+        napp_every = cfg.hybrid_attn_every
+
+        def body(carry, scanned):
+            x = carry
+            lp, ssm, idx = scanned
+            inner = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+            h, ssm = S.mamba2_scan(lp["mix"], cfg, inner, state=ssm)
+            x = x + h
+            if "mlp" in lp:
+                x = x + L.swiglu(lp["mlp"],
+                                 L.rmsnorm(x, lp["ln2"], cfg.norm_eps))
+            return x, (ssm, x)
+
+        idxs = jnp.arange(cfg.num_layers)
+        # interleave: run mamba scan, applying shared attention outside the
+        # scan at the application points (few of them; python loop over apps)
+        new_cache = dict(cache)
+        if napp_every:
+            napp = cache["k"].shape[0]
+            ssm_parts, kc, vc = [], [], []
+            ssm = cache["ssm"]
+            for app in range(napp):
+                lo = app * napp_every
+                hi = min(lo + napp_every, cfg.num_layers)
+                x = _shared_attn_decode(params, cfg, x, cache, app, pos,
+                                        impl, kde_cfg, kc, vc)
+                seg = jax.tree_util.tree_map(lambda a: a[lo:hi],
+                                             params["layers"])
+                x, (ssm_seg, _) = jax.lax.scan(body, x, (seg, ssm[lo:hi],
+                                                         idxs[lo:hi]))
+                ssm_parts.append(ssm_seg)
+            new_cache["ssm"] = jnp.concatenate(ssm_parts, axis=0)
+            new_cache["k"] = jnp.stack(kc)
+            new_cache["v"] = jnp.stack(vc)
+        else:
+            x, (ssm, _) = jax.lax.scan(body, x, (params["layers"],
+                                                 cache["ssm"], idxs))
+            new_cache["ssm"] = ssm
+    else:
+        def body(x, scanned):
+            lp, ck, cv = scanned
+            h, kv = L.attention_block(
+                lp["attn"], cfg, L.rmsnorm(x, lp["ln1"], cfg.norm_eps),
+                positions, impl=impl, cache=(ck, cv), cache_pos=pos,
+                kde_cfg=kde_cfg)
+            x = x + h
+            if cfg.is_encdec:
+                h = L.cross_attention_block(
+                    lp["xattn"], cfg, L.rmsnorm(x, lp["ln_x"], cfg.norm_eps),
+                    memory)
+                x = x + h
+            inner = L.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+            if cfg.is_moe:
+                h, _ = L.moe_block(lp["mlp"], cfg, inner)
+            else:
+                h = L.swiglu(lp["mlp"], inner)
+            return x + h, kv
+
+        x, (ck, cv) = jax.lax.scan(body, x, (params["layers"], cache["k"],
+                                             cache["v"]))
+        new_cache = dict(cache)
+        new_cache["k"] = ck
+        new_cache["v"] = cv
+
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = _logits(params, cfg, x)
+    return logits, new_cache
+
+
+def _shared_attn_decode(params, cfg, x, cache, app, pos, impl, kde_cfg,
+                        kc, vc):
+    sp = params["shared_attn"]
+    positions = jnp.array([0], jnp.int32) + pos
+    h, kv = L.attention_block(
+        sp["attn"], cfg, L.rmsnorm(x, sp["ln"], cfg.norm_eps), positions,
+        impl=impl, cache=(cache["k"][app], cache["v"][app]), cache_pos=pos,
+        kde_cfg=kde_cfg)
+    kc.append(kv[0])
+    vc.append(kv[1])
+    x = x + h
+    x = x + L.swiglu(sp["mlp"], L.rmsnorm(x, sp["ln2"], cfg.norm_eps))
+    return x

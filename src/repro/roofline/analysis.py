@@ -1,0 +1,229 @@
+"""Roofline analysis from the compiled dry-run artifact (TPU v5e target).
+
+Terms (seconds, per step):
+  compute    = FLOPs / (chips * 197 TF/s bf16)
+  memory     = HBM bytes / (chips * 819 GB/s)
+  collective = per-device collective bytes / 50 GB/s/link
+
+FLOPs / HBM bytes come from the analytic model (roofline/flops.py) because
+XLA cost_analysis counts while(=scan) bodies once (measured; DESIGN.md §6);
+raw cost_analysis values are recorded alongside.  Collective bytes are
+parsed from ``compiled.as_text()`` -- the post-SPMD per-device program -- by
+summing operand sizes of all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute, each multiplied by the product of enclosing
+while-loop trip counts (extracted from the loop condition's comparison
+constant).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+LINK_BW = 50e9               # bytes/s / link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{")
+
+
+def shape_bytes(type_str: str) -> int:
+    """Total bytes of possibly-tuple HLO type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.groups()
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, float]
+    count_by_kind: Dict[str, int]
+    total_bytes: float
+    unresolved_trips: int = 0
+
+
+def _parse_computations(text: str):
+    """-> {comp_name: [instruction lines]}"""
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    entry = None
+    for line in text.splitlines():
+        m = _COMP_RE.match(line.strip())
+        if m and line.rstrip().endswith("{"):
+            cur = m.group(1)
+            comps[cur] = []
+            if line.strip().startswith("ENTRY"):
+                entry = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+    return comps, entry
+
+
+def _instr_shapes(lines: List[str]) -> Dict[str, str]:
+    """instr name -> result type string (for operand size lookup)."""
+    out = {}
+    for ln in lines:
+        m = _INSTR_RE.match(ln)
+        if m:
+            out[m.group(1)] = m.group(2)
+    return out
+
+
+def _trip_count(cond_lines: List[str]) -> Optional[int]:
+    """Find the loop bound: the comparison constant in the condition."""
+    consts = []
+    for ln in cond_lines:
+        for m in re.finditer(r"constant\((\d+)\)", ln):
+            consts.append(int(m.group(1)))
+    return max(consts) if consts else None
+
+
+def _references(lines: List[str]) -> List[Tuple[str, List[str], Optional[str]]]:
+    """(opcode, referenced computations, cond_name) per call-like instr."""
+    refs = []
+    for ln in lines:
+        m = _INSTR_RE.match(ln)
+        if not m:
+            continue
+        op = m.group(3)
+        rest = m.group(4)
+        if op == "while":
+            body = re.search(r"body=%?([\w\.\-]+)", rest)
+            cond = re.search(r"condition=%?([\w\.\-]+)", rest)
+            if body:
+                refs.append(("while", [body.group(1)],
+                             cond.group(1) if cond else None))
+        elif op == "conditional":
+            bs = re.search(r"branch_computations=\{([^}]*)\}", rest)
+            if bs:
+                names = [s.strip().lstrip("%") for s in bs.group(1).split(",")]
+                refs.append(("conditional", names, None))
+            else:
+                tb = re.search(r"true_computation=%?([\w\.\-]+)", rest)
+                fb = re.search(r"false_computation=%?([\w\.\-]+)", rest)
+                names = [x.group(1) for x in (tb, fb) if x]
+                if names:
+                    refs.append(("conditional", names, None))
+        elif op in ("call", "fusion"):
+            c = re.search(r"(?:to_apply|calls)=%?([\w\.\-]+)", rest)
+            if c:
+                refs.append((op, [c.group(1)], None))
+    return refs
+
+
+def collective_bytes(text: str,
+                     default_trip: int = 1) -> CollectiveStats:
+    comps, entry = _parse_computations(text)
+    if entry is None:
+        entry = next(iter(comps), None)
+    # multipliers via BFS over the call graph
+    mult: Dict[str, float] = {entry: 1.0} if entry else {}
+    unresolved = 0
+    frontier = [entry] if entry else []
+    seen = set(frontier)
+    while frontier:
+        nxt = []
+        for comp in frontier:
+            m = mult.get(comp, 1.0)
+            for op, names, cond in _references(comps.get(comp, [])):
+                child_mult = m
+                if op == "while":
+                    trip = None
+                    if cond and cond in comps:
+                        trip = _trip_count(comps[cond])
+                    if trip is None:
+                        trip = default_trip
+                        unresolved += 1
+                    child_mult = m * trip
+                for name in names:
+                    if name in comps:
+                        mult[name] = max(mult.get(name, 0.0), child_mult)
+                        if name not in seen:
+                            seen.add(name)
+                            nxt.append(name)
+        frontier = nxt
+
+    bytes_by: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    count_by: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for comp, lines in comps.items():
+        m = mult.get(comp, 1.0)
+        shapes = _instr_shapes(lines)
+        for ln in lines:
+            im = _INSTR_RE.match(ln)
+            if not im:
+                continue
+            op = im.group(3)
+            kind = next((c for c in _COLLECTIVES
+                         if op == c or op == c + "-start"), None)
+            if kind is None:
+                continue
+            # operand sizes: resolve named operands from the symbol table
+            opnds = re.findall(r"%([\w\.\-]+)", im.group(4).split(")")[0])
+            b = sum(shape_bytes(shapes.get(o, "")) for o in opnds)
+            if b == 0:  # fallback: result size
+                b = shape_bytes(im.group(2))
+            bytes_by[kind] += b * m
+            count_by[kind] += 1
+    total = sum(bytes_by.values())
+    return CollectiveStats(bytes_by, count_by, total, unresolved)
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    flops_total: float
+    model_flops: float
+    useful_ratio: float
+    hbm_bytes: float
+    collective_bytes_per_device: float
+    chips: int
+    raw_cost_flops: Optional[float] = None
+    raw_cost_bytes: Optional[float] = None
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def roofline_terms(flops_total: float, model_flops: float, hbm_bytes: float,
+                   coll_bytes_per_device: float, chips: int,
+                   raw_cost: Optional[Dict] = None) -> Roofline:
+    compute_s = flops_total / (chips * PEAK_FLOPS)
+    memory_s = hbm_bytes / (chips * HBM_BW)
+    collective_s = coll_bytes_per_device / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    return Roofline(
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant, flops_total=flops_total, model_flops=model_flops,
+        useful_ratio=model_flops / max(flops_total, 1.0),
+        hbm_bytes=hbm_bytes, collective_bytes_per_device=coll_bytes_per_device,
+        chips=chips,
+        raw_cost_flops=(raw_cost or {}).get("flops"),
+        raw_cost_bytes=(raw_cost or {}).get("bytes accessed"))

@@ -1,0 +1,61 @@
+"""Refresh analytic roofline fields in a dry-run JSON and render the
+EXPERIMENTS.md tables.
+
+  PYTHONPATH=src python -m repro.roofline.report results/dryrun.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+from repro.configs.base import SHAPES, get_config
+from repro.roofline.analysis import roofline_terms
+from repro.roofline.flops import cell_cost
+
+
+def refresh(path: str) -> list:
+    with open(path) as f:
+        records = json.load(f)
+    for r in records:
+        if not r.get("ok"):
+            continue
+        cfg = get_config(r["arch"])
+        shape = SHAPES[r["shape"]]
+        cost = cell_cost(cfg, shape, kde_decode=r.get("kde_decode", False))
+        rl = roofline_terms(cost.flops, cost.model_flops, cost.hbm_bytes,
+                            r["collectives"]["total_bytes_per_device"],
+                            r["chips"], r.get("raw_cost"))
+        r["roofline"] = rl.as_dict()
+    with open(path, "w") as f:
+        json.dump(records, f, indent=1)
+    return records
+
+
+def _fmt_bytes(b: float) -> str:
+    return f"{b / 2**30:.2f}"
+
+
+def render_markdown(records: list, mesh: str = "16x16") -> str:
+    rows = [r for r in records if r.get("ok") and r["mesh"] == mesh]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    out = ["| arch | shape | mem/dev GiB | compute ms | memory ms | "
+           "collective ms | dominant | useful ratio | note |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        rl = r["roofline"]
+        note = "kde-attn" if r.get("kde_decode") else ""
+        if r["memory"]["peak_estimate_bytes"] > 16 * 2**30:
+            note += (";" if note else "") + "exceeds 16G HBM"
+        out.append(
+            f"| {r['arch']} | {r['shape']} | "
+            f"{_fmt_bytes(r['memory']['peak_estimate_bytes'])} | "
+            f"{rl['compute_s'] * 1e3:.2f} | {rl['memory_s'] * 1e3:.2f} | "
+            f"{rl['collective_s'] * 1e3:.2f} | {rl['dominant']} | "
+            f"{min(rl['useful_ratio'], 1.0):.2f} | {note} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    path = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun.json"
+    recs = refresh(path)
+    print(render_markdown(recs))

@@ -1,0 +1,101 @@
+"""Train / prefill / decode step factories (jit + GSPMD).
+
+``make_train_step`` builds a donated, sharded train step: forward (scanned
+layers, remat), next-token cross entropy (+ MoE aux loss), AdamW.  Gradient
+reduction across data shards is GSPMD-inserted; the optional microbatch loop
+accumulates gradients sequentially (grad-accumulation for large global
+batches).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import transformer as T
+from repro.train import optimizer as opt
+
+
+def cross_entropy(logits: jnp.ndarray, targets: jnp.ndarray) -> jnp.ndarray:
+    """Mean next-token loss; logits (b, s, v), targets (b, s)."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def loss_fn(params, cfg: ArchConfig, batch, *, impl="xla", remat=True,
+            seq_mixer="chunked", aux_weight=0.01, remat_policy="none"):
+    tokens = batch["tokens"]
+    logits, aux = T.forward(params, cfg, batch, impl=impl, remat=remat,
+                            seq_mixer=seq_mixer, remat_policy=remat_policy)
+    loss = cross_entropy(logits[:, :-1], tokens[:, 1:])
+    return loss + aux_weight * aux, (loss, aux)
+
+
+def make_train_step(cfg: ArchConfig, adamw: opt.AdamWConfig = opt.AdamWConfig(),
+                    *, impl: str = "xla", remat: bool = True,
+                    seq_mixer: str = "chunked", microbatch: int = 0,
+                    remat_policy: str = "none", donate: bool = True):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def grads_of(params, batch):
+        (tot, (loss, aux)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, cfg, batch, impl=impl, remat=remat,
+                                   seq_mixer=seq_mixer,
+                                   remat_policy=remat_policy)
+        return grads, loss, aux
+
+    def train_step(params, opt_state, batch):
+        if microbatch and microbatch > 1:
+            def mb(carry, mbatch):
+                g_acc, l_acc, a_acc = carry
+                g, l, a = grads_of(params, mbatch)
+                return (jax.tree.map(jnp.add, g_acc, g), l_acc + l,
+                        a_acc + a), None
+
+            split = jax.tree.map(
+                lambda x: x.reshape((microbatch, x.shape[0] // microbatch)
+                                    + x.shape[1:]), batch)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss, aux), _ = jax.lax.scan(
+                mb, (zeros, jnp.float32(0), jnp.float32(0)), split)
+            grads = jax.tree.map(lambda g: g / microbatch, grads)
+            loss, aux = loss / microbatch, aux / microbatch
+        else:
+            grads, loss, aux = grads_of(params, batch)
+        params, opt_state = opt.adamw_update(adamw, params, grads, opt_state)
+        metrics = {"loss": loss, "aux": aux,
+                   "grad_norm": opt.global_norm(grads)}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, *, impl: str = "xla",
+                      seq_mixer: str = "chunked"):
+    """Prefill: forward pass returning last-position logits (no loss)."""
+
+    def prefill_step(params, batch):
+        logits, _ = T.forward(params, cfg, batch, impl=impl, remat=False,
+                              seq_mixer=seq_mixer)
+        return logits[:, -1:]
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, *, impl: str = "xla",
+                     kde_cfg: Optional[Dict] = None):
+    """serve_step: one token in, one token out, cache updated in place."""
+
+    def decode_step(params, cache, tokens, pos):
+        logits, cache = T.decode_step(params, cfg, tokens, cache, pos,
+                                      impl=impl, kde_cfg=kde_cfg)
+        return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32), \
+            logits, cache
+
+    return decode_step

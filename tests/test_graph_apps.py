@@ -1,0 +1,167 @@
+"""Graph applications: local clustering (6.1), spectral clustering (6.2),
+arboricity (6.3), weighted triangles (6.4)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cluster.local import l2_distance_statistic, same_cluster_test
+from repro.core.cluster.spectral import (cluster_accuracy, kmeans,
+                                         laplacian_eigenvectors,
+                                         spectral_cluster)
+from repro.core.graph.arboricity import (estimate_arboricity,
+                                         exact_arboricity,
+                                         greedy_densest_subgraph)
+from repro.core.graph.triangles import (estimate_triangle_weight,
+                                        exact_triangle_weight)
+from repro.core.kernels_fn import gaussian
+from repro.core.sampling.edge import NeighborSampler
+from repro.core.sparsify import spectral_sparsify
+from repro.data.synthetic_points import gaussian_clusters, nested
+
+
+@pytest.fixture(scope="module")
+def clustered():
+    x, lab = gaussian_clusters(n=500, d=4, k=2, spread=0.3, sep=1.2, seed=3)
+    ker = gaussian(bandwidth=1.0)
+    return x, lab, ker
+
+
+# ------------------------------------------------------------- local
+def test_l2_tester_calibration():
+    """CDVV14 statistic: ~0 for equal distributions, ~||p-q||^2 else."""
+    rng = np.random.default_rng(0)
+    n, r = 200, 4000
+    p = rng.dirichlet(np.ones(n))
+    q = rng.dirichlet(np.ones(n))
+    cp = rng.poisson(r * p)
+    cq1 = rng.poisson(r * p)
+    cq2 = rng.poisson(r * q)
+    same = l2_distance_statistic(cp, cq1, r, r)
+    diff = l2_distance_statistic(cp, cq2, r, r)
+    true = np.sum((p - q) ** 2)
+    assert abs(same) < 0.3 * true
+    assert abs(diff - true) < 0.5 * true
+
+
+def test_local_clustering(clustered):
+    """Theorem 6.9: same-cluster detection via walk distribution testing."""
+    x, lab, ker = clustered
+    nb = NeighborSampler(x, ker, mode="blocked", exact_blocks=True, seed=0)
+    i0 = np.where(lab == 0)[0]
+    i1 = np.where(lab == 1)[0]
+    r_same = same_cluster_test(x, ker, int(i0[0]), int(i0[3]), walk_length=6,
+                               num_walks=400, sampler=nb, seed=0)
+    r_diff = same_cluster_test(x, ker, int(i0[0]), int(i1[0]), walk_length=6,
+                               num_walks=400, sampler=nb, seed=1)
+    assert r_same.same_cluster
+    assert not r_diff.same_cluster
+
+
+# ------------------------------------------------------------- spectral
+def test_kmeans_separated():
+    rng = np.random.default_rng(0)
+    pts = np.concatenate([rng.normal(0, 0.1, (50, 2)),
+                          rng.normal(3, 0.1, (50, 2))])
+    lab, _ = kmeans(pts, 2, seed=0)
+    truth = np.array([0] * 50 + [1] * 50)
+    assert cluster_accuracy(lab, truth, 2) == 1.0
+
+
+def test_spectral_clustering_on_sparsifier(clustered):
+    """Theorems 6.12/6.13: clustering the sparsifier matches ground truth."""
+    x, lab, ker = clustered
+    g = spectral_sparsify(x, ker, num_edges=10000, estimator="exact",
+                          exact_blocks=True, seed=0)
+    res = spectral_cluster(g, 2, seed=0)
+    assert cluster_accuracy(res.labels, lab, 2) > 0.95
+
+
+def test_spectral_clustering_nested():
+    """The paper's Nested dataset (Section 7): k-means fails on raw
+    coordinates, spectral clustering on the sparsifier succeeds."""
+    x, lab = nested(n=900, seed=0)
+    ker = gaussian(bandwidth=0.3)
+    raw_lab, _ = kmeans(x.astype(np.float64), 2, seed=0)
+    raw_acc = cluster_accuracy(raw_lab, lab, 2)
+    g = spectral_sparsify(x, ker, num_edges=25000, estimator="exact",
+                          exact_blocks=True, seed=0)
+    res = spectral_cluster(g, 2, seed=0)
+    acc = cluster_accuracy(res.labels, lab, 2)
+    assert acc > 0.97, acc
+    assert acc > raw_acc  # spectral beats k-means on nested circles
+
+
+def test_laplacian_eigenvector_quality(clustered):
+    """Theorem 6.13: subspace iteration finds the bottom eigenvectors."""
+    x, lab, ker = clustered
+    g = spectral_sparsify(x, ker, num_edges=10000, estimator="exact",
+                          exact_blocks=True, seed=0)
+    vals, vecs = laplacian_eigenvectors(g, 3, iters=80, seed=0)
+    # the two cluster indicators live in the bottom-2 eigenspace
+    assert vals[0] < 0.05
+    assert vals[1] < 0.3
+
+
+# ------------------------------------------------------------- arboricity
+def test_greedy_peel_known_graph():
+    # K4 (complete graph on 4 nodes, unit weights) density = 6/4
+    src, dst = np.triu_indices(4, 1)
+    d = greedy_densest_subgraph(4, src, dst, np.ones(6))
+    assert abs(d - 1.5) < 1e-9
+    # planted dense subgraph
+    rng = np.random.default_rng(0)
+    n = 60
+    s2, d2 = np.triu_indices(10, 1)
+    sparse_s = rng.integers(10, n, 80)
+    sparse_d = rng.integers(10, n, 80)
+    src = np.concatenate([s2, sparse_s])
+    dst = np.concatenate([d2, sparse_d])
+    w = np.ones(len(src))
+    d = greedy_densest_subgraph(n, src, dst, w)
+    assert d >= 45 / 10 * 0.5  # at least half the planted density
+
+
+def test_arboricity_estimation(clustered):
+    """Theorem 6.15: (1 +- eps) approximation from sampled edges."""
+    x, lab, ker = clustered
+    truth = exact_arboricity(ker, x)
+    res = estimate_arboricity(x, ker, num_edges=10000, estimator="exact",
+                              seed=0)
+    assert abs(res.density - truth) / truth < 0.1, (res.density, truth)
+
+
+# ------------------------------------------------------------- triangles
+def test_triangle_estimation(clustered):
+    """Theorem 6.17: (1 +- eps) total triangle weight."""
+    x, lab, ker = clustered
+    truth = exact_triangle_weight(ker, x)
+    res = estimate_triangle_weight(x, ker, num_edges=400,
+                                   neighbor_samples=24, estimator="exact",
+                                   seed=0)
+    assert abs(res.total_weight - truth) / truth < 0.2, \
+        (res.total_weight, truth)
+    # Theorem 6.17: query budget independent of n -- evals grow ~sqrt(n)
+    # (blocked level-1 reads), far below the n^2 of materializing K
+    big, _ = gaussian_clusters(n=1000, d=4, k=2, spread=0.3, sep=1.2, seed=3)
+    res_big = estimate_triangle_weight(big, ker, num_edges=400,
+                                       neighbor_samples=24,
+                                       estimator="stratified", seed=0)
+    res_small = estimate_triangle_weight(x, ker, num_edges=400,
+                                         neighbor_samples=24,
+                                         estimator="stratified", seed=0)
+    assert res_big.kernel_evals < 2.5 * res_small.kernel_evals
+
+
+def test_exact_triangle_oracle_small():
+    """Cross-check the matmul oracle against brute force on a tiny set."""
+    rng = np.random.default_rng(0)
+    x = rng.normal(0, 1, (12, 3)).astype(np.float32)
+    ker = gaussian(1.0)
+    k = np.asarray(ker.matrix(jnp.asarray(x)), np.float64)
+    np.fill_diagonal(k, 0)
+    brute = 0.0
+    for i in range(12):
+        for j in range(i + 1, 12):
+            for l in range(j + 1, 12):
+                brute += k[i, j] * k[j, l] * k[i, l]
+    assert abs(exact_triangle_weight(ker, x) - brute) / brute < 1e-6

@@ -1,0 +1,104 @@
+"""KDE estimator correctness (Definition 1.1) + multilevel structure."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.kde.base import (ExactBlockKDE, ExactKDE, RSKDE,
+                                 StratifiedKDE, make_estimator)
+from repro.core.kde.hbe import GridHBE
+from repro.core.kde.multilevel import MultiLevelKDE
+from repro.core.kernels_fn import gaussian, laplacian
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(1)
+    x = rng.normal(0, 0.5, (700, 6)).astype(np.float32)
+    ker = gaussian(bandwidth=2.0)
+    ex = ExactKDE(x, ker)
+    truth = np.asarray(ex.query(x[:48]))
+    return x, ker, truth
+
+
+def test_exact_matches_dense(data):
+    x, ker, truth = data
+    k = np.asarray(ker.matrix(jnp.asarray(x)))
+    np.testing.assert_allclose(truth, k[:48].sum(1), rtol=2e-5)
+
+
+def test_rs_relative_error(data):
+    x, ker, truth = data
+    est = RSKDE(x, ker, num_samples=250, seed=0)
+    vals = np.asarray(est.query(x[:48]))
+    rel = np.abs(vals / truth - 1)
+    assert rel.mean() < 0.12, rel.mean()
+    assert est.evals == 48 * 250  # eval accounting
+
+
+def test_stratified_beats_rs_variance(data):
+    """Law of total variance: stratified <= RS at equal sample count."""
+    x, ker, truth = data
+    errs_rs, errs_st = [], []
+    for seed in range(12):
+        rs = RSKDE(x, ker, num_samples=176, seed=seed)
+        st = StratifiedKDE(x, ker, block_size=64, samples_per_block=16,
+                           seed=seed)
+        errs_rs.append(np.mean((np.asarray(rs.query(x[:16])) - truth[:16]) ** 2))
+        errs_st.append(np.mean((np.asarray(st.query(x[:16])) - truth[:16]) ** 2))
+    assert np.mean(errs_st) <= np.mean(errs_rs) * 1.25
+
+
+def test_exact_block_sums(data):
+    x, ker, truth = data
+    eb = ExactBlockKDE(x, ker, block_size=64)
+    bs = np.asarray(eb.block_sums(jnp.asarray(x[:8])))
+    assert bs.shape == (8, eb.num_blocks)
+    np.testing.assert_allclose(bs.sum(1), truth[:8], rtol=2e-4)
+
+
+def test_grid_hbe_laplacian():
+    rng = np.random.default_rng(2)
+    x = rng.normal(0, 1.0, (600, 8)).astype(np.float32)
+    ker = laplacian(bandwidth=4.0)
+    ex = ExactKDE(x, ker)
+    truth = np.asarray(ex.query(x[:24]))
+    hbe = GridHBE(x, ker, num_far_samples=128, seed=0)
+    vals = np.asarray(hbe.query(x[:24]))
+    rel = np.abs(vals / truth - 1)
+    assert rel.mean() < 0.15, rel.mean()
+    assert hbe.evals < 24 * 600  # sublinear per query
+
+
+def test_multilevel_structure(data):
+    """Alg 4.1: every dyadic segment estimator answers segment sums."""
+    x, ker, _ = data
+    tree = MultiLevelKDE(x, ker, lambda xs, seed: ExactKDE(xs, ker),
+                         leaf_size=64)
+    n = x.shape[0]
+    q = jnp.asarray(x[:4])
+    full = np.asarray(tree.segment_query(q, 0, n))
+    (l0, l1), (r0, r1) = tree.children(0, n)
+    left = np.asarray(tree.segment_query(q, l0, l1))
+    right = np.asarray(tree.segment_query(q, r0, r1))
+    np.testing.assert_allclose(left + right, full, rtol=1e-4)
+    assert tree.depth >= 3
+
+
+def test_factory():
+    rng = np.random.default_rng(0)
+    x = rng.normal(0, 1, (128, 4)).astype(np.float32)
+    ker = gaussian(1.0)
+    for name in ("exact", "rs", "stratified", "exact_block", "grid_hbe"):
+        est = make_estimator(name, x, ker, seed=0)
+        v = np.asarray(est.query(x[:4]))
+        assert v.shape == (4,) and np.all(np.isfinite(v))
+
+
+def test_pallas_backed_exact():
+    rng = np.random.default_rng(0)
+    x = rng.normal(0, 1, (300, 5)).astype(np.float32)
+    ker = gaussian(1.0)
+    a = ExactKDE(x, ker, use_pallas=True)
+    b = ExactKDE(x, ker, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(a.query(x[:8])),
+                               np.asarray(b.query(x[:8])), rtol=1e-4)

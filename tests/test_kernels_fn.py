@@ -1,0 +1,60 @@
+"""Property tests for kernel functions (Table 1) -- hypothesis-driven."""
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.kernels_fn import (exponential, gaussian, laplacian,
+                                   make_kernel, median_bandwidth,
+                                   rational_quadratic, squared_kernel_dataset)
+
+KERNELS = [gaussian(1.0), exponential(1.3), laplacian(0.8),
+           rational_quadratic(beta=1.0)]
+
+points = hnp.arrays(np.float32, (7, 5),
+                    elements=st.floats(-3, 3, width=32)).map(np.asarray)
+
+
+@pytest.mark.parametrize("ker", KERNELS, ids=lambda k: k.name)
+@hypothesis.given(x=points)
+@hypothesis.settings(max_examples=20, deadline=None)
+def test_kernel_range_symmetry_diag(ker, x):
+    k = np.asarray(ker.matrix(jnp.asarray(x)))
+    assert np.all(k <= 1.0 + 1e-5) and np.all(k >= 0.0)
+    np.testing.assert_allclose(k, k.T, atol=1e-5)
+    # exponential takes sqrt(f32 noise) on the diagonal: |x|^2 ~ 45 at
+    # eps_f32 gives sqrt(4.5e-5) ~ 7e-3 absolute
+    np.testing.assert_allclose(np.diag(k), 1.0, atol=2e-2)
+
+
+@pytest.mark.parametrize("name", ["gaussian", "exponential", "laplacian"])
+@hypothesis.given(x=points)
+@hypothesis.settings(max_examples=20, deadline=None)
+def test_squaring_constant(name, x):
+    """Section 5.2: k(x,y)^2 == k(cx, cy)."""
+    ker = make_kernel(name, bandwidth=1.0)
+    xs = squared_kernel_dataset(ker, jnp.asarray(x))
+    k = np.asarray(ker.matrix(jnp.asarray(x)))
+    k2 = np.asarray(ker.matrix(xs))
+    np.testing.assert_allclose(k * k, k2, atol=2e-4)
+
+
+@pytest.mark.parametrize("ker", KERNELS[:3], ids=lambda k: k.name)
+def test_kernel_matrix_psd(ker):
+    """Fact 3.5: reproducing-kernel matrices are PSD."""
+    rng = np.random.default_rng(0)
+    x = rng.normal(0, 1, (40, 4)).astype(np.float32)
+    k = np.asarray(ker.matrix(jnp.asarray(x)), np.float64)
+    ev = np.linalg.eigvalsh((k + k.T) / 2)
+    assert ev.min() > -1e-6
+
+
+def test_median_bandwidth():
+    rng = np.random.default_rng(0)
+    x = rng.normal(0, 2.0, (256, 3)).astype(np.float32)
+    bw = median_bandwidth(jnp.asarray(x))
+    d = np.linalg.norm(x[:, None] - x[None, :], axis=-1)
+    med = np.median(d[np.triu_indices(256, 1)])
+    assert abs(bw - med) / med < 0.25

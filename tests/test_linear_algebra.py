@@ -1,0 +1,198 @@
+"""Linear-algebra applications: sparsify (5.1), solve (5.1.1), LRA (5.2),
+spectrum (5.3), top eigenvalue (5.4)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.eigen import top_eigenvalue, top_eigenvalue_exact
+from repro.core.kernels_fn import gaussian
+from repro.core.laplacian import (cg_laplacian, laplacian_dense,
+                                  solve_kernel_laplacian)
+from repro.core.lowrank import (countsketch_lowrank, factored_error,
+                                fkv_lowrank, optimal_error, projection_error,
+                                subspace_iteration)
+from repro.core.sparsify import resparsify, spectral_sparsify
+from repro.core.spectrum import (approximate_spectrum, emd_1d, exact_spectrum,
+                                 invert_moments, _project_simplex)
+
+
+@pytest.fixture(scope="module")
+def cloud():
+    # bounded-tau dataset (Parameterization 1.2): tau ~ 0.1
+    rng = np.random.default_rng(0)
+    x = rng.normal(0, 0.35, (500, 5)).astype(np.float32)
+    ker = gaussian(bandwidth=2.0)
+    k = np.asarray(ker.matrix(jnp.asarray(x)), np.float64)
+    assert k.min() > 0.05
+    return x, ker, k
+
+
+# ------------------------------------------------------------- sparsify
+def test_sparsifier_spectral_closeness(cloud):
+    """Theorem 5.3: (1-eps) L <= L' <= (1+eps) L on quadratic forms."""
+    x, ker, k = cloud
+    g = spectral_sparsify(x, ker, num_edges=12000, estimator="exact",
+                          exact_blocks=True, seed=0)
+    l_true = laplacian_dense(ker, x)
+    l_sp = g.laplacian_dense()
+    rng = np.random.default_rng(1)
+    v = rng.standard_normal((500, 20))
+    v -= v.mean(0)
+    ratios = np.einsum("ij,ij->j", v, l_sp @ v) / \
+        np.einsum("ij,ij->j", v, l_true @ v)
+    assert ratios.min() > 0.9 and ratios.max() < 1.1, (ratios.min(), ratios.max())
+    # interior eigenvalue preservation (extreme tail needs more samples)
+    ev_t = np.sort(np.linalg.eigvalsh(l_true))
+    ev_s = np.sort(np.linalg.eigvalsh(l_sp))
+    r = ev_s[25:-25] / ev_t[25:-25]
+    assert r.min() > 0.75 and r.max() < 1.3
+
+
+def test_sparsifier_is_sublinear_in_kernel_evals():
+    """The whole point: eval growth is ~n^1.5 (blocked level-1 reads), not
+    n^2 -- measure the scaling exponent across two sizes."""
+    rng = np.random.default_rng(0)
+    evals = {}
+    for n in (400, 1600):
+        x = rng.normal(0, 0.35, (n, 5)).astype(np.float32)
+        ker = gaussian(bandwidth=2.0)
+        g = spectral_sparsify(x, ker, num_edges=2 * n, estimator="stratified",
+                              samples_per_block=4, seed=0)
+        evals[n] = g.kernel_evals
+    growth = evals[1600] / evals[400]     # quadratic would be 16x
+    assert growth < 10.0, evals
+
+
+def test_resparsify(cloud):
+    x, ker, k = cloud
+    g = spectral_sparsify(x, ker, num_edges=12000, estimator="exact",
+                          exact_blocks=True, seed=0)
+    g2 = resparsify(g, 4000, seed=1)
+    assert g2.num_edges == 4000
+    l_true = laplacian_dense(ker, x)
+    rng = np.random.default_rng(2)
+    v = rng.standard_normal((500, 10))
+    v -= v.mean(0)
+    ratios = np.einsum("ij,ij->j", v, g2.laplacian_dense() @ v) / \
+        np.einsum("ij,ij->j", v, l_true @ v)
+    assert ratios.min() > 0.8 and ratios.max() < 1.2
+
+
+# ------------------------------------------------------------- solver
+def test_laplacian_solver(cloud):
+    """Section 5.1.1 / Theorem 5.11: ||x - L+b||_L <= C sqrt(eps) ||L+b||_L."""
+    x, ker, k = cloud
+    l_true = laplacian_dense(ker, x)
+    rng = np.random.default_rng(0)
+    b = rng.standard_normal(500)
+    b -= b.mean()
+    sol, g = solve_kernel_laplacian(x, ker, b, num_edges=20000,
+                                    estimator="exact", seed=0)
+    x_true = np.linalg.lstsq(l_true, b, rcond=None)[0]
+    x_true -= x_true.mean()
+    num = np.sqrt((sol - x_true) @ l_true @ (sol - x_true))
+    den = np.sqrt(x_true @ l_true @ x_true)
+    assert num / den < 0.35, num / den
+
+
+def test_cg_on_explicit_graph(cloud):
+    x, ker, k = cloud
+    g = spectral_sparsify(x, ker, num_edges=20000, estimator="exact",
+                          exact_blocks=True, seed=0)
+    rng = np.random.default_rng(1)
+    b = rng.standard_normal(500)
+    b -= b.mean()
+    sol, res = cg_laplacian(g, b, iters=400)
+    l_sp = g.laplacian_dense()
+    x_direct = np.linalg.lstsq(l_sp, b, rcond=None)[0]
+    x_direct -= x_direct.mean()
+    assert np.linalg.norm(sol - x_direct) / np.linalg.norm(x_direct) < 0.05
+
+
+# ------------------------------------------------------------- low rank
+def test_fkv_additive_error(cloud):
+    """Corollary 5.14: ||K - B||_F^2 <= ||K - K_r||_F^2 + eps ||K||_F^2."""
+    x, ker, k = cloud
+    r = 6
+    res = fkv_lowrank(x, ker, rank=r, num_rows=150, estimator="exact", seed=0)
+    err = projection_error(k, res.u)
+    opt = optimal_error(k, r)
+    fro2 = np.linalg.norm(k, "fro") ** 2
+    assert (err - opt) / fro2 < 0.02, (err, opt, fro2)
+    # sublinear eval accounting vs materializing K
+    res_rs = fkv_lowrank(x, ker, rank=r, num_rows=150, estimator="rs", seed=0)
+    assert res_rs.kernel_evals < 0.6 * k.size
+
+
+def test_fkv_left_factor_fit(cloud):
+    x, ker, k = cloud
+    res = fkv_lowrank(x, ker, rank=6, num_rows=150, estimator="exact",
+                      seed=0, fit_cols=80)
+    err = factored_error(k, res.v, res.u)
+    fro2 = np.linalg.norm(k, "fro") ** 2
+    assert err / fro2 < 0.05
+
+
+def test_baselines(cloud):
+    x, ker, k = cloud
+    opt = optimal_error(k, 6)
+    fro2 = np.linalg.norm(k, "fro") ** 2
+    u_cw = countsketch_lowrank(k, 6, 60, seed=0)
+    val, u_svd = subspace_iteration(k, 6, iters=16, seed=0)
+    assert (projection_error(k, u_cw) - opt) / fro2 < 0.05
+    assert (projection_error(k, u_svd) - opt) / fro2 < 0.005
+    # subspace iteration eigenvalues match dense
+    ev = np.sort(np.linalg.eigvalsh(k))[::-1][:3]
+    np.testing.assert_allclose(np.sort(val)[::-1][:3], ev, rtol=0.02)
+
+
+# ------------------------------------------------------------- spectrum
+def test_simplex_projection():
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        v = rng.normal(0, 2, 50)
+        p = _project_simplex(v)
+        assert abs(p.sum() - 1) < 1e-6 and p.min() >= 0
+
+
+def test_moment_inversion_exact_moments():
+    """Given exact moments of a known spectrum, inversion recovers it in EMD."""
+    rng = np.random.default_rng(0)
+    mu = rng.uniform(-0.5, 1.0, 60)
+    moments = np.array([np.mean(mu ** l) for l in range(1, 13)])
+    lam = invert_moments(moments, n=60)
+    assert emd_1d(lam, 1.0 - mu) < 0.12
+
+
+def test_spectrum_emd(cloud):
+    """Theorem 5.17 pipeline on a real kernel graph."""
+    x, ker, k = cloud
+    sp = approximate_spectrum(x, ker, length=8, num_sources=24,
+                              walks_per_source=48, seed=0)
+    truth = exact_spectrum(ker, x)
+    assert emd_1d(sp.eigenvalues, truth) < 0.2
+
+
+# ------------------------------------------------------------- eigen
+def test_lemma_5_19(cloud):
+    x, ker, k = cloud
+    tau = k.min()
+    lam1 = top_eigenvalue_exact(ker, x)
+    assert lam1 >= k.shape[0] * tau
+
+
+@pytest.mark.parametrize("method", ["power", "noisy_power"])
+def test_top_eigenvalue(cloud, method):
+    """Theorem 5.22: lambda_hat >= (1 - eps) lambda_1."""
+    x, ker, k = cloud
+    lam_true = top_eigenvalue_exact(ker, x)
+    res = top_eigenvalue(x, ker, t=180, method=method, seed=0)
+    assert res.eigenvalue >= 0.9 * lam_true
+    assert res.eigenvalue <= 1.1 * lam_true
+    # the witness vector is sparse and certifies a lower bound on the
+    # subsampled matrix scale
+    assert np.count_nonzero(res.eigenvector) <= 180
+    # Theorem 5.22's headline: cost independent of n (depends on t only)
+    big = np.random.default_rng(1).normal(0, 0.35, (2000, 5)).astype(np.float32)
+    res_big = top_eigenvalue(big, ker, t=180, method=method, seed=0)
+    assert res_big.kernel_evals <= res.kernel_evals * 1.5

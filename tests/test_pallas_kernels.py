@@ -1,0 +1,143 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True on CPU) vs the
+pure-jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.kernels_fn import exponential, gaussian, laplacian
+from repro.kernels.flash_attention import ops as fa
+from repro.kernels.kde_attention import ops as ka
+from repro.kernels.kde_rowsum import ops as rs
+
+RNG = np.random.default_rng(0)
+
+
+# --------------------------------------------------------------- kde_rowsum
+@pytest.mark.parametrize("kind,ker", [
+    ("gaussian", gaussian(1.3)), ("exponential", exponential(0.7)),
+    ("laplacian", laplacian(2.0))])
+@pytest.mark.parametrize("m,n,d", [(5, 64, 3), (37, 301, 19), (128, 512, 64)])
+def test_kde_rowsum_sweep(kind, ker, m, n, d):
+    q = RNG.normal(0, 0.5, (m, d)).astype(np.float32)
+    x = RNG.normal(0, 0.5, (n, d)).astype(np.float32)
+    out = rs.kde_rowsum(q, x, ker, bm=32, bn=128, interpret=True)
+    ref = rs.rowsum_ref(jnp.asarray(q), jnp.asarray(x), kind,
+                        1.0 / ker.bandwidth)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=1e-5)
+
+
+def test_kde_blocksum():
+    ker = gaussian(1.0)
+    q = RNG.normal(0, 0.5, (17, 8)).astype(np.float32)
+    x = RNG.normal(0, 0.5, (256, 8)).astype(np.float32)
+    out = rs.kde_blocksum(q, x, ker, bm=16, bn=64, interpret=True)
+    ref = rs.blocksum_ref(jnp.asarray(q), jnp.asarray(x), "gaussian", 1.0,
+                          bn=64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4)
+
+
+# ----------------------------------------------------------- flash attention
+@pytest.mark.parametrize("b,hq,hkv,sq,skv,dh", [
+    (2, 4, 2, 64, 64, 32),       # GQA, square causal
+    (1, 8, 2, 1, 300, 64),       # decode: 1 query vs long cache
+    (2, 4, 4, 100, 228, 16),     # MHA, ragged shapes
+    (1, 2, 1, 17, 17, 8),        # tiny odd
+])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_flash_attention_sweep(b, hq, hkv, sq, skv, dh, dtype):
+    q = RNG.normal(0, 1, (b, hq, sq, dh)).astype(dtype)
+    k = RNG.normal(0, 1, (b, hkv, skv, dh)).astype(dtype)
+    v = RNG.normal(0, 1, (b, hkv, skv, dh)).astype(dtype)
+    out = fa.flash_attention(q, k, v, True, 64, 64, True, False)
+    ref, _ = fa.attention_ref(q, k, v, causal=True, scale=1 / np.sqrt(dh))
+    tol = 2e-5 if dtype == np.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol)
+
+
+def test_flash_attention_grads():
+    b, hq, hkv, sq, skv, dh = 2, 4, 2, 48, 48, 16
+    q = RNG.normal(0, 1, (b, hq, sq, dh)).astype(np.float32)
+    k = RNG.normal(0, 1, (b, hkv, skv, dh)).astype(np.float32)
+    v = RNG.normal(0, 1, (b, hkv, skv, dh)).astype(np.float32)
+
+    def loss_k(q, k, v):
+        return jnp.sum(fa.flash_attention(q, k, v, True, 64, 64, True,
+                                          False) ** 2)
+
+    def loss_r(q, k, v):
+        o, _ = fa.attention_ref(q, k, v, causal=True, scale=1 / np.sqrt(dh))
+        return jnp.sum(o ** 2)
+
+    g1 = jax.grad(loss_k, (0, 1, 2))(q, k, v)
+    g2 = jax.grad(loss_r, (0, 1, 2))(q, k, v)
+    for a, b_ in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_), atol=1e-4)
+
+
+def test_flash_lse_output():
+    q = RNG.normal(0, 1, (1, 2, 32, 16)).astype(np.float32)
+    k = RNG.normal(0, 1, (1, 2, 32, 16)).astype(np.float32)
+    v = RNG.normal(0, 1, (1, 2, 32, 16)).astype(np.float32)
+    out, lse = fa.flash_attention(q, k, v, True, 32, 32, True, True)
+    ref, lse_ref = fa.attention_ref(q, k, v, causal=True,
+                                    scale=1 / np.sqrt(16))
+    np.testing.assert_allclose(np.asarray(lse), np.asarray(lse_ref),
+                               atol=1e-4)
+
+
+# ------------------------------------------------------------ kde attention
+@pytest.mark.parametrize("b,hq,hkv,S,dh,bk,stride,top_p", [
+    (2, 8, 2, 2048, 64, 128, 8, 4),
+    (1, 4, 4, 1024, 32, 256, 16, 2),
+    (2, 2, 1, 512, 16, 64, 4, 3),
+])
+def test_kde_attention_matches_mirror(b, hq, hkv, S, dh, bk, stride, top_p):
+    """The Pallas pipeline is deterministic (strided subsample), so it must
+    agree with the jnp mirror exactly."""
+    q = RNG.normal(0, 1, (b, hq, dh)).astype(np.float32)
+    k = RNG.normal(0, 0.3, (b, hkv, S, dh)).astype(np.float32)
+    v = RNG.normal(0, 1, (b, hkv, S, dh)).astype(np.float32)
+    out = ka.kde_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                           top_p=top_p, bk=bk, stride=stride, interpret=True)
+    ref = ka.kde_attention_ref(jnp.asarray(q), jnp.asarray(k),
+                               jnp.asarray(v), top_p=top_p, bk=bk,
+                               stride=stride)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_kde_attention_approximates_exact_on_peaked():
+    """When attention mass is concentrated (the realistic long-context
+    regime), top-P blocks + KDE residual get close to exact attention."""
+    b, hq, hkv, S, dh = 1, 4, 2, 4096, 32
+    q = RNG.normal(0, 1, (b, hq, dh)).astype(np.float32)
+    k = RNG.normal(0, 0.05, (b, hkv, S, dh)).astype(np.float32)
+    # plant high-score keys inside two blocks (strong enough that the
+    # planted mass dominates the 4096-key background)
+    for h in range(hkv):
+        qv = q.reshape(b, hkv, hq // hkv, dh).mean(2)[0, h]
+        k[0, h, 100:140] = 8.0 * qv / np.linalg.norm(qv) + k[0, h, 100:140]
+        k[0, h, 3000:3020] = 6.0 * qv / np.linalg.norm(qv) + k[0, h, 3000:3020]
+    v = RNG.normal(0, 1, (b, hkv, S, dh)).astype(np.float32)
+    out = ka.kde_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                           top_p=8, bk=256, stride=8, interpret=True)
+    exact = ka.exact_decode_attention(jnp.asarray(q), jnp.asarray(k),
+                                      jnp.asarray(v))
+    err = float(jnp.abs(out - exact).max())
+    scale = float(jnp.abs(exact).max())
+    assert err < 0.2 * scale, (err, scale)
+
+
+def test_kde_attention_exact_when_all_blocks_selected():
+    """top_p = all blocks -> no residual -> exact attention."""
+    b, hq, hkv, S, dh = 1, 2, 2, 256, 16
+    q = RNG.normal(0, 1, (b, hq, dh)).astype(np.float32)
+    k = RNG.normal(0, 0.5, (b, hkv, S, dh)).astype(np.float32)
+    v = RNG.normal(0, 1, (b, hkv, S, dh)).astype(np.float32)
+    out = ka.kde_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                           top_p=4, bk=64, stride=4, interpret=True)
+    exact = ka.exact_decode_attention(jnp.asarray(q), jnp.asarray(k),
+                                      jnp.asarray(v))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exact), atol=1e-4)

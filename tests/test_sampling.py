@@ -1,0 +1,168 @@
+"""The paper's sampling reductions (Section 4) -- distributional tests."""
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.kde.base import ExactKDE
+from repro.core.kde.multilevel import MultiLevelKDE
+from repro.core.kernels_fn import gaussian
+from repro.core.sampling.edge import EdgeSampler, NeighborSampler
+from repro.core.sampling.rownorm import RowNormSampler
+from repro.core.sampling.vertex import (DegreeSampler,
+                                        sample_from_positive_array,
+                                        tree_descent_sample)
+from repro.core.sampling.walks import random_walks
+
+
+@pytest.fixture(scope="module")
+def graph():
+    rng = np.random.default_rng(3)
+    x = rng.normal(0, 0.5, (400, 5)).astype(np.float32)
+    ker = gaussian(bandwidth=1.5)
+    k = np.asarray(ker.matrix(jnp.asarray(x)), np.float64)
+    return x, ker, k
+
+
+def tv(p, q):
+    return 0.5 * np.abs(p - q).sum()
+
+
+@hypothesis.given(a=st.lists(st.floats(0.01, 10.0), min_size=2, max_size=40))
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_tree_descent_equals_dense_sampling(a):
+    """Lemma 4.8: the binary-descent sampler (Alg 4.5) samples exactly
+    proportional to the array -- agreeing with the dense inverse-CDF form."""
+    a = np.asarray(a)
+    rng = np.random.default_rng(0)
+    n_s = 4000
+    dense = sample_from_positive_array(a, n_s, np.random.default_rng(1))
+    tree = np.array([tree_descent_sample(a, rng) for _ in range(n_s)])
+    p = a / a.sum()
+    emp_d = np.bincount(dense, minlength=len(a)) / n_s
+    emp_t = np.bincount(tree, minlength=len(a)) / n_s
+    noise = 3.0 * np.sqrt(len(a) / n_s)
+    assert tv(emp_d, p) < noise
+    assert tv(emp_t, p) < noise
+
+
+def test_degree_sampling_distribution(graph):
+    """Theorem 4.9: TV(sampler, degree distribution) = O(eps)."""
+    x, ker, k = graph
+    est = ExactKDE(x, ker)
+    ds = DegreeSampler(est, seed=0)
+    deg = k.sum(1) - 1
+    np.testing.assert_allclose(ds.degrees, deg, rtol=1e-4)
+    s = ds.sample(30000)
+    emp = np.bincount(s, minlength=len(deg)) / 30000
+    assert tv(emp, deg / deg.sum()) < 3.0 * np.sqrt(len(deg) / 30000)
+
+
+def test_neighbor_sampler_blocked_exact(graph):
+    """Theorem 4.12 with exact level-1 reads: exact neighbor distribution."""
+    x, ker, k = graph
+    nb = NeighborSampler(x, ker, mode="blocked", exact_blocks=True, seed=0)
+    src = 7
+    row = k[src].copy()
+    row[src] = 0
+    p = row / row.sum()
+    v, probs = nb.sample(np.full(20000, src))
+    emp = np.bincount(v, minlength=len(p)) / 20000
+    assert tv(emp, p) < 3.0 * np.sqrt(len(p) / 20000)
+    # realized probabilities match the true distribution
+    np.testing.assert_allclose(probs, p[v], rtol=1e-3, atol=1e-9)
+
+
+def test_neighbor_prob_of_matches_sampling(graph):
+    x, ker, k = graph
+    nb = NeighborSampler(x, ker, mode="blocked", exact_blocks=True, seed=0)
+    src = np.array([3, 3, 11, 200])
+    dst = np.array([5, 399, 42, 17])
+    got = nb.prob_of(src, dst)
+    for s, d, g in zip(src, dst, got):
+        row = k[s].copy()
+        row[s] = 0
+        np.testing.assert_allclose(g, row[d] / row.sum(), rtol=1e-3)
+
+
+def test_neighbor_sampler_tree(graph):
+    """Faithful Algorithm 4.11 on the dyadic tree (exact node estimators)."""
+    x, ker, k = graph
+    tree = MultiLevelKDE(x, ker, lambda xs, seed: ExactKDE(xs, ker),
+                         leaf_size=50)
+    nb = NeighborSampler(x, ker, mode="tree", tree=tree, seed=0)
+    src = 0
+    row = k[src].copy()
+    row[src] = 0
+    p = row / row.sum()
+    v, probs = nb.sample(np.full(3000, src))
+    emp = np.bincount(v, minlength=len(p)) / 3000
+    assert tv(emp, p) < 3.0 * np.sqrt(len(p) / 3000)
+
+
+def test_edge_sampler_weight_proportional(graph):
+    """Theorem 4.14: edges ~ k(u,v) / sum(w)."""
+    x, ker, k = graph
+    est = ExactKDE(x, ker)
+    es = EdgeSampler(DegreeSampler(est, seed=1),
+                     NeighborSampler(x, ker, exact_blocks=True, seed=2))
+    u, v, p = es.sample(30000)
+    n = k.shape[0]
+    koff = k.copy()
+    np.fill_diagonal(koff, 0)
+    iu = np.triu_indices(n, 1)
+    # weight-proportional sampling visits heavy edges far more often than
+    # uniform would: E_sampled[w] ~ E[w^2]/E[w] >> E[w]
+    mean_sampled = koff[u, v].mean()
+    mean_uniform = koff[iu].mean()
+    expected = (koff[iu] ** 2).mean() / koff[iu].mean()
+    assert 0.85 * expected < mean_sampled < 1.15 * expected
+    assert mean_sampled > 1.1 * mean_uniform
+    # and the per-vertex marginal matches the degree distribution
+    deg = koff.sum(1)
+    marg = np.bincount(np.concatenate([u, v]), minlength=n) / (2 * len(u))
+    assert 0.5 * np.abs(marg - deg / deg.sum()).sum() < \
+        3.0 * np.sqrt(n / (2 * len(u))) + 0.05
+
+
+def test_rejection_sampling_exactness(graph):
+    x, ker, k = graph
+    nb = NeighborSampler(x, ker, mode="blocked", exact_blocks=False,
+                         samples_per_block=8, seed=0)
+    src = 5
+    row = k[src].copy()
+    row[src] = 0
+    p = row / row.sum()
+    v = nb.sample_exact(np.full(8000, src), rounds=6)
+    emp = np.bincount(v, minlength=len(p)) / 8000
+    v0, _ = nb.sample(np.full(8000, src))
+    emp0 = np.bincount(v0, minlength=len(p)) / 8000
+    # rejection-corrected distribution at least as close as raw proposals
+    assert tv(emp, p) <= tv(emp0, p) + 0.05
+
+
+def test_random_walk_matches_markov_chain(graph):
+    """Theorem 4.15: endpoint distribution ~= e_u M^t."""
+    x, ker, k = graph
+    koff = k.copy()
+    np.fill_diagonal(koff, 0)
+    m = koff / koff.sum(1, keepdims=True)
+    t = 3
+    p_true = np.linalg.matrix_power(m.T, t) @ np.eye(len(k))[0]
+    nb = NeighborSampler(x, ker, mode="blocked", exact_blocks=True, seed=0)
+    ends = random_walks(nb, np.zeros(20000, np.int64), t)
+    emp = np.bincount(ends, minlength=len(k)) / 20000
+    assert tv(emp, p_true) < 3.0 * np.sqrt(len(k) / 20000)
+
+
+def test_rownorm_sampler(graph):
+    """Section 5.2: KDE on cX samples rows ~ ||K_i||^2."""
+    x, ker, k = graph
+    rs = RowNormSampler(x, ker, estimator="exact", seed=0)
+    true_norms = (k ** 2).sum(1)
+    np.testing.assert_allclose(rs.row_norms_sq, true_norms, rtol=1e-3)
+    s = rs.sample(30000)
+    emp = np.bincount(s, minlength=len(k)) / 30000
+    assert tv(emp, true_norms / true_norms.sum()) < \
+        3.0 * np.sqrt(len(k) / 30000)
