@@ -14,6 +14,7 @@ import time
 
 BENCHES = {
     "kde": "benchmarks.bench_kde",                 # Table 1
+    "sampling": "benchmarks.bench_sampling",       # fused engine vs seed
     "primitives": "benchmarks.bench_primitives",   # Table 2
     "lra": "benchmarks.bench_lra",                 # Figure 3
     "sparsify": "benchmarks.bench_sparsify",       # Figure 4 / §7.1

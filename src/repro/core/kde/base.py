@@ -42,6 +42,9 @@ class KDEBase:
 
     def __init__(self, x: jnp.ndarray, kernel: Kernel):
         self.x = jnp.asarray(x, jnp.float32)
+        # ||x_j||^2, computed once and reused by every L2-kernel query
+        # (the level-1/level-2 reads never recompute dataset norms).
+        self.x_sq = jnp.sum(self.x * self.x, axis=-1)
         self.kernel = kernel
         self.n = int(x.shape[0])
         self.d = int(x.shape[1])
@@ -97,11 +100,15 @@ class RSKDE(KDEBase):
 class StratifiedKDE(KDEBase):
     """Blocked stratified sampling: per-block uniform subsamples.
 
-    Unbiased: each block contributes |block| * mean(sampled kernel values).
-    Variance is the within-block variance only -- strictly <= RS variance at
-    equal sample count (law of total variance).  This is the TPU-native
-    estimator: each block is a contiguous VMEM tile and the subsample is a
-    strided load.
+    Unbiased: each block contributes |block| * mean(sampled kernel values) --
+    the tail block scales by its *realized* sample count, so padded slots
+    never inflate the estimate.  Variance is the within-block variance only
+    -- strictly <= RS variance at equal sample count (law of total
+    variance).  This is the TPU-native estimator: each block is a contiguous
+    VMEM tile and the subsample is a strided load.
+
+    ``block_sums`` is a single jitted device program (subsample indices are
+    drawn with ``jax.random`` inside the trace); no per-block host loop.
     """
 
     def __init__(self, x, kernel: Kernel, block_size: int = 256,
@@ -110,33 +117,32 @@ class StratifiedKDE(KDEBase):
         self.block_size = int(block_size)
         self.num_blocks = (self.n + self.block_size - 1) // self.block_size
         self.samples_per_block = min(int(samples_per_block), self.block_size)
-        self._rng = np.random.default_rng(seed)
+        self._key = jax.random.PRNGKey(seed)
 
     def _block_bounds(self, b: int):
         lo = b * self.block_size
         return lo, min(lo + self.block_size, self.n)
 
+    def _split(self) -> jnp.ndarray:
+        self._key, k = jax.random.split(self._key)
+        return k
+
+    def _static_cfg(self) -> dict:
+        from repro.kernels.kde_sampler.ref import static_pairwise
+        return dict(kind=self.kernel.name, inv_bw=1.0 / self.kernel.bandwidth,
+                    beta=getattr(self.kernel, "beta", 1.0),
+                    pairwise=static_pairwise(self.kernel),
+                    block_size=self.block_size,
+                    num_blocks=self.num_blocks, n=self.n)
+
     def block_sums(self, y: jnp.ndarray) -> jnp.ndarray:
         """(m, B) estimated per-block kernel sums -- the level-1 'tree' read."""
+        from repro.kernels.kde_sampler import ops as sampler_ops
         y = jnp.asarray(y, jnp.float32)
-        m = y.shape[0]
-        cols = []
-        sizes = []
-        for b in range(self.num_blocks):
-            lo, hi = self._block_bounds(b)
-            size = hi - lo
-            s = min(self.samples_per_block, size)
-            idx = lo + self._rng.choice(size, size=s, replace=False)
-            cols.append(np.pad(idx, (0, self.samples_per_block - s),
-                               constant_values=idx[0] if s else lo))
-            sizes.append(size * (1.0 / max(s, 1)))
-        idx = jnp.asarray(np.stack(cols))                 # (B, s)
-        scale = jnp.asarray(np.array(sizes), jnp.float32)  # (B,)
-        self.evals += m * idx.size
-        sub = self.x[idx.reshape(-1)]                      # (B*s, d)
-        kv = self.kernel.pairwise(y, sub)                  # (m, B*s)
-        kv = kv.reshape(m, self.num_blocks, self.samples_per_block)
-        return jnp.sum(kv, axis=-1) * scale[None, :]
+        self.evals += y.shape[0] * self.num_blocks * self.samples_per_block
+        return sampler_ops.stratified_block_sums(
+            y, self.x, self.x_sq, self._split(), s=self.samples_per_block,
+            **self._static_cfg())
 
     def query(self, y: jnp.ndarray) -> jnp.ndarray:
         return jnp.sum(self.block_sums(y), axis=-1)
@@ -148,24 +154,28 @@ class ExactBlockKDE(StratifiedKDE):
     Used where the sparsifier needs *reproducible* sampling probabilities
     (Algorithm 5.1 computes the probability q_uv with which the sampler picks
     an edge; a deterministic level-1 read makes q exactly recomputable).
+
+    With ``use_pallas=True`` the sweep dispatches to the ``blocksum_pallas``
+    TPU kernel; otherwise it is one jitted jnp program reusing the
+    precomputed ``x_sq`` norms.
     """
 
-    def __init__(self, x, kernel: Kernel, block_size: int = 256):
+    def __init__(self, x, kernel: Kernel, block_size: int = 256,
+                 use_pallas: bool = False):
         super().__init__(x, kernel, block_size=block_size,
                          samples_per_block=block_size)
+        self.use_pallas = use_pallas
 
     def block_sums(self, y: jnp.ndarray) -> jnp.ndarray:
         y = jnp.asarray(y, jnp.float32)
-        m = y.shape[0]
-        self.evals += m * self.n
-        pad = self.num_blocks * self.block_size - self.n
-        xp = jnp.pad(self.x, ((0, pad), (0, 0)))
-        kv = self.kernel.pairwise(y, xp)                   # (m, B*bs)
-        if pad:
-            mask = jnp.arange(xp.shape[0]) < self.n
-            kv = kv * mask[None, :]
-        kv = kv.reshape(m, self.num_blocks, self.block_size)
-        return jnp.sum(kv, axis=-1)
+        self.evals += y.shape[0] * self.n
+        if self.use_pallas:
+            from repro.kernels.kde_rowsum import ops as rs_ops
+            return rs_ops.kde_blocksum(y, self.x, self.kernel,
+                                       bn=self.block_size)
+        from repro.kernels.kde_sampler import ops as sampler_ops
+        return sampler_ops.exact_block_sums(y, self.x, self.x_sq,
+                                            **self._static_cfg())
 
 
 def make_estimator(name: str, x, kernel: Kernel, seed: int = 0,

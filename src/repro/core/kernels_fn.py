@@ -36,10 +36,18 @@ class Kernel:
     # Exponent p of tau in the state-of-the-art KDE query time (Table 1).
     kde_exponent: float
     bandwidth: float = 1.0
+    # Shape parameter (rational quadratic only); 1.0 elsewhere.
+    beta: float = 1.0
 
     def matrix(self, x: jnp.ndarray) -> jnp.ndarray:
         """Full kernel matrix K (for oracles / evaluation only)."""
         return self.pairwise(x, x)
+
+    def pairs(self, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+        """Elementwise k(x_i, y_i) for aligned (w, d) batches -- O(w d), not
+        the (w, w) matrix whose diagonal would be thrown away."""
+        return jax.vmap(lambda a, b: self.pairwise(a[None, :], b[None, :])[0, 0])(
+            jnp.asarray(x, jnp.float32), jnp.asarray(y, jnp.float32))
 
     def __call__(self, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
         return self.pairwise(x, y)
@@ -100,7 +108,7 @@ def rational_quadratic(beta: float = 1.0, bandwidth: float = 1.0) -> Kernel:
 
     # k^2 = (1+z)^{-2beta}: no squaring constant in general.
     return Kernel("rational_quadratic", pw, squaring_constant=None,
-                  kde_exponent=0.0, bandwidth=bandwidth)
+                  kde_exponent=0.0, bandwidth=bandwidth, beta=beta)
 
 
 _REGISTRY = {

@@ -9,11 +9,12 @@ Two interchangeable factorizations of the same telescoping product
 * ``mode="tree"``   -- the paper's dyadic descent: at every internal node,
   query the two child-segment KDE structures and branch proportionally;
   O(log n) KDE queries per sample, error (1 +- eps')^depth.
-* ``mode="blocked"``-- TPU-adapted depth-2 tree (DESIGN.md §2): one dense
-  Pallas/jnp sweep yields *all* sqrt(n)-block sums at once (level-1 read),
-  then the chosen block's <= sqrt(n) kernel values are computed exactly and
-  sampled exactly (level-2).  Same sampling law; one level of estimation
-  error instead of log n.
+* ``mode="blocked"``-- TPU-adapted depth-2 tree (DESIGN.md §2), executed by
+  the fused device engine (``repro.kernels.kde_sampler``): level-1 masked
+  block sums + Gumbel-max block draw + exact level-2 row + in-block draw
+  are ONE compiled program keyed on a ``jax.random.PRNGKey``.  No per-call
+  Python loops over blocks, one host->device transfer per batch (the
+  frontier indices), one device->host transfer for the results.
 
 Both modes vectorize over a batch of source vertices (random-walk frontier).
 ``sample`` returns the *realized* sampling probability of each drawn
@@ -21,13 +22,21 @@ neighbor, and ``prob_of`` evaluates the probability the sampler would assign
 to an arbitrary (u, v) -- both are required by the sparsifier (Alg 5.1 steps
 (c)-(d)).
 
+Level-1 caching contract (DESIGN.md §4): the masked block sums of the most
+recent frontier are kept on device; ``sample`` / ``prob_of`` /
+``sample_exact`` on the *same* frontier reuse them instead of re-sweeping
+the dataset, which makes ``prob_of`` exactly consistent with the estimates
+``sample`` realized and collapses the rejection rounds of Theorem 4.12 to
+one level-1 read.
+
 Theorem 4.12's exactness step (O(1/tau) rejection rounds) is implemented in
-``sample_exact`` as fixed-round vectorized accept/reject.
+``sample_exact`` as a fixed-round vectorized accept/reject program.
 """
 from __future__ import annotations
 
 from typing import Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -40,12 +49,17 @@ class NeighborSampler:
     def __init__(self, x: jnp.ndarray, kernel: Kernel, mode: str = "blocked",
                  block_size: Optional[int] = None, samples_per_block: int = 16,
                  exact_blocks: bool = False, tree: Optional[MultiLevelKDE] = None,
-                 seed: int = 0):
+                 seed: int = 0, use_pallas: Optional[bool] = None,
+                 interpret: Optional[bool] = None):
+        from repro.kernels.kde_sampler import ops as _ops
+        self._ops = _ops
         self.x = jnp.asarray(x, jnp.float32)
+        self.x_sq = jnp.sum(self.x * self.x, axis=-1)
         self.kernel = kernel
         self.n = int(x.shape[0])
         self.mode = mode
         self._rng = np.random.default_rng(seed)
+        self._key = jax.random.PRNGKey(seed)
         if mode == "blocked":
             bs = block_size or max(int(np.sqrt(self.n)), 16)
             if exact_blocks:
@@ -56,6 +70,25 @@ class NeighborSampler:
                                              seed=seed)
             self.block_size = self._blocks.block_size
             self.num_blocks = self._blocks.num_blocks
+            self.exact_blocks = exact_blocks
+            if use_pallas is None:
+                use_pallas = _ops.default_use_pallas()
+            if interpret is None:
+                interpret = jax.default_backend() != "tpu"
+            from repro.kernels.kde_sampler.ref import static_pairwise
+            # Static engine configuration shared by every jitted entry point.
+            self._cfg = dict(
+                kind=kernel.name, inv_bw=1.0 / kernel.bandwidth,
+                beta=getattr(kernel, "beta", 1.0),
+                pairwise=static_pairwise(kernel),
+                block_size=self.block_size, num_blocks=self.num_blocks,
+                n=self.n, s=self._blocks.samples_per_block,
+                exact=exact_blocks, use_pallas=bool(use_pallas),
+                interpret=bool(interpret), bm=128)
+            self._l2_cfg = {k: self._cfg[k] for k in
+                            ("kind", "inv_bw", "beta", "pairwise",
+                             "block_size", "n")}
+            self._l1_cache: Optional[Tuple[bytes, jnp.ndarray]] = None
         elif mode == "tree":
             assert tree is not None, "tree mode needs a MultiLevelKDE"
             self._tree = tree
@@ -72,61 +105,72 @@ class NeighborSampler:
     def _count(self, k: int):
         self._extra_evals = getattr(self, "_extra_evals", 0) + k
 
-    # ------------------------------------------------------------------ #
-    # blocked mode
-    def _masked_block_sums(self, src: np.ndarray) -> np.ndarray:
-        """Level-1: (w, B) block-sum estimates with the self-kernel removed
-        from each source's own block (Alg 4.11 lines (c)/(d))."""
-        q = self.x[jnp.asarray(src)]
-        bs = np.array(self._blocks.block_sums(q))            # (w, B) copy
-        own = src // self.block_size
-        bs[np.arange(len(src)), own] = np.maximum(
-            bs[np.arange(len(src)), own] - 1.0, 1e-12)       # k(x,x) = 1
-        return np.maximum(bs, 1e-12)
+    def _next_key(self) -> jnp.ndarray:
+        self._key, k = jax.random.split(self._key)
+        return k
 
-    def _in_block_row(self, src: np.ndarray, blk: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
-        """Level-2: exact kernel row of each src against its chosen block."""
-        w = len(src)
-        lo = blk * self.block_size
-        cols = lo[:, None] + np.arange(self.block_size)[None, :]
-        valid = cols < self.n
-        cols_c = np.minimum(cols, self.n - 1)
-        xs = self.x[jnp.asarray(src)]                        # (w, d)
-        xb = self.x[jnp.asarray(cols_c.reshape(-1))].reshape(w, self.block_size, -1)
-        kv = np.asarray(_pairwise_rows(self.kernel, xs, xb))
-        self._count(w * self.block_size)
-        kv = kv * valid
-        kv[cols_c == src[:, None]] = 0.0                     # mask self edge
-        return kv, cols_c
+    # ------------------------------------------------------------------ #
+    # blocked mode: fused device engine
+    def _level1_evals(self, w: int) -> int:
+        if self.exact_blocks:
+            return w * self.n
+        return w * self.num_blocks * self._cfg["s"]
+
+    @staticmethod
+    def _digest(src32: np.ndarray) -> bytes:
+        """Cache key for a frontier: dtype-normalized indices + length (raw
+        tobytes of caller-supplied arrays would collide across dtypes)."""
+        return src32.shape[0].to_bytes(8, "little") + src32.tobytes()
+
+    def _level1(self, src32: np.ndarray, src_dev: jnp.ndarray) -> jnp.ndarray:
+        """Masked level-1 block sums for a frontier, cached per frontier."""
+        dig = self._digest(src32)
+        if self._l1_cache is not None and self._l1_cache[0] == dig:
+            return self._l1_cache[1]
+        bs = self._ops.masked_block_sums(self.x, self.x_sq, src_dev,
+                                         self._next_key(),
+                                         **{k: self._cfg[k] for k in
+                                            ("kind", "inv_bw", "beta",
+                                             "pairwise", "block_size",
+                                             "num_blocks", "n", "s",
+                                             "exact")})
+        self._count(self._level1_evals(len(src32)))
+        self._l1_cache = (dig, bs)
+        return bs
 
     def sample(self, src: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
         """Sample one neighbor per source.  Returns (neighbors, probs)."""
         src = np.asarray(src)
         if self.mode == "tree":
             return self._sample_tree(src)
-        bs = self._masked_block_sums(src)                    # (w, B)
-        pb = bs / bs.sum(axis=1, keepdims=True)
-        blk = _categorical_rows(pb, self._rng)
-        kv, cols = self._in_block_row(src, blk)
-        rowsum = kv.sum(axis=1)
-        pin = kv / np.maximum(rowsum, 1e-30)[:, None]
-        j = _categorical_rows(pin, self._rng)
-        nb = cols[np.arange(len(src)), j]
-        prob = pb[np.arange(len(src)), blk] * pin[np.arange(len(src)), j]
-        return nb, prob
+        src32 = np.ascontiguousarray(src, np.int32)
+        src_dev = jnp.asarray(src32)
+        dig = self._digest(src32)
+        if self._l1_cache is not None and self._l1_cache[0] == dig:
+            nb, prob = self._ops.sample_from_block_sums(
+                self.x, self.x_sq, src_dev, self._l1_cache[1],
+                self._next_key(), **self._l2_cfg)
+        else:
+            nb, prob, bs = self._ops.fused_sample(
+                self.x, self.x_sq, src_dev, self._next_key(), **self._cfg)
+            self._count(self._level1_evals(len(src)))
+            self._l1_cache = (dig, bs)
+        self._count(len(src) * self.block_size)
+        return np.asarray(nb), np.asarray(prob)
 
     def prob_of(self, src: np.ndarray, dst: np.ndarray) -> np.ndarray:
         """Probability the sampler assigns to edge (src -> dst)."""
         src, dst = np.asarray(src), np.asarray(dst)
         if self.mode == "tree":
             return self._prob_of_tree(src, dst)
-        bs = self._masked_block_sums(src)
-        pb = bs / bs.sum(axis=1, keepdims=True)
-        blk = dst // self.block_size
-        kv, cols = self._in_block_row(src, blk)
-        rowsum = np.maximum(kv.sum(axis=1), 1e-30)
-        kd = kv[np.arange(len(src)), dst - blk * self.block_size]
-        return pb[np.arange(len(src)), blk] * kd / rowsum
+        src32 = np.ascontiguousarray(src, np.int32)
+        src_dev = jnp.asarray(src32)
+        bs = self._level1(src32, src_dev)
+        out = self._ops.prob_of_from_block_sums(
+            self.x, self.x_sq, src_dev, jnp.asarray(dst, jnp.int32), bs,
+            **self._l2_cfg)
+        self._count(len(src) * self.block_size)
+        return np.asarray(out)
 
     # ------------------------------------------------------------------ #
     # tree mode (faithful Algorithm 4.11)
@@ -195,26 +239,65 @@ class NeighborSampler:
         k(u,v) / (c * q(v) * Z_hat) where Z_hat estimates deg(u) and c covers
         the estimator distortion.  Vectorized fixed-round accept/reject; falls
         back to the last proposal if all rounds reject (prob (1-1/c)^rounds).
+
+        The level-1 read happens ONCE; all proposal rounds and the degree
+        estimate Z_hat share it (blocked mode).  The k(u, v) accept weights
+        are evaluated as w aligned pairs, not a (w, w) matrix diagonal.
         """
         src = np.asarray(src)
+        if self.mode == "tree":
+            return self._sample_exact_host(src, rounds, slack)
+        src32 = np.ascontiguousarray(src, np.int32)
+        src_dev = jnp.asarray(src32)
+        bs = self._level1(src32, src_dev)
+        cur = self._ops.fused_sample_exact(
+            self.x, self.x_sq, src_dev, bs, self._next_key(),
+            rounds=rounds, slack=slack, **self._l2_cfg)
+        self._count((rounds + 1) * len(src) * self.block_size
+                    + rounds * len(src))
+        return np.asarray(cur)
+
+    def _sample_exact_host(self, src: np.ndarray, rounds: int,
+                           slack: float) -> np.ndarray:
         cur, _ = self.sample(src)
-        if self.mode == "blocked":
-            zs = self._masked_block_sums(src).sum(axis=1)
-        else:
-            zs = np.maximum(np.asarray(
-                self._tree.segment_query(self.x[jnp.asarray(src)], 0, self._tree.n)) - 1.0, 1e-12)
+        zs = np.maximum(np.asarray(
+            self._tree.segment_query(self.x[jnp.asarray(src)], 0,
+                                     self._tree.n)) - 1.0, 1e-12)
         accepted = np.zeros(len(src), bool)
         for _ in range(rounds):
             cand, q = self.sample(src)
-            kuv = np.asarray(self.kernel.pairwise(
-                self.x[jnp.asarray(src)], self.x[jnp.asarray(cand)]))
-            kuv = np.diagonal(kuv)
+            kuv = np.asarray(self.kernel.pairs(self.x[jnp.asarray(src)],
+                                               self.x[jnp.asarray(cand)]))
             self._count(len(src))
             ratio = kuv / np.maximum(slack * q * zs, 1e-30)
-            acc = (~accepted) & (self._rng.uniform(size=len(src)) < np.minimum(ratio, 1.0))
+            acc = (~accepted) & (self._rng.uniform(size=len(src))
+                                 < np.minimum(ratio, 1.0))
             cur = np.where(acc, cand, cur)
             accepted |= acc
         return cur
+
+    # ------------------------------------------------------------------ #
+    def walk(self, starts: np.ndarray, length: int, exact: bool = False,
+             rounds: int = 8, slack: float = 2.0,
+             key: Optional[jnp.ndarray] = None):
+        """Run |starts| walks of ``length`` steps entirely on device
+        (blocked mode): the frontier is ``lax.scan`` carry and every step is
+        one fused depth-2 sample.  Returns (endpoints, (length, w) path) as
+        numpy arrays."""
+        assert self.mode == "blocked", "device walks need blocked mode"
+        starts_dev = jnp.asarray(starts, jnp.int32)
+        keys = jax.random.split(self._next_key() if key is None else key,
+                                length)
+        end, path = self._ops.walk_scan(
+            self.x, self.x_sq, starts_dev, keys,
+            rounds=rounds if exact else 0, slack=slack, **self._cfg)
+        w = len(np.asarray(starts))
+        per_step = self._level1_evals(w) + w * self.block_size
+        if exact:
+            per_step += rounds * (w * self.block_size + w)
+        self._count(length * per_step)
+        self._l1_cache = None  # frontier moved; cached sums are stale
+        return np.asarray(end), np.asarray(path)
 
 
 class EdgeSampler:
@@ -232,19 +315,16 @@ class EdgeSampler:
         return u, v, self.deg.prob(u) * q
 
 
-def _pairwise_rows(kernel: Kernel, xs: jnp.ndarray, xb: jnp.ndarray) -> jnp.ndarray:
-    """k(xs_i, xb_i_j) for batched per-row blocks: xs (w, d), xb (w, bs, d)."""
-    import jax
-
-    def one(a, b):
-        return kernel.pairwise(a[None, :], b)[0]
-
-    return jax.vmap(one)(xs, xb)
-
-
 def _categorical_rows(p: np.ndarray, rng) -> np.ndarray:
-    """Sample one index per row of a row-stochastic matrix."""
+    """Sample one index per row of a nonnegative matrix (rows need not be
+    normalized).  All-zero rows fall back to a uniform draw instead of
+    propagating NaN through the division by the row total."""
     c = np.cumsum(p, axis=1)
-    c = c / c[:, -1:]
+    tot = c[:, -1:]
+    dead = tot <= 0.0
+    uniform = np.broadcast_to(
+        np.arange(1, p.shape[1] + 1, dtype=np.float64)[None, :] / p.shape[1],
+        c.shape)
+    c = np.where(dead, uniform, c / np.where(dead, 1.0, tot))
     u = rng.uniform(size=(p.shape[0], 1))
     return (u > c).sum(axis=1).clip(0, p.shape[1] - 1)

@@ -2,8 +2,10 @@
 
 T steps = T neighbor-sampling calls; total variation error O(T * eps), or the
 true walk distribution with the rejection-sampling exactness step.  Walks are
-vectorized over the frontier (every step advances all walkers with one
-level-1 sweep + one level-2 gather).
+vectorized over the frontier; in blocked mode the whole T-step walk is one
+compiled ``lax.scan`` program -- the frontier stays on device between steps
+(DESIGN.md §3), with one transfer in (starts) and one out (endpoints/path).
+Tree mode falls back to the host step loop.
 """
 from __future__ import annotations
 
@@ -16,7 +18,16 @@ def random_walks(sampler: NeighborSampler, starts: np.ndarray, length: int,
                  exact: bool = False, record_path: bool = False):
     """Run |starts| walks of ``length`` steps.  Returns endpoints (and the
     full (length+1, w) path if requested)."""
-    cur = np.asarray(starts).copy()
+    starts = np.asarray(starts)
+    if length <= 0:
+        cur = starts.copy()
+        return (cur, starts[None].copy()) if record_path else cur
+    if getattr(sampler, "mode", None) == "blocked":
+        end, path = sampler.walk(starts, length, exact=exact)
+        if record_path:
+            return end, np.concatenate([starts[None], np.asarray(path)])
+        return end
+    cur = starts.copy()
     path = [cur.copy()] if record_path else None
     for _ in range(length):
         if exact:

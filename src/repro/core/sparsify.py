@@ -79,6 +79,7 @@ def spectral_sparsify(x, kernel: Kernel, num_edges: int,
                           exact_blocks=exact_blocks,
                           samples_per_block=samples_per_block)
     t = int(num_edges)
+    xd = nbr.x  # device-resident dataset shared with the sampler
     srcs, dsts, ws = [], [], []
     for lo in range(0, t, batch):
         b = min(batch, t - lo)
@@ -91,9 +92,7 @@ def spectral_sparsify(x, kernel: Kernel, num_edges: int,
         # The reweighting makes E[L_G'] = sum_e q_e * w_e * L_e = L_G / ...
         # each sampled edge contributes w_e * k(u,v) to the sparsifier, i.e.
         # edge weight k(u,v) / (t q_e).
-        kuv = np.asarray(kernel.pairwise(
-            jnp.asarray(x)[jnp.asarray(u)], jnp.asarray(x)[jnp.asarray(v)]))
-        kuv = np.diagonal(kuv)
+        kuv = np.asarray(kernel.pairs(xd[jnp.asarray(u)], xd[jnp.asarray(v)]))
         srcs.append(u)
         dsts.append(v)
         ws.append(w * kuv)

@@ -1,8 +1,10 @@
 """jit'd public wrappers for the kde_rowsum Pallas kernel.
 
 Handles padding to block multiples: padded x rows are placed at +PAD_OFFSET
-in every coordinate, which drives all supported kernels to ~0 (exp underflow
-/ rational-quadratic decay), so no masking is needed inside the kernel.
+in every coordinate, which drives the squared distance to f32 ``inf`` and
+therefore every supported kernel to exactly 0 -- including heavy-tailed
+rational quadratic with small beta, where a merely-large finite distance
+would leave a non-negligible value.  No masking is needed inside the kernel.
 """
 from __future__ import annotations
 
@@ -15,7 +17,8 @@ from repro.core.kernels_fn import Kernel
 from repro.kernels.kde_rowsum import kernel as _k
 from repro.kernels.kde_rowsum import ref as _ref
 
-_PAD_OFFSET = 1.0e6
+# ||pad||^2 = d * 1e60 overflows f32 -> d2 = inf -> k = 0 for every kind.
+_PAD_OFFSET = 1.0e30
 
 
 def _pad_rows(a: jnp.ndarray, mult: int, offset: float) -> jnp.ndarray:
@@ -42,7 +45,7 @@ def kde_rowsum(q, x, kernel: Kernel, bm: int = 128, bn: int = 512,
     """KDE oracle: (m,) row sums of the kernel matrix block k(q, x)."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    beta = 1.0
+    beta = getattr(kernel, "beta", 1.0)
     inv_bw = 1.0 / kernel.bandwidth
     return _rowsum(jnp.asarray(q, jnp.float32), jnp.asarray(x, jnp.float32),
                    kernel.name, inv_bw, beta, bm, bn, interpret)
@@ -65,7 +68,8 @@ def kde_blocksum(q, x, kernel: Kernel, bm: int = 128, bn: int = 256,
         interpret = jax.default_backend() != "tpu"
     inv_bw = 1.0 / kernel.bandwidth
     return _blocksum(jnp.asarray(q, jnp.float32), jnp.asarray(x, jnp.float32),
-                     kernel.name, inv_bw, 1.0, bm, bn, interpret)
+                     kernel.name, inv_bw, getattr(kernel, "beta", 1.0), bm,
+                     bn, interpret)
 
 
 # re-exported oracles for tests

@@ -1,0 +1,1 @@
+"""Fused device-resident depth-2 neighbor sampling engine (DESIGN.md §3)."""

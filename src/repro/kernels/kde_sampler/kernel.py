@@ -1,0 +1,96 @@
+"""Pallas TPU kernel: fused level-1 read of the depth-2 neighbor sampler.
+
+One pass over the dataset per query tile computes the masked per-block
+kernel sums (self-kernel k(x, x) = 1 subtracted from each source's own
+block, Alg 4.11 lines (c)/(d)) AND draws the block index by Gumbel-max over
+``log(block_sum) + g`` -- so the sampler's block choice never materializes
+an (m, B) matrix round-trip through the host (DESIGN.md §3).
+
+Grid: (m/bm, B) with one x block per j-step.  The running Gumbel argmax,
+the winning block's sum, and the total (= masked degree estimate) live in
+VMEM scratch and are flushed on the last j-step (revisiting output
+pattern, identical to ``kde_rowsum``).  Gumbel noise is drawn outside with
+``jax.random`` and streamed in as an (m, B) input so compiled and
+interpret-mode runs are reproducible from one PRNGKey.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.kde_rowsum.kernel import _tile_kernel_values
+
+_FLOOR = 1e-12  # == ref.BLOCK_SUM_FLOOR
+
+
+def _sample_block_kernel(q_ref, own_ref, g_ref, x_ref,
+                         blk_ref, pb_ref, tot_ref, bs_ref,
+                         max_ref, arg_ref, best_ref, acc_ref,
+                         *, kind, inv_bw, beta):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _():
+        max_ref[...] = jnp.full_like(max_ref, -jnp.inf)
+        arg_ref[...] = jnp.zeros_like(arg_ref)
+        best_ref[...] = jnp.zeros_like(best_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kv = _tile_kernel_values(q_ref[...], x_ref[...], kind, inv_bw, beta)
+    s = jnp.sum(kv, axis=1)                         # (bm,) this block's sums
+    own = own_ref[...][:, 0]
+    s = jnp.where(own == j, s - 1.0, s)             # k(x, x) = 1 self mask
+    s = jnp.maximum(s, _FLOOR)
+    bs_ref[...] = s[:, None]
+
+    score = jnp.log(s) + g_ref[...][:, 0]
+    upd = score > max_ref[...]
+    arg_ref[...] = jnp.where(upd, jnp.full_like(arg_ref, j), arg_ref[...])
+    best_ref[...] = jnp.where(upd, s, best_ref[...])
+    max_ref[...] = jnp.maximum(max_ref[...], score)
+    acc_ref[...] += s
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _():
+        blk_ref[...] = arg_ref[...]
+        tot_ref[...] = acc_ref[...]
+        pb_ref[...] = best_ref[...] / acc_ref[...]
+
+
+def sample_block_pallas(q: jnp.ndarray, x: jnp.ndarray, own: jnp.ndarray,
+                        gumbel: jnp.ndarray, kind: str, inv_bw: float,
+                        beta: float = 1.0, bm: int = 128, bn: int = 256,
+                        interpret: bool = False):
+    """q (m, d), x (n, d), own (m, 1) int32, gumbel (m, n/bn) ->
+    (blk (m,) int32, p_blk (m,), tot (m,), block_sums (m, n/bn)).
+    m, n must be multiples of bm, bn; padded queries use own = -1."""
+    m, d = q.shape
+    n = x.shape[0]
+    nb = n // bn
+    body = functools.partial(_sample_block_kernel, kind=kind, inv_bw=inv_bw,
+                             beta=beta)
+    return pl.pallas_call(
+        body,
+        grid=(m // bm, nb),
+        in_specs=[pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
+                  pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),
+                  pl.BlockSpec((bm, 1), lambda i, j: (i, j)),
+                  pl.BlockSpec((bn, d), lambda i, j: (j, 0))],
+        out_specs=[pl.BlockSpec((bm,), lambda i, j: (i,)),
+                   pl.BlockSpec((bm,), lambda i, j: (i,)),
+                   pl.BlockSpec((bm,), lambda i, j: (i,)),
+                   pl.BlockSpec((bm, 1), lambda i, j: (i, j))],
+        out_shape=[jax.ShapeDtypeStruct((m,), jnp.int32),
+                   jax.ShapeDtypeStruct((m,), jnp.float32),
+                   jax.ShapeDtypeStruct((m,), jnp.float32),
+                   jax.ShapeDtypeStruct((m, nb), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((bm,), jnp.float32),
+                        pltpu.VMEM((bm,), jnp.int32),
+                        pltpu.VMEM((bm,), jnp.float32),
+                        pltpu.VMEM((bm,), jnp.float32)],
+        interpret=interpret,
+    )(q, own, gumbel, x)

@@ -1,0 +1,349 @@
+"""Device-resident fused depth-2 neighbor sampling engine (DESIGN.md §3).
+
+One walk step = ONE compiled program: level-1 masked block sums (Pallas on
+TPU, jnp sweep elsewhere), Gumbel-max block draw, level-2 exact in-block
+row, and the in-block categorical draw -- no host sync between stages.
+``jax.random`` keys drive all randomness, so every path is jit-compatible
+and reproducible.
+
+Public entry points (all jitted; static config is passed by keyword):
+
+* ``stratified_block_sums`` / ``exact_block_sums`` -- vectorized level-1
+  reads used by ``core.kde.base`` (the stratified path masks padded tail
+  samples out of the sum and scales by the *realized* per-block sample
+  count, fixing the seed's padding bias).
+* ``fused_sample``            -- full depth-2 step; also returns the masked
+  level-1 sums so callers can cache them (DESIGN.md §4).
+* ``sample_from_block_sums``  -- depth-2 step reusing cached level-1 sums.
+* ``prob_of_from_block_sums`` -- q(dst | src) from cached level-1 sums.
+* ``fused_sample_exact``      -- Theorem 4.12 rejection rounds, one program.
+* ``walk_scan``               -- T walk steps under ``lax.scan``; the
+  frontier never leaves the device.
+
+``TRACE_COUNTS`` increments only while a function is being traced --
+tests use it to certify that repeated calls hit the compiled path.
+"""
+from __future__ import annotations
+
+import collections
+import functools
+import inspect
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.kde_rowsum.ops import _PAD_OFFSET, _pad_rows
+from repro.kernels.kde_sampler import kernel as _k
+from repro.kernels.kde_sampler import ref as _ref
+
+TRACE_COUNTS = collections.Counter()
+
+# Static (hashable) configuration forwarded to every jitted entry point.
+_STATIC = frozenset((
+    "kind", "inv_bw", "beta", "pairwise", "block_size", "num_blocks",
+    "n", "s", "exact", "use_pallas", "interpret", "bm", "rounds", "slack"))
+
+
+def _jit(fn):
+    """jit with the subset of _STATIC names this function actually takes."""
+    names = tuple(p for p in inspect.signature(fn).parameters if p in _STATIC)
+    return jax.jit(fn, static_argnames=names)
+
+
+def default_use_pallas() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+# --------------------------------------------------------------------- #
+# level-1: (m, B) block-sum reads
+# --------------------------------------------------------------------- #
+@_jit
+def stratified_block_sums(y, x, x_sq, key, *, kind, inv_bw, beta, pairwise,
+                          block_size, num_blocks, n, s):
+    """Per-block uniform-subsample estimates of the block sums, (m, B).
+
+    Each block contributes ``size_b / s_b * sum(sampled kernel values)``
+    where ``s_b = min(s, size_b)`` counts only *real* (non-padded) samples:
+    the tail block is no longer inflated by duplicated pad indices.
+    """
+    TRACE_COUNTS["stratified_block_sums"] += 1
+    m = y.shape[0]
+    base = jnp.arange(num_blocks, dtype=jnp.int32) * block_size
+    pos = base[:, None] + jnp.arange(block_size, dtype=jnp.int32)[None, :]
+    valid_pos = pos < n
+    u = jax.random.uniform(key, (num_blocks, block_size))
+    u = jnp.where(valid_pos, u, jnp.inf)          # invalid slots sort last
+    _, order = jax.lax.top_k(-u, s)               # (B, s) w/o replacement
+    idx = jnp.take_along_axis(pos, order, axis=1)
+    sel_valid = jnp.take_along_axis(valid_pos, order, axis=1)
+    idx = jnp.minimum(idx, n - 1)
+    flat = idx.reshape(-1)
+    kv = _ref.kv_matrix(y, x[flat], x_sq[flat], kind, inv_bw, beta, pairwise)
+    kv = kv.reshape(m, num_blocks, s) * sel_valid[None]
+    sizes = jnp.minimum(n - base, block_size).astype(jnp.float32)
+    s_b = jnp.minimum(sizes, float(s))
+    return kv.sum(-1) * (sizes / jnp.maximum(s_b, 1.0))[None, :]
+
+
+@_jit
+def exact_block_sums(y, x, x_sq, *, kind, inv_bw, beta, pairwise,
+                     block_size, num_blocks, n):
+    """Exact (m, B) block sums: one dense vectorized sweep, zero host loops."""
+    TRACE_COUNTS["exact_block_sums"] += 1
+    m = y.shape[0]
+    kv = _ref.kv_matrix(y, x, x_sq, kind, inv_bw, beta, pairwise)
+    pad = num_blocks * block_size - n
+    if pad:
+        kv = jnp.pad(kv, ((0, 0), (0, pad)))
+    return kv.reshape(m, num_blocks, block_size).sum(-1)
+
+
+def _masked_block_sums(x, x_sq, src, key, *, kind, inv_bw, beta, pairwise,
+                       block_size, num_blocks, n, s, exact):
+    """Level-1 sums for a frontier of dataset indices, own-block corrected
+    (k(x, x) = 1 subtracted) and floored -- the cacheable object."""
+    q = x[src]
+    if exact:
+        bs = exact_block_sums(q, x, x_sq, kind=kind, inv_bw=inv_bw, beta=beta,
+                              pairwise=pairwise, block_size=block_size,
+                              num_blocks=num_blocks, n=n)
+    else:
+        bs = stratified_block_sums(q, x, x_sq, key, kind=kind, inv_bw=inv_bw,
+                                   beta=beta, pairwise=pairwise,
+                                   block_size=block_size,
+                                   num_blocks=num_blocks, n=n, s=s)
+    own = (src // block_size).astype(jnp.int32)
+    corr = jnp.arange(num_blocks, dtype=jnp.int32)[None, :] == own[:, None]
+    bs = jnp.where(corr, bs - 1.0, bs)
+    return jnp.maximum(bs, _ref.BLOCK_SUM_FLOOR)
+
+
+@_jit
+def masked_block_sums(x, x_sq, src, key, *, kind, inv_bw, beta, pairwise,
+                      block_size, num_blocks, n, s, exact):
+    TRACE_COUNTS["masked_block_sums"] += 1
+    return _masked_block_sums(x, x_sq, src, key, kind=kind, inv_bw=inv_bw,
+                              beta=beta, pairwise=pairwise,
+                              block_size=block_size, num_blocks=num_blocks,
+                              n=n, s=s, exact=exact)
+
+
+# --------------------------------------------------------------------- #
+# level-2: exact in-block rows
+# --------------------------------------------------------------------- #
+def _block_views(x, x_sq, block_size):
+    """(B, bs, d) / (B, bs) contiguous views of the (padded) dataset.
+    Built once per compiled program (hoisted out of walk-scan bodies); the
+    level-2 read then gathers w whole block *slices* instead of w*bs
+    random rows."""
+    pad = -x.shape[0] % block_size
+    xb_all = jnp.pad(x, ((0, pad), (0, 0))).reshape(-1, block_size,
+                                                    x.shape[1])
+    xb_sq_all = jnp.pad(x_sq, (0, pad)).reshape(-1, block_size)
+    return xb_all, xb_sq_all
+
+
+def _level2_kv(x, x_sq, views, src, blk, *, kind, inv_bw, beta, pairwise,
+               block_size, n):
+    """Exact kernel row of each source against its chosen block, with the
+    self edge and out-of-range tail columns masked to 0."""
+    xb_all, xb_sq_all = views
+    lo = blk * block_size
+    cols = lo[:, None] + jnp.arange(block_size, dtype=jnp.int32)[None, :]
+    valid = cols < n
+    cols_c = jnp.minimum(cols, n - 1)
+    xs = x[src]
+    kv = _ref.kv_rows(xs, xb_all[blk], x_sq[src], xb_sq_all[blk], kind,
+                      inv_bw, beta, pairwise)
+    live = valid & (cols_c != src[:, None])
+    return jnp.where(live, kv, 0.0), live, cols_c
+
+
+def _level2_draw(kv, live, cols_c, u2):
+    """Inverse-CDF draw from each row of ``kv``; all-zero rows (numerically
+    underflowed blocks) fall back to uniform over the live columns instead
+    of producing NaN."""
+    rowsum = kv.sum(axis=1)
+    use = jnp.where((rowsum > 0.0)[:, None], kv, live.astype(jnp.float32))
+    c = jnp.cumsum(use, axis=1)
+    tot = c[:, -1]
+    j = jnp.sum((u2 * tot)[:, None] > c, axis=1).clip(0, kv.shape[1] - 1)
+    nb = jnp.take_along_axis(cols_c, j[:, None], axis=1)[:, 0]
+    pin = jnp.take_along_axis(use, j[:, None], axis=1)[:, 0] \
+        / jnp.maximum(tot, 1e-30)
+    return nb, pin
+
+
+def _choose_block(bs, key):
+    """Exact inverse-CDF categorical over rows of the (floored) block
+    sums.  (The Pallas kernel uses Gumbel-max instead because it streams
+    blocks one at a time; both are exact samplers of the same law.)"""
+    c = jnp.cumsum(bs, axis=1)
+    tot = c[:, -1]
+    u = jax.random.uniform(key, (bs.shape[0],))
+    blk = jnp.sum((u * tot)[:, None] > c, axis=1).astype(jnp.int32)
+    blk = blk.clip(0, bs.shape[1] - 1)
+    pb = jnp.take_along_axis(bs, blk[:, None], axis=1)[:, 0] / tot
+    return blk, pb
+
+
+def _sample_core(x, x_sq, views, src, bs, key, *, kind, inv_bw, beta,
+                 pairwise, block_size, n):
+    """(block draw -> level-2 row -> neighbor draw) from given level-1 sums."""
+    k_blk, k_in = jax.random.split(key)
+    blk, pb = _choose_block(bs, k_blk)
+    kv, live, cols_c = _level2_kv(x, x_sq, views, src, blk, kind=kind,
+                                  inv_bw=inv_bw, beta=beta, pairwise=pairwise,
+                                  block_size=block_size, n=n)
+    nb, pin = _level2_draw(kv, live, cols_c,
+                           jax.random.uniform(k_in, (src.shape[0],)))
+    return nb, pb * pin
+
+
+def _fused_sample(x, x_sq, src, key, *, kind, inv_bw, beta, pairwise,
+                  block_size, num_blocks, n, s, exact, use_pallas, interpret,
+                  bm, views=None):
+    if views is None:
+        views = _block_views(x, x_sq, block_size)
+    k_l1, k_rest = jax.random.split(key)
+    if exact and use_pallas:
+        # Fully fused level-1: block sums + Gumbel-max draw in one Pallas pass.
+        w = src.shape[0]
+        rem = (-w) % bm
+        k_g, k_in = jax.random.split(k_rest)
+        q = _pad_rows(x[src], bm, 0.0)
+        own = jnp.pad((src // block_size).astype(jnp.int32), (0, rem),
+                      constant_values=-1)[:, None]
+        gp = jnp.pad(jax.random.gumbel(k_g, (w, num_blocks)),
+                     ((0, rem), (0, 0)))
+        xp = _pad_rows(x, block_size, _PAD_OFFSET)
+        blk, pb, _, bs = _k.sample_block_pallas(
+            q, xp, own, gp, kind, inv_bw, beta, bm=bm, bn=block_size,
+            interpret=interpret)
+        blk, pb, bs = blk[:w], pb[:w], bs[:w]
+        kv, live, cols_c = _level2_kv(x, x_sq, views, src, blk, kind=kind,
+                                      inv_bw=inv_bw, beta=beta,
+                                      pairwise=pairwise,
+                                      block_size=block_size, n=n)
+        nb, pin = _level2_draw(kv, live, cols_c,
+                               jax.random.uniform(k_in, (w,)))
+        return nb, pb * pin, bs
+    bs = _masked_block_sums(x, x_sq, src, k_l1, kind=kind, inv_bw=inv_bw,
+                            beta=beta, pairwise=pairwise,
+                            block_size=block_size, num_blocks=num_blocks,
+                            n=n, s=s, exact=exact)
+    nb, prob = _sample_core(x, x_sq, views, src, bs, k_rest, kind=kind,
+                            inv_bw=inv_bw, beta=beta, pairwise=pairwise,
+                            block_size=block_size, n=n)
+    return nb, prob, bs
+
+
+@_jit
+def fused_sample(x, x_sq, src, key, *, kind, inv_bw, beta, pairwise,
+                 block_size, num_blocks, n, s, exact, use_pallas, interpret,
+                 bm):
+    """One depth-2 sampling step: (neighbors, realized probs, level-1 sums)."""
+    TRACE_COUNTS["fused_sample"] += 1
+    return _fused_sample(x, x_sq, src, key, kind=kind, inv_bw=inv_bw,
+                         beta=beta, pairwise=pairwise, block_size=block_size,
+                         num_blocks=num_blocks, n=n, s=s, exact=exact,
+                         use_pallas=use_pallas, interpret=interpret, bm=bm)
+
+
+@_jit
+def sample_from_block_sums(x, x_sq, src, bs, key, *, kind, inv_bw, beta,
+                           pairwise, block_size, n):
+    """Depth-2 step reusing cached level-1 sums (no dataset re-sweep)."""
+    TRACE_COUNTS["sample_from_block_sums"] += 1
+    views = _block_views(x, x_sq, block_size)
+    return _sample_core(x, x_sq, views, src, bs, key, kind=kind,
+                        inv_bw=inv_bw, beta=beta, pairwise=pairwise,
+                        block_size=block_size, n=n)
+
+
+@_jit
+def prob_of_from_block_sums(x, x_sq, src, dst, bs, *, kind, inv_bw, beta,
+                            pairwise, block_size, n):
+    """q(dst | src) the sampler assigns, from cached level-1 sums."""
+    TRACE_COUNTS["prob_of_from_block_sums"] += 1
+    views = _block_views(x, x_sq, block_size)
+    blk = (dst // block_size).astype(jnp.int32)
+    pb = jnp.take_along_axis(bs, blk[:, None], axis=1)[:, 0] / bs.sum(axis=1)
+    kv, _, _ = _level2_kv(x, x_sq, views, src, blk, kind=kind, inv_bw=inv_bw,
+                          beta=beta, pairwise=pairwise,
+                          block_size=block_size, n=n)
+    kd = jnp.take_along_axis(kv, (dst - blk * block_size)[:, None],
+                             axis=1)[:, 0]
+    return pb * kd / jnp.maximum(kv.sum(axis=1), 1e-30)
+
+
+def _sample_exact_core(x, x_sq, views, src, bs, key, *, kind, inv_bw, beta,
+                       pairwise, block_size, n, rounds, slack):
+    zs = bs.sum(axis=1)
+    keys = jax.random.split(key, 2 * rounds + 1)
+    cur, _ = _sample_core(x, x_sq, views, src, bs, keys[0], kind=kind,
+                          inv_bw=inv_bw, beta=beta, pairwise=pairwise,
+                          block_size=block_size, n=n)
+    accepted = jnp.zeros(src.shape[0], bool)
+    xs = x[src]
+    for r in range(rounds):
+        cand, q = _sample_core(x, x_sq, views, src, bs, keys[2 * r + 1],
+                               kind=kind, inv_bw=inv_bw, beta=beta,
+                               pairwise=pairwise, block_size=block_size, n=n)
+        kuv = _ref.kv_pairs(xs, x[cand], kind, inv_bw, beta, pairwise)
+        ratio = kuv / jnp.maximum(slack * q * zs, 1e-30)
+        u = jax.random.uniform(keys[2 * r + 2], (src.shape[0],))
+        acc = (~accepted) & (u < jnp.minimum(ratio, 1.0))
+        cur = jnp.where(acc, cand, cur)
+        accepted |= acc
+    return cur
+
+
+@_jit
+def fused_sample_exact(x, x_sq, src, bs, key, *, kind, inv_bw, beta, pairwise,
+                       block_size, n, rounds, slack):
+    """Theorem 4.12 rejection rounds in one program.  The cached level-1
+    sums ``bs`` are shared across every proposal round AND the degree
+    estimate -- the seed re-swept the dataset once per round."""
+    TRACE_COUNTS["fused_sample_exact"] += 1
+    views = _block_views(x, x_sq, block_size)
+    return _sample_exact_core(x, x_sq, views, src, bs, key, kind=kind,
+                              inv_bw=inv_bw, beta=beta, pairwise=pairwise,
+                              block_size=block_size, n=n, rounds=rounds,
+                              slack=slack)
+
+
+@_jit
+def walk_scan(x, x_sq, starts, keys, *, kind, inv_bw, beta, pairwise,
+              block_size, num_blocks, n, s, exact, use_pallas, interpret, bm,
+              rounds, slack):
+    """T-step random walk entirely on device: the frontier is scan carry,
+    each step is one fused depth-2 sample (or rejection-exact step when
+    ``rounds > 0``).  Returns (endpoints, (T, w) path)."""
+    TRACE_COUNTS["walk_scan"] += 1
+    views = _block_views(x, x_sq, block_size)  # hoisted out of the step body
+
+    def body(cur, k):
+        if rounds > 0:
+            k_l1, k_rs = jax.random.split(k)
+            bs = _masked_block_sums(x, x_sq, cur, k_l1, kind=kind,
+                                    inv_bw=inv_bw, beta=beta,
+                                    pairwise=pairwise, block_size=block_size,
+                                    num_blocks=num_blocks, n=n, s=s,
+                                    exact=exact)
+            nxt = _sample_exact_core(x, x_sq, views, cur, bs, k_rs, kind=kind,
+                                     inv_bw=inv_bw, beta=beta,
+                                     pairwise=pairwise, block_size=block_size,
+                                     n=n, rounds=rounds, slack=slack)
+        else:
+            nxt, _, _ = _fused_sample(x, x_sq, cur, k, kind=kind,
+                                      inv_bw=inv_bw, beta=beta,
+                                      pairwise=pairwise,
+                                      block_size=block_size,
+                                      num_blocks=num_blocks, n=n, s=s,
+                                      exact=exact, use_pallas=use_pallas,
+                                      interpret=interpret, bm=bm, views=views)
+        return nxt, nxt
+
+    end, path = jax.lax.scan(body, starts, keys)
+    return end, path

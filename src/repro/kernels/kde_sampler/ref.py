@@ -1,0 +1,116 @@
+"""Pure-jnp oracle + shared kernel-value math for the fused depth-2 sampler.
+
+``sample_block_ref`` is the bit-for-bit reference of the Pallas kernel in
+``kernel.py``: masked per-block sums with the self-block correction applied
+in the same pass, plus a Gumbel-max draw of the block index.  The kernel
+values reuse squared norms precomputed once over the dataset (``x_sq``) --
+the level-1 read never recomputes ``||x_j||^2`` (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_L2_KINDS = ("gaussian", "exponential", "rational_quadratic")
+# Kinds with closed-form math in this module: their jitted programs don't
+# need (and must not be keyed on) a Kernel's pairwise closure.
+BUILTIN_KINDS = _L2_KINDS + ("laplacian",)
+
+
+def static_pairwise(kernel):
+    """The ``pairwise`` value to put in a jit static config for ``kernel``:
+    None for built-in kinds (stable jit cache across Kernel instances),
+    the kernel's own callable for custom kinds."""
+    return None if kernel.name in BUILTIN_KINDS else kernel.pairwise
+
+# Floor applied to every (corrected) block-sum estimate, matching the seed
+# host sampler: keeps log() finite and the own-block sum positive after the
+# k(x, x) = 1 subtraction.
+BLOCK_SUM_FLOOR = 1e-12
+
+
+def _finish_l2(d2, kind: str, inv_bw: float, beta: float):
+    d2 = jnp.maximum(d2, 0.0)
+    if kind == "gaussian":
+        return jnp.exp(-d2 * (inv_bw * inv_bw))
+    if kind == "exponential":
+        return jnp.exp(-jnp.sqrt(d2) * inv_bw)
+    return (1.0 + d2 * (inv_bw * inv_bw)) ** (-beta)
+
+
+def kv_matrix(q, x, x_sq, kind: str, inv_bw: float, beta: float,
+              pairwise=None) -> jnp.ndarray:
+    """(m, n) kernel values; L2 kinds reuse precomputed ``x_sq = ||x_j||^2``.
+
+    Built-in kinds never touch ``pairwise`` -- keeping it out of the jit
+    static key means one compiled program per (kind, inv_bw, beta), not one
+    per ``Kernel`` instance.  Unknown kinds (custom ``Kernel`` objects) fall
+    back to the ``pairwise`` callable.
+    """
+    if kind in _L2_KINDS:
+        qq = jnp.sum(q * q, axis=1, keepdims=True)
+        d2 = qq + x_sq[None, :] - 2.0 * (q @ x.T)
+        return _finish_l2(d2, kind, inv_bw, beta)
+    if kind == "laplacian":
+        # cap the (m, n, d) broadcast at ~1 GiB of f32 (static unroll)
+        m, d = q.shape
+        n = x.shape[0]
+        chunk = max(int((1 << 28) // max(n * d, 1)), 1)
+        outs = [jnp.exp(-jnp.sum(jnp.abs(q[lo:lo + chunk, None, :]
+                                         - x[None, :, :]), axis=-1) * inv_bw)
+                for lo in range(0, m, chunk)]
+        return outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=0)
+    return pairwise(q, x)
+
+
+def kv_rows(xs, xb, xs_sq, xb_sq, kind: str, inv_bw: float, beta: float,
+            pairwise=None) -> jnp.ndarray:
+    """Per-row block values k(xs_i, xb_i_j): xs (w, d), xb (w, bs, d) ->
+    (w, bs).  The level-2 read of the depth-2 sampler."""
+    if kind in _L2_KINDS:
+        cross = jnp.einsum("wd,wbd->wb", xs, xb)
+        d2 = xs_sq[:, None] + xb_sq - 2.0 * cross
+        return _finish_l2(d2, kind, inv_bw, beta)
+    if kind == "laplacian":
+        d1 = jnp.sum(jnp.abs(xs[:, None, :] - xb), axis=-1)
+        return jnp.exp(-d1 * inv_bw)
+    return jax.vmap(lambda a, b: pairwise(a[None, :], b)[0])(xs, xb)
+
+
+def kv_pairs(a, b, kind: str, inv_bw: float, beta: float,
+             pairwise=None) -> jnp.ndarray:
+    """Elementwise k(a_i, b_i) for aligned (w, d) arrays -- O(w d)."""
+    if kind in _L2_KINDS:
+        d2 = jnp.sum((a - b) ** 2, axis=-1)
+        return _finish_l2(d2, kind, inv_bw, beta)
+    if kind == "laplacian":
+        d1 = jnp.sum(jnp.abs(a - b), axis=-1)
+        return jnp.exp(-d1 * inv_bw)
+    return jax.vmap(lambda u, v: pairwise(u[None, :], v[None, :])[0, 0])(a, b)
+
+
+def masked_block_sums_ref(q, x, x_sq, own, kind: str, inv_bw: float,
+                          beta: float, bn: int, pairwise=None) -> jnp.ndarray:
+    """(m, B) per-block sums over a padded dataset (n multiple of ``bn``;
+    padding rows are far-offset so their kernel values are ~0), with
+    k(x, x) = 1 subtracted from each query's own block and the result
+    floored at BLOCK_SUM_FLOOR."""
+    m, n = q.shape[0], x.shape[0]
+    kv = kv_matrix(q, x, x_sq, kind, inv_bw, beta, pairwise)
+    bs = kv.reshape(m, n // bn, bn).sum(-1)
+    corr = jnp.arange(n // bn, dtype=jnp.int32)[None, :] == own[:, None]
+    bs = jnp.where(corr, bs - 1.0, bs)
+    return jnp.maximum(bs, BLOCK_SUM_FLOOR)
+
+
+def sample_block_ref(q, x, x_sq, own, gumbel, kind: str, inv_bw: float,
+                     beta: float, bn: int, pairwise=None):
+    """Oracle for ``kernel.sample_block_pallas``: returns
+    (blk, p_blk, tot, block_sums) with blk = argmax_b log(bs_b) + g_b."""
+    bs = masked_block_sums_ref(q, x, x_sq, own, kind, inv_bw, beta, bn,
+                               pairwise)
+    score = jnp.log(bs) + gumbel
+    blk = jnp.argmax(score, axis=1).astype(jnp.int32)
+    tot = jnp.sum(bs, axis=1)
+    pb = jnp.take_along_axis(bs, blk[:, None], axis=1)[:, 0] / tot
+    return blk, pb, tot, bs
