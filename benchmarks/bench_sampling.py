@@ -144,8 +144,11 @@ def run(quick: bool = False):
         new = NeighborSampler(x, ker, mode="blocked", samples_per_block=16,
                               seed=0)
         steps_new = 4 if quick else 8
-        t_new = _time(lambda: new.walk(starts, steps_new), repeats=5,
-                      warmup=1)
+        # record_path=True pins the PR-1 measurement semantics (the path
+        # stack + transfer stays in the timed region) so the JSON series
+        # remains comparable across PRs.
+        t_new = _time(lambda: new.walk(starts, steps_new, record_path=True),
+                      repeats=5, warmup=1)
         sps_new = walkers * steps_new / t_new
 
         old = SeedHostSampler(x, ker, samples_per_block=16, seed=0)

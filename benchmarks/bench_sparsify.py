@@ -1,16 +1,29 @@
-"""Figure 4 / Section 7.1 reproduction: spectral sparsification + clustering
-on the paper's Nested and Rings datasets.
+"""Spectral sparsification: engine benchmark + Figure 4 / Section 7.1 repro.
+
+Part 1 (engine): the fused Algorithm 5.1 edge pipeline (DESIGN.md §6 --
+device prefix-CDF vertex draw + depth-2 neighbor draw + reverse probability
++ reweighting as ONE ``lax.scan`` program) against a FROZEN copy of the
+PR-1 host loop (five device round-trips per batch: deg.sample, nbr.sample,
+nbr.prob_of, deg.prob, kernel.pairs).  Writes ``BENCH_sparsify.json`` with
+inner-loop throughput, the speedup, relative Laplacian spectral error for
+both paths, and the kernel_evals / kde_queries counter audit against the
+analytic counts.
+
+derived = "edges_per_sec=<new>;host_edges_per_sec=<old>;speedup=<x>"
+
+Part 2 (figure4): sparsify + spectral clustering on the paper's Nested and
+Rings datasets.  Paper claims: 2.5% / 3.3% of edges preserve the clustering
+(99.5% / 100% accuracy), ~41x size reduction, 4.5x faster eigensolve.
 
 derived = "acc=<cluster accuracy>;size_reduction=<x>;eig_speedup=<x>"
-
-Paper claims: 2.5% (Nested) / 3.3% (Rings) of edges preserve the spectral
-clustering (99.5% / 100% accuracy), a ~41x size reduction, and 4.5x faster
-eigenvector computation on the sparse graph.
 """
 from __future__ import annotations
 
+import json
 import time
+from pathlib import Path
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -18,11 +31,154 @@ from benchmarks.common import emit
 from repro.core.cluster.spectral import (cluster_accuracy,
                                          laplacian_eigenvectors,
                                          spectral_cluster)
-from repro.core.kernels_fn import gaussian, median_bandwidth
-from repro.core.sparsify import spectral_sparsify
+from repro.core.kernels_fn import Kernel, gaussian, median_bandwidth
+from repro.core.sampling.edge import NeighborSampler
+from repro.core.sampling.vertex import DegreeSampler
+from repro.core.sparsify import SparseGraph, spectral_sparsify
 from repro.data.synthetic_points import nested, rings
 
+_JSON_PATH = Path(__file__).resolve().parent.parent / "BENCH_sparsify.json"
 
+
+# --------------------------------------------------------------------- #
+# Frozen PR-1 host loop (Algorithm 5.1 steps (a)-(d) with one device
+# round-trip per step) -- the baseline every engine change is measured
+# against.  Do not "fix" this copy; it is the reference implementation.
+# --------------------------------------------------------------------- #
+def _host_loop_edges(deg: DegreeSampler, nbr: NeighborSampler, kernel: Kernel,
+                     t: int, batch: int = 512):
+    xd = nbr.x
+    srcs, dsts, ws = [], [], []
+    for lo in range(0, t, batch):
+        b = min(batch, t - lo)
+        u = deg.sample(b)
+        v, q_uv = nbr.sample(u)
+        q_vu = nbr.prob_of(v, u)
+        p_u, p_v = deg.prob(u), deg.prob(v)
+        q_edge = p_u * q_uv + p_v * q_vu          # Alg 5.1 step (d)
+        w = 1.0 / (t * np.maximum(q_edge, 1e-30))
+        kuv = np.asarray(kernel.pairs(xd[jnp.asarray(u)], xd[jnp.asarray(v)]))
+        srcs.append(u)
+        dsts.append(v)
+        ws.append(w * kuv)
+    return (np.concatenate(srcs), np.concatenate(dsts), np.concatenate(ws))
+
+
+def _time(fn, repeats=3, warmup=1):
+    """Best-of-N wall time: robust against background load on shared CPUs."""
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    return min(times)
+
+
+def _spectral_error(g: SparseGraph, l_true: np.ndarray, probes: int = 24,
+                    seed: int = 1) -> float:
+    """max |v' L_sp v / v' L v - 1| over random centered probes."""
+    rng = np.random.default_rng(seed)
+    v = rng.standard_normal((l_true.shape[0], probes))
+    v -= v.mean(0)
+    l_sp = g.laplacian_dense()
+    ratios = np.einsum("ij,ij->j", v, l_sp @ v) / \
+        np.einsum("ij,ij->j", v, l_true @ v)
+    return float(np.abs(ratios - 1.0).max())
+
+
+def _engine(quick: bool):
+    rows, results = [], []
+    n = 4096 if quick else 16384
+    t, batch, d, spb = (4096, 512, 16, 16)
+    batch_fused = 1024  # the fused scan's default device batch (sparsify.py)
+    rng = np.random.default_rng(0)
+    x = rng.normal(0, 0.5, (n, d)).astype(np.float32)
+    ker = gaussian(bandwidth=4.0)
+
+    # fused path: samplers built once, inner loop = one scan program
+    nbr_f = NeighborSampler(x, ker, mode="blocked", samples_per_block=spb,
+                            seed=2)
+    deg_f = DegreeSampler(nbr_f.blocks, seed=1)
+    cdf, degs = deg_f.cdf_device, deg_f.degrees_device
+    t_fused = _time(lambda: nbr_f.edge_batches(cdf, degs, deg_f.total, t,
+                                               batch=batch_fused),
+                    repeats=5, warmup=1)
+
+    # frozen PR-1 host loop over the same engine primitives, at the PR-1
+    # default batch size
+    nbr_h = NeighborSampler(x, ker, mode="blocked", samples_per_block=spb,
+                            seed=2)
+    deg_h = DegreeSampler(nbr_h.blocks, seed=1)
+    t_host = _time(lambda: _host_loop_edges(deg_h, nbr_h, ker, t,
+                                            batch=batch),
+                   repeats=3, warmup=1)
+
+    eps_fused = t / t_fused
+    eps_host = t / t_host
+    speedup = t_host / t_fused
+    rows.append(emit(
+        f"sparsify/inner_loop/n={n}", t_fused * 1e6,
+        f"edges_per_sec={eps_fused:.0f};host_edges_per_sec={eps_host:.0f};"
+        f"speedup={speedup:.1f}x"))
+
+    # spectral error + counter audit at a size where the dense Laplacian
+    # is cheap to materialize
+    n_sp = 1024 if quick else 2048
+    t_sp = 16 * n_sp
+    x_sp = rng.normal(0, 0.35, (n_sp, 8)).astype(np.float32)
+    ker_sp = gaussian(bandwidth=3.0)
+    k_sp = np.asarray(ker_sp.matrix(jnp.asarray(x_sp)), np.float64)
+    np.fill_diagonal(k_sp, 0.0)
+    l_true = np.diag(k_sp.sum(1)) - k_sp
+
+    g = spectral_sparsify(x_sp, ker_sp, num_edges=t_sp,
+                          estimator="stratified", samples_per_block=spb,
+                          seed=0, batch=batch)
+    err_fused = _spectral_error(g, l_true)
+
+    nbr_h2 = NeighborSampler(x_sp, ker_sp, mode="blocked",
+                             samples_per_block=spb, seed=2)
+    deg_h2 = DegreeSampler(nbr_h2.blocks, seed=1)
+    u, v, w = _host_loop_edges(deg_h2, nbr_h2, ker_sp, t_sp, batch=batch)
+    g_host = SparseGraph(n_sp, u.astype(np.int64), v.astype(np.int64), w)
+    err_host = _spectral_error(g_host, l_true)
+
+    # analytic counter audit (stratified level-1 reads, shared estimator)
+    bs, nb = nbr_h2.block_size, nbr_h2.num_blocks
+    drawn = ((t_sp + batch - 1) // batch) * batch
+    want_evals = n_sp * nb * spb + drawn * (nb * spb + bs + 1)
+    want_queries = n_sp + drawn
+    counters_ok = (g.kernel_evals == want_evals
+                   and g.kde_queries == want_queries)
+    rows.append(emit(
+        f"sparsify/spectral_error/n={n_sp}", 0.0,
+        f"fused={err_fused:.4f};host_loop={err_host:.4f};"
+        f"counters_ok={counters_ok}"))
+
+    results.append(dict(
+        n=n, t=t, batch=dict(fused=batch_fused, host_loop=batch), d=d,
+        samples_per_block=spb,
+        inner_loop_sec=dict(fused=t_fused, host_loop=t_host),
+        edges_per_sec=dict(fused=eps_fused, host_loop=eps_host),
+        speedup=speedup,
+        spectral_error=dict(n=n_sp, t=t_sp, fused=err_fused,
+                            host_loop=err_host),
+        counters=dict(kernel_evals=g.kernel_evals,
+                      kernel_evals_analytic=want_evals,
+                      kde_queries=g.kde_queries,
+                      kde_queries_analytic=want_queries,
+                      ok=counters_ok)))
+    _JSON_PATH.write_text(json.dumps(dict(
+        benchmark="bench_sparsify", backend=jax.default_backend(),
+        quick=quick, results=results), indent=2) + "\n")
+    return rows
+
+
+# --------------------------------------------------------------------- #
+# Figure 4 / Section 7.1
+# --------------------------------------------------------------------- #
 def _dense_eig_time(k: np.ndarray, kk: int, iters: int = 100,
                     guard: int = 4) -> float:
     """Subspace iteration on the dense normalized adjacency -- IDENTICAL
@@ -39,7 +195,7 @@ def _dense_eig_time(k: np.ndarray, kk: int, iters: int = 100,
     return time.perf_counter() - t0
 
 
-def run(quick: bool = False):
+def _figure4(quick: bool):
     n_nested = 1200 if quick else 2500
     n_rings = 800 if quick else 1500
     rows = []
@@ -58,9 +214,7 @@ def run(quick: bool = False):
         g = spectral_sparsify(x, ker, num_edges=budget, estimator="exact",
                               exact_blocks=True, seed=0)
         t_sp = time.perf_counter() - t0
-        t0 = time.perf_counter()
         res = spectral_cluster(g, 2, seed=0)
-        t_cluster_sparse = time.perf_counter() - t0
         acc = cluster_accuracy(res.labels, lab, 2)
         k = np.asarray(ker.matrix(jnp.asarray(x)), np.float64)
         t_dense = _dense_eig_time(k, 2, iters=100)
@@ -73,3 +227,11 @@ def run(quick: bool = False):
             f"eig_speedup={t_dense / max(t_sparse, 1e-9):.1f}x;"
             f"kernel_evals={g.kernel_evals}"))
     return rows
+
+
+def run(quick: bool = False):
+    return _engine(quick) + _figure4(quick)
+
+
+if __name__ == "__main__":
+    run(quick=True)

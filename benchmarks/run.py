@@ -28,8 +28,11 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", type=str, default="")
+    ap.add_argument("--skip", type=str, default="",
+                    help="comma-separated modules to exclude")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else set(BENCHES)
+    only -= set(args.skip.split(",")) if args.skip else set()
 
     print("name,us_per_call,derived")
     failures = []

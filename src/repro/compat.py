@@ -1,0 +1,25 @@
+"""Small cross-version JAX shims.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` to the top-level
+``jax`` namespace, and its replication-check flag was renamed
+``check_rep`` -> ``check_vma`` along the way.  Callers in this repo use the
+new-style spelling (``jax.shard_map`` semantics, ``check_vma=``); this
+module maps it onto whichever API the installed jax provides.
+"""
+from __future__ import annotations
+
+import jax
+
+try:  # jax >= 0.6: top-level export, check_vma flag
+    shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover - exercised only on older jax
+    import inspect
+
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    _PARAMS = frozenset(inspect.signature(_shard_map).parameters)
+
+    def shard_map(f, **kw):
+        if "check_vma" in kw and "check_vma" not in _PARAMS:
+            kw["check_rep"] = kw.pop("check_vma")
+        return _shard_map(f, **kw)

@@ -9,7 +9,8 @@ from repro.core.kernels_fn import (Kernel, exponential, gaussian, laplacian,
 from repro.core.kde.base import (ExactBlockKDE, ExactKDE, RSKDE,
                                  StratifiedKDE, make_estimator)
 from repro.core.kde.multilevel import MultiLevelKDE
-from repro.core.sampling.vertex import DegreeSampler, approximate_degrees
+from repro.core.sampling.vertex import (DegreeSampler, PrefixCDF,
+                                        approximate_degrees)
 from repro.core.sampling.edge import EdgeSampler, NeighborSampler
 from repro.core.sampling.walks import random_walks
 from repro.core.sampling.rownorm import RowNormSampler

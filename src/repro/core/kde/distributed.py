@@ -21,6 +21,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.kernels_fn import Kernel
 
+from repro.compat import shard_map
+
 
 def sharded_kde_query(mesh: Mesh, kernel: Kernel,
                       data_axes: Sequence[str] = ("data",)):
@@ -32,7 +34,7 @@ def sharded_kde_query(mesh: Mesh, kernel: Kernel,
         part = jnp.sum(kernel.pairwise(y, x_shard), axis=1)
         return jax.lax.psum(part, axes)
 
-    shmap = jax.shard_map(
+    shmap = shard_map(
         local, mesh=mesh,
         in_specs=(P(), P(axes)),
         out_specs=P(),
@@ -57,7 +59,7 @@ def sharded_block_sums(mesh: Mesh, kernel: Kernel, num_blocks_per_shard: int,
         kv = kv.reshape(y.shape[0], num_blocks_per_shard, bs).sum(-1)
         return kv
 
-    shmap = jax.shard_map(
+    shmap = shard_map(
         local, mesh=mesh,
         in_specs=(P(), P(axes)),
         out_specs=P(None, axes),
@@ -70,29 +72,39 @@ def degree_preprocessing(mesh: Mesh, kernel: Kernel,
     """Algorithm 4.3 distributed: every shard queries its own points against
     the full (sharded) dataset via a ring of collective permutes -- O(n^2/P)
     work per device, the optimal balance; returns the degree vector sharded
-    the same way as X."""
+    the same way as X.
+
+    With multiple ``data_axes`` the ring runs over the *flattened* device
+    index across all of those axes (``ppermute`` with a tuple of axis names
+    linearizes them row-major, matching how ``P(axes)`` lays out the
+    shards), so every one of ``prod(axis sizes)`` shards visits every other
+    shard exactly once.  A ring built over ``axis_size(axes[0])`` alone --
+    the previous behavior -- silently dropped the contributions of the
+    remaining axes' shards.
+    """
     axes = tuple(data_axes)
+    size = 1
+    for a in axes:
+        size *= int(mesh.shape[a])
+    perm = [(i, (i + 1) % size) for i in range(size)]
+    axis = axes[0] if len(axes) == 1 else axes
 
     def local(x_shard):
-        # Ring all-to-all accumulation: rotate shards around the ring, each
-        # step adds the kernel sums against one remote shard.
+        # Ring all-to-all accumulation: rotate shards around the flattened
+        # ring, each step adds the kernel sums against one remote shard.
         def step(carry, _):
             acc, blk = carry
             acc = acc + jnp.sum(kernel.pairwise(x_shard, blk), axis=1)
-            blk = jax.lax.ppermute(
-                blk, axes[0] if len(axes) == 1 else axes,
-                perm=[(i, (i + 1) % jax.lax.axis_size(axes[0]))
-                      for i in range(jax.lax.axis_size(axes[0]))])
+            blk = jax.lax.ppermute(blk, axis, perm=perm)
             return (acc, blk), None
 
-        size = jax.lax.axis_size(axes[0])
         # derive from x_shard so the carry is 'varying' over the mesh axes
         acc0 = jnp.sum(x_shard, axis=1) * 0.0
         (acc, _), _ = jax.lax.scan(step, (acc0, x_shard), None, length=size)
         return acc - 1.0  # remove self kernel
 
-    shmap = jax.shard_map(local, mesh=mesh, in_specs=(P(axes),),
-                          out_specs=P(axes))
+    shmap = shard_map(local, mesh=mesh, in_specs=(P(axes),),
+                      out_specs=P(axes))
     return jax.jit(shmap)
 
 

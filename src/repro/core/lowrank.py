@@ -35,32 +35,22 @@ class LowRankResult:
         return self.v @ self.u
 
 
-def _sampled_rows(x, kernel: Kernel, idx: np.ndarray, probs: np.ndarray,
-                  chunk: int = 16) -> np.ndarray:
-    """Rows K_{idx,*} rescaled by 1/sqrt(s p_i) (the FKV sketch S)."""
-    xj = jnp.asarray(x)
-    s = len(idx)
-    rows = []
-    for lo in range(0, s, chunk):
-        sel = jnp.asarray(idx[lo:lo + chunk])
-        rows.append(np.asarray(kernel.pairwise(xj[sel], xj)))
-    rows = np.concatenate(rows, axis=0)
-    scale = 1.0 / np.sqrt(np.maximum(s * probs, 1e-30))
-    return rows * scale[:, None]
-
-
 def fkv_lowrank(x, kernel: Kernel, rank: int, num_rows: Optional[int] = None,
                 estimator: str = "exact", seed: int = 0,
                 fit_cols: Optional[int] = None) -> LowRankResult:
     """Theorem 5.12 pipeline.  num_rows defaults to 25*rank (the paper's
-    experimental setting, Section 7.1)."""
+    experimental setting, Section 7.1).
+
+    Device-resident (DESIGN.md §6): the sampler owns the one device copy of
+    x, its row-norm prefix CDF accumulates in float64, and the FKV sketch
+    rows come from one jitted batched program (``sketch_rows``) instead of a
+    chunk=16 host loop over ``kernel.pairwise``; the CP17 column fit reads
+    its columns through the same program (K is symmetric)."""
     n = int(x.shape[0])
     s = int(num_rows if num_rows is not None else 25 * rank)
     sampler = RowNormSampler(x, kernel, estimator=estimator, seed=seed)
     idx = sampler.sample(s)
-    probs = sampler.prob(idx)
-    sk = _sampled_rows(x, kernel, idx, probs)        # (s, n)
-    evals = sampler.evals + s * n
+    sk = sampler.sketch_rows(idx)                    # (s, n), one program
 
     # Top right-singular directions of the sketch.
     w = sk @ sk.T                                    # (s, s)
@@ -71,28 +61,40 @@ def fkv_lowrank(x, kernel: Kernel, rank: int, num_rows: Optional[int] = None,
 
     v = None
     if fit_cols:
-        v, extra = fit_left_factor(x, kernel, u, num_cols=fit_cols,
-                                   seed=seed + 1)
-        evals += extra
-    return LowRankResult(u=u, v=v, kernel_evals=evals,
+        v, _ = fit_left_factor(x, kernel, u, num_cols=fit_cols,
+                               seed=seed + 1, sampler=sampler)
+    return LowRankResult(u=u, v=v, kernel_evals=sampler.evals,
                          kde_queries=n, row_indices=idx)
 
 
 def fit_left_factor(x, kernel: Kernel, u: np.ndarray, num_cols: int,
-                    seed: int = 0) -> Tuple[np.ndarray, int]:
+                    seed: int = 0,
+                    sampler: Optional[RowNormSampler] = None
+                    ) -> Tuple[np.ndarray, int]:
     """Theorem 5.13 (CP17): fit V = argmin ||K - V U||_F reading only
-    O(r/eps) columns of K, via uniformly subsampled least squares."""
+    O(r/eps) columns of K, via uniformly subsampled least squares.
+
+    With a ``sampler``, the columns are read as batched device rows
+    (K symmetric: K[:, cols] = K[cols, :].T) and the evaluations are
+    counted on the sampler (the returned eval count is then 0 so callers
+    summing ``sampler.evals + extra`` never double-count); standalone
+    calls fall back to one pairwise sweep and return its cost."""
     n = int(x.shape[0])
     rng = np.random.default_rng(seed)
     cols = rng.choice(n, size=min(num_cols, n), replace=False)
-    xj = jnp.asarray(x)
-    k_cols = np.asarray(kernel.pairwise(xj, xj[jnp.asarray(cols)]))  # (n, c)
+    if sampler is not None:
+        k_cols = sampler.rows(cols).T                                # (n, c)
+        extra = 0
+    else:
+        xj = jnp.asarray(x, jnp.float32)
+        k_cols = np.asarray(kernel.pairwise(xj, xj[jnp.asarray(cols)]))
+        extra = n * len(cols)
     u_cols = u[:, cols]                                              # (r, c)
     # V = K_cols U_cols^T (U_cols U_cols^T)^{-1}
     gram = u_cols @ u_cols.T
     rhs = k_cols @ u_cols.T
     v = rhs @ np.linalg.pinv(gram)
-    return v, n * len(cols)
+    return v, extra
 
 
 def projection_error(k: np.ndarray, u: np.ndarray) -> float:

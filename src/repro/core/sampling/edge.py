@@ -54,7 +54,6 @@ class NeighborSampler:
         from repro.kernels.kde_sampler import ops as _ops
         self._ops = _ops
         self.x = jnp.asarray(x, jnp.float32)
-        self.x_sq = jnp.sum(self.x * self.x, axis=-1)
         self.kernel = kernel
         self.n = int(x.shape[0])
         self.mode = mode
@@ -63,11 +62,16 @@ class NeighborSampler:
         if mode == "blocked":
             bs = block_size or max(int(np.sqrt(self.n)), 16)
             if exact_blocks:
-                self._blocks = ExactBlockKDE(x, kernel, block_size=bs)
+                self._blocks = ExactBlockKDE(self.x, kernel, block_size=bs)
             else:
-                self._blocks = StratifiedKDE(x, kernel, block_size=bs,
+                self._blocks = StratifiedKDE(self.x, kernel, block_size=bs,
                                              samples_per_block=samples_per_block,
                                              seed=seed)
+            # ONE device dataset + one precomputed-norms sweep, shared with
+            # the block KDE structure (and, through ``blocks``, with any
+            # degree sampler built on top of it -- DESIGN.md §6).
+            self.x = self._blocks.x
+            self.x_sq = self._blocks.x_sq
             self.block_size = self._blocks.block_size
             self.num_blocks = self._blocks.num_blocks
             self.exact_blocks = exact_blocks
@@ -91,11 +95,20 @@ class NeighborSampler:
             self._l1_cache: Optional[Tuple[bytes, jnp.ndarray]] = None
         elif mode == "tree":
             assert tree is not None, "tree mode needs a MultiLevelKDE"
+            self.x_sq = jnp.sum(self.x * self.x, axis=-1)
             self._tree = tree
         else:
             raise ValueError(mode)
 
     # ------------------------------------------------------------------ #
+    @property
+    def blocks(self):
+        """The level-1 KDE structure (blocked mode) -- exposed so consumers
+        (the sparsifier's degree preprocessing) can share it instead of
+        building a second structure over the same dataset."""
+        assert self.mode == "blocked"
+        return self._blocks
+
     @property
     def evals(self) -> int:
         if self.mode == "blocked":
@@ -132,8 +145,9 @@ class NeighborSampler:
                                          **{k: self._cfg[k] for k in
                                             ("kind", "inv_bw", "beta",
                                              "pairwise", "block_size",
-                                             "num_blocks", "n", "s",
-                                             "exact")})
+                                             "num_blocks", "n", "s", "exact",
+                                             "use_pallas", "interpret",
+                                             "bm")})
         self._count(self._level1_evals(len(src32)))
         self._l1_cache = (dig, bs)
         return bs
@@ -277,27 +291,64 @@ class NeighborSampler:
         return cur
 
     # ------------------------------------------------------------------ #
+    def edge_batches(self, cdf_device: jnp.ndarray, degs_device: jnp.ndarray,
+                     total_degree: float, t: int, batch: int = 1024,
+                     key: Optional[jnp.ndarray] = None):
+        """Algorithm 5.1 edge sampling, fully fused (blocked mode): draws
+        ``ceil(t / batch)`` iid edge batches in ONE ``lax.scan`` device
+        program -- u ~ degrees via the device prefix CDF, v | u via the
+        depth-2 engine, the (algebraically collapsed) reverse probability
+        q_vu = k(u,v)/deg(v), and the importance weight ``k(u,v) / (t q_e)``
+        -- and returns the first t edges as (u, v, weight, q_uv, q_vu)
+        numpy arrays.
+
+        ``cdf_device`` / ``degs_device`` come from a ``PrefixCDF``
+        (float64-accumulated, rounded to f32); extra draws from the final
+        partial batch are discarded, which leaves the estimator unbiased
+        (edges are iid)."""
+        assert self.mode == "blocked", "fused edge batches need blocked mode"
+        t = int(t)
+        num_batches = max((t + batch - 1) // batch, 1)
+        keys = jax.random.split(self._next_key() if key is None else key,
+                                num_batches)
+        out = self._ops.edge_batch_scan(
+            self.x, self.x_sq, jnp.asarray(cdf_device),
+            jnp.asarray(degs_device), 1.0 / float(total_degree), 1.0 / t,
+            keys, batch=int(batch), **self._cfg)
+        drawn = num_batches * batch
+        # per edge: one level-1 read of the u frontier, one exact level-2
+        # row, and one aligned k(u, v) pair (the reverse probability
+        # reuses the pair and the preprocessed degrees -- no extra reads).
+        self._count(self._level1_evals(drawn)
+                    + drawn * self.block_size + drawn)
+        self._l1_cache = None  # frontier moved; cached sums are stale
+        return tuple(np.asarray(a).reshape(-1)[:t] for a in out)
+
+    # ------------------------------------------------------------------ #
     def walk(self, starts: np.ndarray, length: int, exact: bool = False,
              rounds: int = 8, slack: float = 2.0,
-             key: Optional[jnp.ndarray] = None):
+             key: Optional[jnp.ndarray] = None, record_path: bool = False):
         """Run |starts| walks of ``length`` steps entirely on device
         (blocked mode): the frontier is ``lax.scan`` carry and every step is
         one fused depth-2 sample.  Returns (endpoints, (length, w) path) as
-        numpy arrays."""
+        numpy arrays; with ``record_path=False`` (default) the path is
+        never stacked on device and None is returned in its place --
+        endpoints are bitwise identical either way (same key stream)."""
         assert self.mode == "blocked", "device walks need blocked mode"
         starts_dev = jnp.asarray(starts, jnp.int32)
         keys = jax.random.split(self._next_key() if key is None else key,
                                 length)
         end, path = self._ops.walk_scan(
             self.x, self.x_sq, starts_dev, keys,
-            rounds=rounds if exact else 0, slack=slack, **self._cfg)
+            rounds=rounds if exact else 0, slack=slack,
+            record_path=bool(record_path), **self._cfg)
         w = len(np.asarray(starts))
         per_step = self._level1_evals(w) + w * self.block_size
         if exact:
             per_step += rounds * (w * self.block_size + w)
         self._count(length * per_step)
         self._l1_cache = None  # frontier moved; cached sums are stale
-        return np.asarray(end), np.asarray(path)
+        return np.asarray(end), (np.asarray(path) if record_path else None)
 
 
 class EdgeSampler:

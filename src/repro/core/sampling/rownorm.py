@@ -4,43 +4,75 @@ For kernels with k(x,y)^2 = k(cx, cy) (Laplacian/exponential/Gaussian), the
 squared row norms of K are the degrees (+1 for the diagonal) of the kernel
 graph of the *scaled* dataset cX.  n KDE queries against cX therefore give
 the FKV sampling distribution p_i >= Omega(1) ||K_i||^2 / ||K||_F^2.
+
+The sampler is device-resident end to end: the original dataset stays on
+device next to the scaled one, prefix sums accumulate in float64 through the
+shared ``PrefixCDF`` path (DESIGN.md §6), and the FKV sketch rows
+``K_{idx,*} / sqrt(s p_i)`` are produced by ONE jitted program
+(``kde_sampler.ops.kernel_rows``) instead of a chunk=16 host loop over
+``kernel.pairwise``.
 """
 from __future__ import annotations
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.kde.base import KDEBase, make_estimator
 from repro.core.kernels_fn import Kernel, squared_kernel_dataset
+from repro.core.sampling.vertex import PrefixCDF
 
 
 class RowNormSampler:
     def __init__(self, x, kernel: Kernel, estimator: str = "exact",
                  seed: int = 0, **est_kw):
-        xs = squared_kernel_dataset(kernel, x)
+        self.x = jnp.asarray(x, jnp.float32)   # shared device dataset
+        self.x_sq = jnp.sum(self.x * self.x, axis=-1)
+        self.kernel = kernel
+        xs = squared_kernel_dataset(kernel, self.x)
         self._est: KDEBase = make_estimator(estimator, xs, kernel, seed=seed,
                                             **est_kw)
-        n = xs.shape[0]
+        n = int(xs.shape[0])
+        self.n = n
         # KDE on cX returns sum_j k(cx_i, cx_j) = sum_j k(x_i, x_j)^2, the
         # squared row norm *including* the diagonal (k(x,x)^2 = 1) -- which is
         # exactly ||K_i,*||_2^2; no self-subtraction here.
-        probs = np.zeros(n, np.float32)
+        probs = np.zeros(n, np.float64)
         batch = 1024
         for lo in range(0, n, batch):
             hi = min(lo + batch, n)
             probs[lo:hi] = np.asarray(self._est.query(xs[lo:hi]))
         self.row_norms_sq = np.maximum(probs, 1e-12)
-        self._prefix = np.cumsum(self.row_norms_sq)
-        self.total = float(self._prefix[-1])  # ~= ||K||_F^2
-        self._rng = np.random.default_rng(seed)
+        self._cdf = PrefixCDF(self.row_norms_sq, seed=seed)
+        self.total = self._cdf.total          # ~= ||K||_F^2
+        self._row_evals = 0
+        from repro.kernels.kde_sampler.ref import static_pairwise
+        self._row_cfg = dict(kind=kernel.name,
+                             inv_bw=1.0 / kernel.bandwidth,
+                             beta=getattr(kernel, "beta", 1.0),
+                             pairwise=static_pairwise(kernel))
 
     @property
     def evals(self) -> int:
-        return self._est.evals
+        return self._est.evals + self._row_evals
 
     def sample(self, size: int) -> np.ndarray:
-        u = self._rng.uniform(0.0, self.total, size=size)
-        return np.searchsorted(self._prefix, u, side="right").clip(
-            0, len(self.row_norms_sq) - 1)
+        return self._cdf.sample(size)
 
     def prob(self, idx) -> np.ndarray:
-        return self.row_norms_sq[idx] / self.total
+        return self._cdf.prob(idx)
+
+    # ------------------------------------------------------------------ #
+    # batched device row evaluation (Section 5.2 post-processing)
+    def rows(self, idx: np.ndarray) -> np.ndarray:
+        """Exact kernel rows K_{idx,*} as one jitted device program."""
+        from repro.kernels.kde_sampler import ops as sampler_ops
+        sel = jnp.asarray(np.ascontiguousarray(idx, np.int32))
+        out = sampler_ops.kernel_rows(self.x[sel], self.x, self.x_sq,
+                                      **self._row_cfg)
+        self._row_evals += len(idx) * self.n
+        return np.asarray(out)
+
+    def sketch_rows(self, idx: np.ndarray) -> np.ndarray:
+        """The FKV sketch S: rows K_{idx,*} rescaled by 1/sqrt(s p_i)."""
+        scale = 1.0 / np.sqrt(np.maximum(len(idx) * self.prob(idx), 1e-30))
+        return self.rows(idx) * scale[:, None]

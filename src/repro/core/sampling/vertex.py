@@ -5,8 +5,19 @@ Preprocessing: n KDE queries give (1 +- eps) weighted degrees p_i
 paper's binary-tree descent over partial sums is mathematically identical to
 inverse-CDF sampling over the prefix-sum array, which is the dense form we
 use (one cumsum + searchsorted; O(log n) per sample, vectorized).
+
+``PrefixCDF`` is the shared preprocessing path behind ``DegreeSampler`` and
+``RowNormSampler``: prefix sums are accumulated in float64 (a float32 cumsum
+drifts from the target distribution as n grows -- the accumulated rounding
+error is O(n) ulps, which at production scales visibly biases the inverse
+CDF; see tests/test_sampling.py::test_prefix_cdf_float32_bias_regression),
+and the normalized CDF is exported once as a float32 device array for the
+fused edge-batch op (per-entry rounding of an exactly-accumulated CDF is
+O(eps) and unbiased).
 """
 from __future__ import annotations
+
+from typing import Optional
 
 import jax.numpy as jnp
 import numpy as np
@@ -14,10 +25,62 @@ import numpy as np
 from repro.core.kde.base import KDEBase
 
 
+class PrefixCDF:
+    """Inverse-CDF sampler over a positive weight array.
+
+    Host path: float64 prefix sums + ``np.searchsorted``.  Device path:
+    ``cdf_device`` / ``probs_device`` are lazily-exported float32 arrays for
+    jitted consumers (``kde_sampler.ops.fused_edge_batch``); both are
+    rounded from the float64 accumulation, never re-accumulated in float32.
+    """
+
+    def __init__(self, weights: np.ndarray, seed: int = 0):
+        w = np.asarray(weights, np.float64)
+        self.weights = w
+        self._prefix = np.cumsum(w)           # float64 accumulation
+        self.total = float(self._prefix[-1])
+        self._rng = np.random.default_rng(seed)
+        self._cdf_dev: Optional[jnp.ndarray] = None
+        self._probs_dev: Optional[jnp.ndarray] = None
+        self._weights_dev: Optional[jnp.ndarray] = None
+
+    def __len__(self) -> int:
+        return len(self.weights)
+
+    def sample(self, size: int) -> np.ndarray:
+        u = self._rng.uniform(0.0, self.total, size=size)
+        return np.searchsorted(self._prefix, u, side="right").clip(
+            0, len(self.weights) - 1)
+
+    def prob(self, idx) -> np.ndarray:
+        """Probability this sampler assigns to index idx (w_i / sum w_j)."""
+        return self.weights[np.asarray(idx)] / self.total
+
+    @property
+    def cdf_device(self) -> jnp.ndarray:
+        if self._cdf_dev is None:
+            self._cdf_dev = jnp.asarray(
+                (self._prefix / self.total).astype(np.float32))
+        return self._cdf_dev
+
+    @property
+    def probs_device(self) -> jnp.ndarray:
+        if self._probs_dev is None:
+            self._probs_dev = jnp.asarray(
+                (self.weights / self.total).astype(np.float32))
+        return self._probs_dev
+
+    @property
+    def weights_device(self) -> jnp.ndarray:
+        if self._weights_dev is None:
+            self._weights_dev = jnp.asarray(self.weights.astype(np.float32))
+        return self._weights_dev
+
+
 def approximate_degrees(estimator: KDEBase, batch: int = 1024) -> np.ndarray:
     """Algorithm 4.3: p_i = KDE_X(x_i) - k(x_i, x_i)  (self kernel = 1)."""
     n = estimator.n
-    out = np.zeros(n, np.float32)
+    out = np.zeros(n, np.float64)
     for lo in range(0, n, batch):
         hi = min(lo + batch, n)
         out[lo:hi] = np.asarray(estimator.query(estimator.x[lo:hi]))
@@ -30,23 +93,31 @@ class DegreeSampler:
 
     def __init__(self, estimator: KDEBase, seed: int = 0):
         self.degrees = approximate_degrees(estimator)
-        self._prefix = np.cumsum(self.degrees)
-        self.total = float(self._prefix[-1])
-        self._rng = np.random.default_rng(seed)
+        self._cdf = PrefixCDF(self.degrees, seed=seed)
+        self.total = self._cdf.total
 
     def sample(self, size: int) -> np.ndarray:
-        u = self._rng.uniform(0.0, self.total, size=size)
-        return np.searchsorted(self._prefix, u, side="right").clip(0, len(self.degrees) - 1)
+        return self._cdf.sample(size)
 
     def prob(self, idx) -> np.ndarray:
         """Probability this sampler assigns to vertex idx (p_i / sum p_j)."""
-        return self.degrees[idx] / self.total
+        return self._cdf.prob(idx)
+
+    @property
+    def cdf_device(self) -> jnp.ndarray:
+        """Normalized float32 prefix array for the fused edge-batch op."""
+        return self._cdf.cdf_device
+
+    @property
+    def degrees_device(self) -> jnp.ndarray:
+        """Raw float32 degree array for the fused edge-batch op."""
+        return self._cdf.weights_device
 
 
 def sample_from_positive_array(a: np.ndarray, size: int, rng) -> np.ndarray:
     """Algorithm 4.5 in its dense form (used directly in tests against the
     explicit tree-descent reference)."""
-    prefix = np.cumsum(a)
+    prefix = np.cumsum(np.asarray(a, np.float64))
     u = rng.uniform(0.0, prefix[-1], size=size)
     return np.searchsorted(prefix, u, side="right").clip(0, len(a) - 1)
 
@@ -55,7 +126,7 @@ def tree_descent_sample(a: np.ndarray, rng) -> int:
     """Literal Algorithm 4.5 (binary descent on segment sums) -- reference
     implementation used by property tests to certify the dense form."""
     lo, hi = 0, len(a)
-    prefix = np.concatenate([[0.0], np.cumsum(a)])
+    prefix = np.concatenate([[0.0], np.cumsum(np.asarray(a, np.float64))])
 
     def seg(l, h):  # A_{l,h} query via prefix sums (O(1), as Thm 4.9 notes)
         return prefix[h] - prefix[l]

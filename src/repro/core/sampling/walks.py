@@ -23,7 +23,8 @@ def random_walks(sampler: NeighborSampler, starts: np.ndarray, length: int,
         cur = starts.copy()
         return (cur, starts[None].copy()) if record_path else cur
     if getattr(sampler, "mode", None) == "blocked":
-        end, path = sampler.walk(starts, length, exact=exact)
+        end, path = sampler.walk(starts, length, exact=exact,
+                                 record_path=record_path)
         if record_path:
             return end, np.concatenate([starts[None], np.asarray(path)])
         return end

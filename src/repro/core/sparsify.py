@@ -68,38 +68,43 @@ class SparseGraph:
 
 def spectral_sparsify(x, kernel: Kernel, num_edges: int,
                       estimator: str = "stratified", seed: int = 0,
-                      batch: int = 512, exact_blocks: bool = False,
+                      batch: int = 1024, exact_blocks: bool = False,
                       samples_per_block: int = 16) -> SparseGraph:
-    """Algorithm 5.1 with edge budget ``num_edges`` (= t)."""
+    """Algorithm 5.1 with edge budget ``num_edges`` (= t).
+
+    Fully fused (DESIGN.md §6): ONE device dataset + level-1 structure is
+    shared between degree preprocessing and the neighbor sampler, the
+    degree CDF lives on device (float64-accumulated prefix, rounded to
+    f32), and all edge batches -- steps (a)-(d) including the reverse
+    probability q_vu and the reweighting -- run as one ``lax.scan``
+    program with a single device->host transfer of the edge list.
+    """
     n = int(x.shape[0])
-    est = make_estimator(estimator if estimator != "exact_block" else "exact",
-                         x, kernel, seed=seed)
-    deg = DegreeSampler(est, seed=seed + 1)
+    t = int(num_edges)
     nbr = NeighborSampler(x, kernel, mode="blocked", seed=seed + 2,
                           exact_blocks=exact_blocks,
                           samples_per_block=samples_per_block)
-    t = int(num_edges)
-    xd = nbr.x  # device-resident dataset shared with the sampler
-    srcs, dsts, ws = [], [], []
-    for lo in range(0, t, batch):
-        b = min(batch, t - lo)
-        u = deg.sample(b)
-        v, q_uv = nbr.sample(u)
-        q_vu = nbr.prob_of(v, u)
-        p_u, p_v = deg.prob(u), deg.prob(v)
-        q_edge = p_u * q_uv + p_v * q_vu          # Alg 5.1 step (d)
-        w = 1.0 / (t * np.maximum(q_edge, 1e-30))
-        # The reweighting makes E[L_G'] = sum_e q_e * w_e * L_e = L_G / ...
-        # each sampled edge contributes w_e * k(u,v) to the sparsifier, i.e.
-        # edge weight k(u,v) / (t q_e).
-        kuv = np.asarray(kernel.pairs(xd[jnp.asarray(u)], xd[jnp.asarray(v)]))
-        srcs.append(u)
-        dsts.append(v)
-        ws.append(w * kuv)
-    g = SparseGraph(n, np.concatenate(srcs), np.concatenate(dsts),
-                    np.concatenate(ws))
-    g.kernel_evals = est.evals + nbr.evals + t
-    g.kde_queries = n + 2 * t  # degree preprocessing + per-edge level-1 reads
+    # Degree preprocessing (Algorithm 4.3) against the sampler's own
+    # level-1 structure whenever it implements the requested estimator --
+    # one KDE build and one preprocessing sweep over x, not two.  The
+    # sampler's structure is exact (ExactBlockKDE) iff exact_blocks.
+    wants_exact = estimator in ("exact", "exact_block")
+    if wants_exact == exact_blocks and estimator not in ("rs", "grid_hbe"):
+        est = nbr.blocks
+    else:
+        est = make_estimator(
+            estimator if estimator != "exact_block" else "exact",
+            nbr.x, kernel, seed=seed)
+    deg = DegreeSampler(est, seed=seed + 1)
+    u, v, w, _, _ = nbr.edge_batches(deg.cdf_device, deg.degrees_device,
+                                     deg.total, t, batch=batch)
+    g = SparseGraph(n, np.asarray(u, np.int64), np.asarray(v, np.int64),
+                    np.asarray(w, np.float64))
+    g.kernel_evals = nbr.evals + (0 if est is nbr.blocks else est.evals)
+    # degree preprocessing + one forward level-1 read per drawn edge (the
+    # reverse probability collapses onto the preprocessed degrees)
+    drawn = ((t + batch - 1) // batch) * batch
+    g.kde_queries = n + drawn
     return g
 
 

@@ -61,6 +61,43 @@ def _sample_block_kernel(q_ref, own_ref, g_ref, x_ref,
         pb_ref[...] = best_ref[...] / acc_ref[...]
 
 
+def _masked_blocksum_kernel(q_ref, own_ref, x_ref, bs_ref, *, kind, inv_bw,
+                            beta):
+    j = pl.program_id(1)
+    kv = _tile_kernel_values(q_ref[...], x_ref[...], kind, inv_bw, beta)
+    s = jnp.sum(kv, axis=1)
+    own = own_ref[...][:, 0]
+    s = jnp.where(own == j, s - 1.0, s)             # k(x, x) = 1 self mask
+    bs_ref[...] = jnp.maximum(s, _FLOOR)[:, None]
+
+
+def masked_blocksum_pallas(q: jnp.ndarray, x: jnp.ndarray, own: jnp.ndarray,
+                           kind: str, inv_bw: float, beta: float = 1.0,
+                           bm: int = 128, bn: int = 256,
+                           interpret: bool = False) -> jnp.ndarray:
+    """Masked level-1 block sums WITHOUT the in-pass block draw: the reverse
+    probability read of the fused Algorithm 5.1 edge op (the sparsifier
+    evaluates q(u | v) for already-drawn edges, so no Gumbel state is
+    needed).  q (m, d), x (n, d), own (m, 1) int32 -> (m, n/bn) sums,
+    self-corrected and floored exactly like ``sample_block_pallas``.
+    m, n must be multiples of bm, bn; padded queries use own = -1."""
+    m, d = q.shape
+    n = x.shape[0]
+    nb = n // bn
+    body = functools.partial(_masked_blocksum_kernel, kind=kind,
+                             inv_bw=inv_bw, beta=beta)
+    return pl.pallas_call(
+        body,
+        grid=(m // bm, nb),
+        in_specs=[pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
+                  pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),
+                  pl.BlockSpec((bn, d), lambda i, j: (j, 0))],
+        out_specs=pl.BlockSpec((bm, 1), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, nb), jnp.float32),
+        interpret=interpret,
+    )(q, own, x)
+
+
 def sample_block_pallas(q: jnp.ndarray, x: jnp.ndarray, own: jnp.ndarray,
                         gumbel: jnp.ndarray, kind: str, inv_bw: float,
                         beta: float = 1.0, bm: int = 128, bn: int = 256,

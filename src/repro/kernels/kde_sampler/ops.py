@@ -18,7 +18,15 @@ Public entry points (all jitted; static config is passed by keyword):
 * ``prob_of_from_block_sums`` -- q(dst | src) from cached level-1 sums.
 * ``fused_sample_exact``      -- Theorem 4.12 rejection rounds, one program.
 * ``walk_scan``               -- T walk steps under ``lax.scan``; the
-  frontier never leaves the device.
+  frontier never leaves the device (``record_path=False`` skips the
+  (T, w) path stack entirely).
+* ``fused_edge_batch``        -- one Algorithm 5.1 edge batch: u ~ degrees
+  (inverse CDF over a device prefix array), v | u, reverse probability,
+  and the importance weight, all in one program (DESIGN.md §6).
+* ``edge_batch_scan``         -- ALL edge batches of a sparsifier call as
+  one ``lax.scan`` program (one dispatch, one transfer out).
+* ``kernel_rows``             -- exact batched kernel rows for the FKV /
+  CP17 low-rank pipeline (Section 5.2).
 
 ``TRACE_COUNTS`` increments only while a function is being traced --
 tests use it to certify that repeated calls hit the compiled path.
@@ -41,7 +49,8 @@ TRACE_COUNTS = collections.Counter()
 # Static (hashable) configuration forwarded to every jitted entry point.
 _STATIC = frozenset((
     "kind", "inv_bw", "beta", "pairwise", "block_size", "num_blocks",
-    "n", "s", "exact", "use_pallas", "interpret", "bm", "rounds", "slack"))
+    "n", "s", "exact", "use_pallas", "interpret", "bm", "rounds", "slack",
+    "batch", "record_path"))
 
 
 def _jit(fn):
@@ -69,9 +78,19 @@ def stratified_block_sums(y, x, x_sq, key, *, kind, inv_bw, beta, pairwise,
     TRACE_COUNTS["stratified_block_sums"] += 1
     m = y.shape[0]
     base = jnp.arange(num_blocks, dtype=jnp.int32) * block_size
+    u = jax.random.uniform(key, (num_blocks, block_size))
+    if n == num_blocks * block_size:
+        # tail-free fast path (static shape property): every slot is valid,
+        # so the pad masking/clamping passes are skipped entirely.  The
+        # subsample draw consumes the identical randomness, so estimates
+        # match the general path bit-for-bit.
+        _, order = jax.lax.top_k(-u, s)           # (B, s) w/o replacement
+        flat = (base[:, None] + order).reshape(-1)
+        kv = _ref.kv_matrix(y, x[flat], x_sq[flat], kind, inv_bw, beta,
+                            pairwise)
+        return kv.reshape(m, num_blocks, s).sum(-1) * (block_size / float(s))
     pos = base[:, None] + jnp.arange(block_size, dtype=jnp.int32)[None, :]
     valid_pos = pos < n
-    u = jax.random.uniform(key, (num_blocks, block_size))
     u = jnp.where(valid_pos, u, jnp.inf)          # invalid slots sort last
     _, order = jax.lax.top_k(-u, s)               # (B, s) w/o replacement
     idx = jnp.take_along_axis(pos, order, axis=1)
@@ -98,6 +117,18 @@ def exact_block_sums(y, x, x_sq, *, kind, inv_bw, beta, pairwise,
     return kv.reshape(m, num_blocks, block_size).sum(-1)
 
 
+def _pallas_pad(x, src, bm, block_size):
+    """Shared Pallas preamble: query rows padded to a bm multiple, own-block
+    indices padded with the -1 sentinel, dataset padded to a block_size
+    multiple at the far offset (kernel values ~0)."""
+    rem = (-src.shape[0]) % bm
+    q = _pad_rows(x[src], bm, 0.0)
+    own = jnp.pad((src // block_size).astype(jnp.int32), (0, rem),
+                  constant_values=-1)[:, None]
+    xp = _pad_rows(x, block_size, _PAD_OFFSET)
+    return q, own, xp, rem
+
+
 def _masked_block_sums(x, x_sq, src, key, *, kind, inv_bw, beta, pairwise,
                        block_size, num_blocks, n, s, exact):
     """Level-1 sums for a frontier of dataset indices, own-block corrected
@@ -120,58 +151,34 @@ def _masked_block_sums(x, x_sq, src, key, *, kind, inv_bw, beta, pairwise,
 
 @_jit
 def masked_block_sums(x, x_sq, src, key, *, kind, inv_bw, beta, pairwise,
-                      block_size, num_blocks, n, s, exact):
+                      block_size, num_blocks, n, s, exact, use_pallas=False,
+                      interpret=False, bm=128):
+    """Level-1 frontier read; dispatches to the Pallas masked-blocksum
+    kernel (no Gumbel state) on the exact+Pallas path."""
     TRACE_COUNTS["masked_block_sums"] += 1
-    return _masked_block_sums(x, x_sq, src, key, kind=kind, inv_bw=inv_bw,
-                              beta=beta, pairwise=pairwise,
-                              block_size=block_size, num_blocks=num_blocks,
-                              n=n, s=s, exact=exact)
+    return _masked_sums_any(x, x_sq, src, key, kind=kind, inv_bw=inv_bw,
+                            beta=beta, pairwise=pairwise,
+                            block_size=block_size, num_blocks=num_blocks,
+                            n=n, s=s, exact=exact, use_pallas=use_pallas,
+                            interpret=interpret, bm=bm)
 
 
 # --------------------------------------------------------------------- #
 # level-2: exact in-block rows
 # --------------------------------------------------------------------- #
 def _block_views(x, x_sq, block_size):
-    """(B, bs, d) / (B, bs) contiguous views of the (padded) dataset.
-    Built once per compiled program (hoisted out of walk-scan bodies); the
-    level-2 read then gathers w whole block *slices* instead of w*bs
-    random rows."""
-    pad = -x.shape[0] % block_size
-    xb_all = jnp.pad(x, ((0, pad), (0, 0))).reshape(-1, block_size,
-                                                    x.shape[1])
-    xb_sq_all = jnp.pad(x_sq, (0, pad)).reshape(-1, block_size)
-    return xb_all, xb_sq_all
+    """See ``ref.block_views`` -- shared with the oracles."""
+    return _ref.block_views(x, x_sq, block_size)
 
 
 def _level2_kv(x, x_sq, views, src, blk, *, kind, inv_bw, beta, pairwise,
                block_size, n):
-    """Exact kernel row of each source against its chosen block, with the
-    self edge and out-of-range tail columns masked to 0."""
-    xb_all, xb_sq_all = views
-    lo = blk * block_size
-    cols = lo[:, None] + jnp.arange(block_size, dtype=jnp.int32)[None, :]
-    valid = cols < n
-    cols_c = jnp.minimum(cols, n - 1)
-    xs = x[src]
-    kv = _ref.kv_rows(xs, xb_all[blk], x_sq[src], xb_sq_all[blk], kind,
-                      inv_bw, beta, pairwise)
-    live = valid & (cols_c != src[:, None])
-    return jnp.where(live, kv, 0.0), live, cols_c
+    """See ``ref.level2_row`` -- shared with the oracles."""
+    return _ref.level2_row(x, x_sq, views, src, blk, kind, inv_bw, beta,
+                           block_size, n, pairwise)
 
 
-def _level2_draw(kv, live, cols_c, u2):
-    """Inverse-CDF draw from each row of ``kv``; all-zero rows (numerically
-    underflowed blocks) fall back to uniform over the live columns instead
-    of producing NaN."""
-    rowsum = kv.sum(axis=1)
-    use = jnp.where((rowsum > 0.0)[:, None], kv, live.astype(jnp.float32))
-    c = jnp.cumsum(use, axis=1)
-    tot = c[:, -1]
-    j = jnp.sum((u2 * tot)[:, None] > c, axis=1).clip(0, kv.shape[1] - 1)
-    nb = jnp.take_along_axis(cols_c, j[:, None], axis=1)[:, 0]
-    pin = jnp.take_along_axis(use, j[:, None], axis=1)[:, 0] \
-        / jnp.maximum(tot, 1e-30)
-    return nb, pin
+_level2_draw = _ref.level2_draw
 
 
 def _choose_block(bs, key):
@@ -209,14 +216,10 @@ def _fused_sample(x, x_sq, src, key, *, kind, inv_bw, beta, pairwise,
     if exact and use_pallas:
         # Fully fused level-1: block sums + Gumbel-max draw in one Pallas pass.
         w = src.shape[0]
-        rem = (-w) % bm
         k_g, k_in = jax.random.split(k_rest)
-        q = _pad_rows(x[src], bm, 0.0)
-        own = jnp.pad((src // block_size).astype(jnp.int32), (0, rem),
-                      constant_values=-1)[:, None]
+        q, own, xp, rem = _pallas_pad(x, src, bm, block_size)
         gp = jnp.pad(jax.random.gumbel(k_g, (w, num_blocks)),
                      ((0, rem), (0, 0)))
-        xp = _pad_rows(x, block_size, _PAD_OFFSET)
         blk, pb, _, bs = _k.sample_block_pallas(
             q, xp, own, gp, kind, inv_bw, beta, bm=bm, bn=block_size,
             interpret=interpret)
@@ -261,12 +264,9 @@ def sample_from_block_sums(x, x_sq, src, bs, key, *, kind, inv_bw, beta,
                         block_size=block_size, n=n)
 
 
-@_jit
-def prob_of_from_block_sums(x, x_sq, src, dst, bs, *, kind, inv_bw, beta,
-                            pairwise, block_size, n):
-    """q(dst | src) the sampler assigns, from cached level-1 sums."""
-    TRACE_COUNTS["prob_of_from_block_sums"] += 1
-    views = _block_views(x, x_sq, block_size)
+def _prob_core(x, x_sq, views, src, dst, bs, *, kind, inv_bw, beta, pairwise,
+               block_size, n):
+    """q(dst | src) from given level-1 sums of the src frontier."""
     blk = (dst // block_size).astype(jnp.int32)
     pb = jnp.take_along_axis(bs, blk[:, None], axis=1)[:, 0] / bs.sum(axis=1)
     kv, _, _ = _level2_kv(x, x_sq, views, src, blk, kind=kind, inv_bw=inv_bw,
@@ -275,6 +275,114 @@ def prob_of_from_block_sums(x, x_sq, src, dst, bs, *, kind, inv_bw, beta,
     kd = jnp.take_along_axis(kv, (dst - blk * block_size)[:, None],
                              axis=1)[:, 0]
     return pb * kd / jnp.maximum(kv.sum(axis=1), 1e-30)
+
+
+@_jit
+def prob_of_from_block_sums(x, x_sq, src, dst, bs, *, kind, inv_bw, beta,
+                            pairwise, block_size, n):
+    """q(dst | src) the sampler assigns, from cached level-1 sums."""
+    TRACE_COUNTS["prob_of_from_block_sums"] += 1
+    views = _block_views(x, x_sq, block_size)
+    return _prob_core(x, x_sq, views, src, dst, bs, kind=kind, inv_bw=inv_bw,
+                      beta=beta, pairwise=pairwise, block_size=block_size,
+                      n=n)
+
+
+# --------------------------------------------------------------------- #
+# fused Algorithm 5.1 edge batches + batched LRA sketch rows
+# --------------------------------------------------------------------- #
+def _masked_sums_any(x, x_sq, src, key, *, kind, inv_bw, beta, pairwise,
+                     block_size, num_blocks, n, s, exact, use_pallas,
+                     interpret, bm):
+    """Masked level-1 sums for a frontier, dispatching to the Pallas
+    masked-blocksum kernel on the exact+Pallas path (no Gumbel state --
+    probability evaluation needs sums only)."""
+    if exact and use_pallas:
+        w = src.shape[0]
+        q, own, xp, _ = _pallas_pad(x, src, bm, block_size)
+        bs = _k.masked_blocksum_pallas(q, xp, own, kind, inv_bw, beta, bm=bm,
+                                       bn=block_size, interpret=interpret)
+        return bs[:w]
+    return _masked_block_sums(x, x_sq, src, key, kind=kind, inv_bw=inv_bw,
+                              beta=beta, pairwise=pairwise,
+                              block_size=block_size, num_blocks=num_blocks,
+                              n=n, s=s, exact=exact)
+
+
+def _edge_batch_core(x, x_sq, views, cdf, degs, inv_total, inv_t, key, *,
+                     batch, kind, inv_bw, beta, pairwise, block_size,
+                     num_blocks, n, s, exact, use_pallas, interpret, bm):
+    """One Algorithm 5.1 edge batch, steps (a)-(d), as straight-line device
+    code: u ~ degrees (inverse CDF over the device prefix array), v | u by
+    the depth-2 engine, the reverse probability, and the importance weight
+    ``k(u,v) / (t (p_u q_uv + p_v q_vu))``.
+
+    The reverse probability collapses algebraically (DESIGN.md §6): the
+    depth-2 factorization gives q(u | v) = S_v(blk_u)/deg(v) *
+    k(v,u)/S_v(blk_u) = k(u,v)/deg(v), so no level-1 read of the v
+    frontier is needed -- ``degs`` is the degree array the vertex sampler
+    already preprocessed, and p_v * q_vu further reduces to
+    k(u,v)/sum(deg).  The forward q_uv stays the *realized* sampling
+    probability (from the same level-1 sums that drew v)."""
+    k_u, k_fwd = jax.random.split(key)
+    u = _ref.inverse_cdf_index(cdf, jax.random.uniform(k_u, (batch,)))
+    v, q_uv, _ = _fused_sample(x, x_sq, u, k_fwd, kind=kind, inv_bw=inv_bw,
+                               beta=beta, pairwise=pairwise,
+                               block_size=block_size, num_blocks=num_blocks,
+                               n=n, s=s, exact=exact, use_pallas=use_pallas,
+                               interpret=interpret, bm=bm, views=views)
+    kuv = _ref.kv_pairs(x[u], x[v], kind, inv_bw, beta, pairwise)
+    q_vu = kuv / jnp.maximum(degs[v], _ref.BLOCK_SUM_FLOOR)
+    # q_e = p_u q_uv + p_v q_vu with p_i = deg_i / sum(deg); the second
+    # term telescopes to k(u,v) / sum(deg).
+    q_edge = inv_total * (degs[u] * q_uv + kuv)
+    wgt = kuv * inv_t / jnp.maximum(q_edge, 1e-30)
+    return u, v, wgt, q_uv, q_vu
+
+
+@_jit
+def fused_edge_batch(x, x_sq, cdf, degs, inv_total, inv_t, key, *, batch,
+                     kind, inv_bw, beta, pairwise, block_size, num_blocks, n,
+                     s, exact, use_pallas, interpret, bm):
+    """One fused Algorithm 5.1 edge batch: (u, v, weight, q_uv, q_vu)."""
+    TRACE_COUNTS["fused_edge_batch"] += 1
+    views = _block_views(x, x_sq, block_size)
+    return _edge_batch_core(x, x_sq, views, cdf, degs, inv_total, inv_t, key,
+                            batch=batch, kind=kind, inv_bw=inv_bw, beta=beta,
+                            pairwise=pairwise, block_size=block_size,
+                            num_blocks=num_blocks, n=n, s=s, exact=exact,
+                            use_pallas=use_pallas, interpret=interpret, bm=bm)
+
+
+@_jit
+def edge_batch_scan(x, x_sq, cdf, degs, inv_total, inv_t, keys, *, batch,
+                    kind, inv_bw, beta, pairwise, block_size, num_blocks, n,
+                    s, exact, use_pallas, interpret, bm):
+    """All T = len(keys) edge batches of the sparsifier in ONE program: a
+    ``lax.scan`` over per-batch keys whose body is one fused edge batch.
+    The whole Algorithm 5.1 sampling loop runs with a single dispatch and
+    a single device->host transfer of the (T, batch) edge lists."""
+    TRACE_COUNTS["edge_batch_scan"] += 1
+    views = _block_views(x, x_sq, block_size)
+
+    def body(_, k):
+        return None, _edge_batch_core(
+            x, x_sq, views, cdf, degs, inv_total, inv_t, k, batch=batch,
+            kind=kind, inv_bw=inv_bw, beta=beta, pairwise=pairwise,
+            block_size=block_size, num_blocks=num_blocks, n=n, s=s,
+            exact=exact, use_pallas=use_pallas, interpret=interpret, bm=bm)
+
+    _, out = jax.lax.scan(body, None, keys)
+    return out
+
+
+@_jit
+def kernel_rows(q, x, x_sq, *, kind, inv_bw, beta, pairwise):
+    """Exact (m, n) kernel rows in one program -- the FKV sketch rows and
+    the CP17 column reads of Section 5.2, replacing the host chunk loop
+    over ``kernel.pairwise``."""
+    TRACE_COUNTS["kernel_rows"] += 1
+    return _ref.kv_matrix(q, x, x_sq, kind, inv_bw, beta, pairwise)
 
 
 def _sample_exact_core(x, x_sq, views, src, bs, key, *, kind, inv_bw, beta,
@@ -316,21 +424,26 @@ def fused_sample_exact(x, x_sq, src, bs, key, *, kind, inv_bw, beta, pairwise,
 @_jit
 def walk_scan(x, x_sq, starts, keys, *, kind, inv_bw, beta, pairwise,
               block_size, num_blocks, n, s, exact, use_pallas, interpret, bm,
-              rounds, slack):
+              rounds, slack, record_path=True):
     """T-step random walk entirely on device: the frontier is scan carry,
     each step is one fused depth-2 sample (or rejection-exact step when
-    ``rounds > 0``).  Returns (endpoints, (T, w) path)."""
+    ``rounds > 0``).  Returns (endpoints, (T, w) path); with
+    ``record_path=False`` the path is never materialized (the scan emits no
+    per-step output, so long walks cost O(w) device memory, not O(T w))
+    and None is returned in its place.  The key stream is identical either
+    way, so endpoints match bitwise."""
     TRACE_COUNTS["walk_scan"] += 1
     views = _block_views(x, x_sq, block_size)  # hoisted out of the step body
 
     def body(cur, k):
         if rounds > 0:
             k_l1, k_rs = jax.random.split(k)
-            bs = _masked_block_sums(x, x_sq, cur, k_l1, kind=kind,
-                                    inv_bw=inv_bw, beta=beta,
-                                    pairwise=pairwise, block_size=block_size,
-                                    num_blocks=num_blocks, n=n, s=s,
-                                    exact=exact)
+            bs = _masked_sums_any(x, x_sq, cur, k_l1, kind=kind,
+                                  inv_bw=inv_bw, beta=beta,
+                                  pairwise=pairwise, block_size=block_size,
+                                  num_blocks=num_blocks, n=n, s=s,
+                                  exact=exact, use_pallas=use_pallas,
+                                  interpret=interpret, bm=bm)
             nxt = _sample_exact_core(x, x_sq, views, cur, bs, k_rs, kind=kind,
                                      inv_bw=inv_bw, beta=beta,
                                      pairwise=pairwise, block_size=block_size,
@@ -343,7 +456,7 @@ def walk_scan(x, x_sq, starts, keys, *, kind, inv_bw, beta, pairwise,
                                       num_blocks=num_blocks, n=n, s=s,
                                       exact=exact, use_pallas=use_pallas,
                                       interpret=interpret, bm=bm, views=views)
-        return nxt, nxt
+        return nxt, (nxt if record_path else None)
 
     end, path = jax.lax.scan(body, starts, keys)
     return end, path

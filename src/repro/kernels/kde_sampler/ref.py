@@ -68,7 +68,9 @@ def kv_rows(xs, xb, xs_sq, xb_sq, kind: str, inv_bw: float, beta: float,
     """Per-row block values k(xs_i, xb_i_j): xs (w, d), xb (w, bs, d) ->
     (w, bs).  The level-2 read of the depth-2 sampler."""
     if kind in _L2_KINDS:
-        cross = jnp.einsum("wd,wbd->wb", xs, xb)
+        # batched matvec via dot_general -- measurably faster than the
+        # equivalent einsum lowering on CPU for these thin shapes
+        cross = jax.lax.dot_general(xs, xb, (((1,), (2,)), ((0,), (0,))))
         d2 = xs_sq[:, None] + xb_sq - 2.0 * cross
         return _finish_l2(d2, kind, inv_bw, beta)
     if kind == "laplacian":
@@ -87,6 +89,68 @@ def kv_pairs(a, b, kind: str, inv_bw: float, beta: float,
         d1 = jnp.sum(jnp.abs(a - b), axis=-1)
         return jnp.exp(-d1 * inv_bw)
     return jax.vmap(lambda u, v: pairwise(u[None, :], v[None, :])[0, 0])(a, b)
+
+
+def inverse_cdf_index(cdf, u) -> jnp.ndarray:
+    """Vectorized inverse-CDF lookup over a normalized prefix array
+    (Algorithm 4.5 in its dense device form): cdf (n,) nondecreasing with
+    cdf[-1] ~= 1, u (w,) uniforms -> (w,) int32 indices.
+
+    The prefix array is accumulated in float64 on the host (see
+    ``core.sampling.vertex.PrefixCDF``) and only *rounded* to float32 for
+    the device lookup -- per-entry rounding is O(eps) and unbiased, unlike
+    float32 prefix accumulation whose error grows with n."""
+    idx = jnp.searchsorted(cdf, u, side="right")
+    return jnp.clip(idx, 0, cdf.shape[0] - 1).astype(jnp.int32)
+
+
+def block_views(x, x_sq, block_size: int):
+    """(B, bs, d) / (B, bs) contiguous views of the (padded) dataset.
+    Built once per compiled program; the level-2 read then gathers whole
+    block *slices* instead of w*bs random rows."""
+    pad = -x.shape[0] % block_size
+    xb_all = jnp.pad(x, ((0, pad), (0, 0))).reshape(-1, block_size,
+                                                    x.shape[1])
+    xb_sq_all = jnp.pad(x_sq, (0, pad)).reshape(-1, block_size)
+    return xb_all, xb_sq_all
+
+
+def level2_row(x, x_sq, views, src, blk, kind: str, inv_bw: float,
+               beta: float, block_size: int, n: int, pairwise=None):
+    """Exact kernel row of each source against its chosen block, with the
+    self edge and out-of-range tail columns masked to 0.  Shared by the
+    fused ops and the ref oracles (the level-2 math is identical on every
+    path; only the level-1 read differs)."""
+    xb_all, xb_sq_all = views
+    lo = blk * block_size
+    cols = lo[:, None] + jnp.arange(block_size, dtype=jnp.int32)[None, :]
+    xs = x[src]
+    kv = kv_rows(xs, xb_all[blk], x_sq[src], xb_sq_all[blk], kind,
+                 inv_bw, beta, pairwise)
+    if n % block_size == 0:
+        # tail-free fast path: every column is in range, so only the self
+        # edge needs masking
+        live = cols != src[:, None]
+        return jnp.where(live, kv, 0.0), live, cols
+    valid = cols < n
+    cols_c = jnp.minimum(cols, n - 1)
+    live = valid & (cols_c != src[:, None])
+    return jnp.where(live, kv, 0.0), live, cols_c
+
+
+def level2_draw(kv, live, cols_c, u2):
+    """Inverse-CDF draw from each row of ``kv``; all-zero rows (numerically
+    underflowed blocks) fall back to uniform over the live columns instead
+    of producing NaN."""
+    rowsum = kv.sum(axis=1)
+    use = jnp.where((rowsum > 0.0)[:, None], kv, live.astype(jnp.float32))
+    c = jnp.cumsum(use, axis=1)
+    tot = c[:, -1]
+    j = jnp.sum((u2 * tot)[:, None] > c, axis=1).clip(0, kv.shape[1] - 1)
+    nb = jnp.take_along_axis(cols_c, j[:, None], axis=1)[:, 0]
+    pin = jnp.take_along_axis(use, j[:, None], axis=1)[:, 0] \
+        / jnp.maximum(tot, 1e-30)
+    return nb, pin
 
 
 def masked_block_sums_ref(q, x, x_sq, own, kind: str, inv_bw: float,
@@ -114,3 +178,43 @@ def sample_block_ref(q, x, x_sq, own, gumbel, kind: str, inv_bw: float,
     tot = jnp.sum(bs, axis=1)
     pb = jnp.take_along_axis(bs, blk[:, None], axis=1)[:, 0] / tot
     return blk, pb, tot, bs
+
+
+def fused_edge_batch_ref(x, x_sq, cdf, degs, inv_total, inv_t, key,
+                         batch: int, kind: str, inv_bw: float, beta: float,
+                         block_size: int, num_blocks: int, n: int,
+                         pairwise=None):
+    """Oracle of ``ops.fused_edge_batch`` on its Pallas (exact level-1)
+    path: Algorithm 5.1 steps (a)-(d) for one batch, with the identical
+    key-split discipline -- u ~ degrees by inverse CDF, v by Gumbel-max
+    block draw + exact in-block draw, the collapsed reverse probability
+    q(u | v) = k(u,v)/deg(v), and the reweighting
+    ``k(u,v) / (t (p_u q_uv + p_v q_vu))``.
+
+    The level-1 sums come from ``sample_block_ref`` (pure jnp) where the
+    op runs the Pallas kernel; everything else is shared code, so
+    interpret-mode runs of the op must reproduce (u, v) bit-for-bit and
+    the floats to f32 tolerance."""
+    from repro.kernels.kde_rowsum.ops import _PAD_OFFSET, _pad_rows
+    views = block_views(x, x_sq, block_size)
+    xp = _pad_rows(x, block_size, _PAD_OFFSET)
+    xp_sq = jnp.sum(xp * xp, axis=-1)
+    k_u, k_fwd = jax.random.split(key)
+    u = inverse_cdf_index(cdf, jax.random.uniform(k_u, (batch,)))
+    # forward draw v | u -- mirrors _fused_sample's Pallas branch
+    _, k_rest = jax.random.split(k_fwd)
+    k_g, k_in = jax.random.split(k_rest)
+    g = jax.random.gumbel(k_g, (batch, num_blocks))
+    blk, pb, _, _ = sample_block_ref(x[u], xp, xp_sq,
+                                     (u // block_size).astype(jnp.int32), g,
+                                     kind, inv_bw, beta, block_size, pairwise)
+    kv, live, cols_c = level2_row(x, x_sq, views, u, blk, kind, inv_bw, beta,
+                                  block_size, n, pairwise)
+    v, pin = level2_draw(kv, live, cols_c,
+                         jax.random.uniform(k_in, (batch,)))
+    q_uv = pb * pin
+    kuv = kv_pairs(x[u], x[v], kind, inv_bw, beta, pairwise)
+    q_vu = kuv / jnp.maximum(degs[v], BLOCK_SUM_FLOOR)
+    q_edge = inv_total * (degs[u] * q_uv + kuv)
+    wgt = kuv * inv_t / jnp.maximum(q_edge, 1e-30)
+    return u, v, wgt, q_uv, q_vu

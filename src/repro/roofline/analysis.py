@@ -6,7 +6,7 @@ Terms (seconds, per step):
   collective = per-device collective bytes / 50 GB/s/link
 
 FLOPs / HBM bytes come from the analytic model (roofline/flops.py) because
-XLA cost_analysis counts while(=scan) bodies once (measured; DESIGN.md §6);
+XLA cost_analysis counts while(=scan) bodies once (measured);
 raw cost_analysis values are recorded alongside.  Collective bytes are
 parsed from ``compiled.as_text()`` -- the post-SPMD per-device program -- by
 summing operand sizes of all-gather / all-reduce / reduce-scatter /

@@ -45,6 +45,29 @@ print("SHARDED_KDE_OK")
     assert "SHARDED_KDE_OK" in out
 
 
+def test_degree_preprocessing_multi_axis_mesh():
+    """Regression: the ring permutation in degree_preprocessing must run
+    over the *flattened* index of all data axes.  On a ("pod", "data") =
+    (4, 2) mesh the old ring covered axis_size(axes[0]) = 4 of 8 shards and
+    silently dropped half the dataset's contributions."""
+    out = _run("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core.kernels_fn import gaussian
+from repro.core.kde.distributed import degree_preprocessing, make_sharded_dataset
+ker = gaussian(1.0)
+rng = np.random.default_rng(0)
+x = rng.normal(0, 0.6, (256, 5)).astype(np.float32)
+mesh = jax.make_mesh((4, 2), ("pod", "data"))
+xs = make_sharded_dataset(mesh, x, data_axes=("pod", "data"))
+deg = degree_preprocessing(mesh, ker, data_axes=("pod", "data"))
+got = np.asarray(deg(xs))
+want = np.asarray(ker.matrix(jnp.asarray(x)).sum(1)) - 1.0
+np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+print("MULTIAXIS_DEG_OK")
+""")
+    assert "MULTIAXIS_DEG_OK" in out
+
+
 def test_sharded_block_sums():
     out = _run("""
 import jax, jax.numpy as jnp, numpy as np

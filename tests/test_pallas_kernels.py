@@ -69,6 +69,26 @@ def test_kde_sampler_block_vs_ref(kind, ker, m, n, d, bn, bm):
     np.testing.assert_allclose(np.asarray(tot), np.asarray(rtot), rtol=2e-4)
 
 
+@pytest.mark.parametrize("kind,ker", [
+    ("gaussian", gaussian(1.3)), ("laplacian", laplacian(2.0))])
+def test_kde_sampler_masked_blocksum_vs_ref(kind, ker):
+    """The Gumbel-free masked-blocksum Pallas kernel (the level-1 read of
+    prob_of / sample_exact / exact walks on TPU) agrees with the jnp
+    oracle."""
+    m, n, d, bn, bm = 32, 256, 6, 64, 16
+    q = jnp.asarray(RNG.normal(0, 0.5, (m, d)).astype(np.float32))
+    x = jnp.asarray(RNG.normal(0, 0.5, (n, d)).astype(np.float32))
+    own = jnp.asarray(RNG.integers(-1, n // bn, m).astype(np.int32))[:, None]
+    inv_bw = 1.0 / ker.bandwidth
+    bs = sk.masked_blocksum_pallas(q, x, own, kind, inv_bw, 1.0, bm=bm,
+                                   bn=bn, interpret=True)
+    x_sq = jnp.sum(x * x, axis=-1)
+    ref = sref.masked_block_sums_ref(q, x, x_sq, own[:, 0], kind, inv_bw,
+                                     1.0, bn, ker.pairwise)
+    np.testing.assert_allclose(np.asarray(bs), np.asarray(ref), rtol=2e-4,
+                               atol=1e-6)
+
+
 def test_kde_sampler_fused_pallas_engine_law():
     """End-to-end sampler with the Pallas level-1 (interpret mode): the
     neighbor distribution matches the exact k(u, v)/deg(u) law and matches

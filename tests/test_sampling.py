@@ -17,7 +17,7 @@ from repro.core.kernels_fn import gaussian
 from repro.core.sampling.edge import (EdgeSampler, NeighborSampler,
                                       _categorical_rows)
 from repro.core.sampling.rownorm import RowNormSampler
-from repro.core.sampling.vertex import (DegreeSampler,
+from repro.core.sampling.vertex import (DegreeSampler, PrefixCDF,
                                         sample_from_positive_array,
                                         tree_descent_sample)
 from repro.core.sampling.walks import random_walks
@@ -63,6 +63,46 @@ if hypothesis is not None:
 else:
     def test_tree_descent_equals_dense_sampling():
         _tree_vs_dense_check(np.random.default_rng(2).uniform(0.01, 10.0, 17))
+
+
+def test_prefix_cdf_float32_bias_regression():
+    """Float32 prefix accumulation can swallow small weights entirely once
+    the running sum is large -- those indices become unsampleable.  The
+    shared PrefixCDF path accumulates in float64, so the tail keeps exactly
+    its target mass."""
+    n = 1 << 16
+    a = np.ones(n)
+    a[0] = 2.0e7                       # ulp(2e7) = 2 in float32: +1.0 is lost
+    bad = np.cumsum(a.astype(np.float32))
+    assert bad[-1] == bad[0], "float32 cumsum should exhibit the bias"
+    cdf = PrefixCDF(a, seed=0)
+    draws = 20000
+    s = cdf.sample(draws)
+    tail_mass = (n - 1) / (2.0e7 + n - 1)          # ~3.3e-3
+    hits = int((s > 0).sum())
+    expect = draws * tail_mass                     # ~65; Poisson sigma ~ 8
+    assert abs(hits - expect) < 6.0 * np.sqrt(expect), (hits, expect)
+    # the float64 prefix is strictly increasing -- no swallowed entries
+    assert np.all(np.diff(cdf._prefix) > 0)
+
+
+def test_prefix_cdf_large_n_empirical_frequencies():
+    """Large-n regression: empirical frequencies track the target
+    distribution (aggregated into buckets so the test has power)."""
+    rng = np.random.default_rng(0)
+    n, draws, buckets = 200_000, 50_000, 100
+    w = rng.uniform(0.5, 1.5, n)
+    cdf = PrefixCDF(w, seed=1)
+    s = cdf.sample(draws)
+    edges = np.linspace(0, n, buckets + 1).astype(np.int64)
+    target = np.add.reduceat(w, edges[:-1]) / w.sum()
+    emp = np.histogram(s, bins=edges)[0] / draws
+    assert tv(emp, target) < 3.0 * np.sqrt(buckets / draws)
+    # device CDF export: rounded from the f64 accumulation, ends at 1
+    dev = np.asarray(cdf.cdf_device)
+    assert abs(float(dev[-1]) - 1.0) < 1e-6
+    np.testing.assert_allclose(np.asarray(cdf.probs_device),
+                               w / w.sum(), rtol=1e-4)
 
 
 def test_degree_sampling_distribution(graph):
@@ -257,6 +297,21 @@ def test_random_walk_record_path(graph):
     np.testing.assert_array_equal(path[-1], ends)
     # every step moves to a *different* vertex (self edges are masked)
     assert np.all(path[1:] != path[:-1])
+
+
+def test_random_walk_record_path_off_identical_endpoints(graph):
+    """record_path=False skips the (T, w) path stack but consumes the same
+    key stream: endpoints are bitwise identical, and no path is returned."""
+    x, ker, _ = graph
+    starts = np.arange(48, dtype=np.int64)
+    nb1 = NeighborSampler(x, ker, mode="blocked", exact_blocks=True, seed=9)
+    end1, path = nb1.walk(starts, 6, record_path=True)
+    assert path.shape == (6, 48)
+    nb2 = NeighborSampler(x, ker, mode="blocked", exact_blocks=True, seed=9)
+    end2, nopath = nb2.walk(starts, 6, record_path=False)
+    assert nopath is None
+    np.testing.assert_array_equal(end1, end2)
+    np.testing.assert_array_equal(end1, path[-1])
 
 
 def test_categorical_rows_zero_row_guard():

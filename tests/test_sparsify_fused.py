@@ -1,0 +1,160 @@
+"""Fused Algorithm 5.1 edge pipeline (DESIGN.md §6): ref-oracle agreement
+in interpret mode, unbiasedness of E[L'], sample/prob_of consistency through
+the fused path, and the kernel_evals / kde_queries counter audit."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.kernels_fn import gaussian
+from repro.core.laplacian import laplacian_dense
+from repro.core.sampling.edge import NeighborSampler
+from repro.core.sampling.vertex import DegreeSampler
+from repro.core.sparsify import spectral_sparsify
+from repro.kernels.kde_sampler import ops as sops
+from repro.kernels.kde_sampler import ref as sref
+
+
+@pytest.fixture(scope="module")
+def graph():
+    rng = np.random.default_rng(7)
+    x = rng.normal(0, 0.5, (300, 5)).astype(np.float32)
+    ker = gaussian(bandwidth=1.5)
+    k = np.asarray(ker.matrix(jnp.asarray(x)), np.float64)
+    return x, ker, k
+
+
+def _degree_cdf(k):
+    deg = k.sum(1) - 1.0
+    prefix = np.cumsum(deg)
+    cdf = jnp.asarray((prefix / prefix[-1]).astype(np.float32))
+    degs = jnp.asarray(deg.astype(np.float32))
+    return deg, cdf, degs, float(prefix[-1])
+
+
+def test_fused_edge_batch_matches_ref_oracle_interpret(graph):
+    """The fused edge-batch op on its Pallas path (interpret mode on CPU)
+    reproduces the ref.py oracle: (u, v) bit-for-bit, floats to f32
+    tolerance -- same PRNGKey, same key-split discipline."""
+    x, ker, k = graph
+    n, bs, bm, batch = 300, 32, 16, 64
+    nb = (n + bs - 1) // bs
+    xd = jnp.asarray(x)
+    x_sq = jnp.sum(xd * xd, axis=-1)
+    _, cdf, degs, total = _degree_cdf(k)
+    cfg = dict(kind="gaussian", inv_bw=1.0 / 1.5, beta=1.0, pairwise=None,
+               block_size=bs, num_blocks=nb, n=n, s=8, exact=True,
+               use_pallas=True, interpret=True, bm=bm)
+    key = jax.random.PRNGKey(11)
+    got = sops.fused_edge_batch(xd, x_sq, cdf, degs, 1.0 / total, 1.0 / 1000,
+                                key, batch=batch, **cfg)
+    want = sref.fused_edge_batch_ref(xd, x_sq, cdf, degs, 1.0 / total,
+                                     1.0 / 1000, key, batch, "gaussian",
+                                     1.0 / 1.5, 1.0, bs, nb, n)
+    u, v, w, q_uv, q_vu = [np.asarray(a) for a in got]
+    ru, rv, rw, rq_uv, rq_vu = [np.asarray(a) for a in want]
+    np.testing.assert_array_equal(u, ru)
+    np.testing.assert_array_equal(v, rv)
+    np.testing.assert_allclose(w, rw, rtol=2e-4)
+    np.testing.assert_allclose(q_uv, rq_uv, rtol=2e-4)
+    np.testing.assert_allclose(q_vu, rq_vu, rtol=2e-4)
+
+
+def test_fused_edge_batch_realized_probs_are_exact_law(graph):
+    """With exact level-1 reads, the q_uv / q_vu the fused op reports ARE
+    the true conditional neighbor probabilities k(u,v)/deg(u)."""
+    x, ker, k = graph
+    nbr = NeighborSampler(x, ker, mode="blocked", exact_blocks=True, seed=3)
+    deg, cdf, degs, total = _degree_cdf(k)
+    u, v, w, q_uv, q_vu = nbr.edge_batches(cdf, degs, total, 256, batch=256)
+    koff = k.copy()
+    np.fill_diagonal(koff, 0.0)
+    np.testing.assert_allclose(q_uv, koff[u, v] / koff[u].sum(1), rtol=1e-3,
+                               atol=1e-9)
+    np.testing.assert_allclose(q_vu, koff[v, u] / koff[v].sum(1), rtol=1e-3,
+                               atol=1e-9)
+
+
+def test_fused_prob_of_consistent_through_new_path(graph):
+    """prob_of recomputes exactly the probabilities the fused edge op
+    realized (exact level-1 reads -> both are deterministic reads of the
+    same law)."""
+    x, ker, _ = graph
+    nbr = NeighborSampler(x, ker, mode="blocked", exact_blocks=True, seed=5)
+    _, cdf, degs, total = _degree_cdf(np.asarray(ker.matrix(nbr.x),
+                                                 np.float64))
+    u, v, _, q_uv, q_vu = nbr.edge_batches(cdf, degs, total, 200, batch=200)
+    np.testing.assert_allclose(q_uv, nbr.prob_of(u, v), rtol=1e-4,
+                               atol=1e-10)
+    np.testing.assert_allclose(q_vu, nbr.prob_of(v, u), rtol=1e-4,
+                               atol=1e-10)
+
+
+def test_fused_vertex_marginal_matches_degrees(graph):
+    """The device inverse-CDF vertex draw samples u ~ degrees."""
+    x, ker, k = graph
+    nbr = NeighborSampler(x, ker, mode="blocked", exact_blocks=True, seed=0)
+    deg, cdf, degs, total = _degree_cdf(k)
+    reps = 30000
+    u, _, _, _, _ = nbr.edge_batches(cdf, degs, total, reps, batch=1024)
+    emp = np.bincount(u, minlength=len(deg)) / len(u)
+    p = deg / deg.sum()
+    assert 0.5 * np.abs(emp - p).sum() < 3.0 * np.sqrt(len(deg) / reps)
+
+
+def test_sparsifier_expected_laplacian_unbiased():
+    """E[L'] = L: averaging independent fused sparsifiers converges to the
+    dense Laplacian (Alg 5.1's importance weights cancel the sampling law
+    exactly when the realized probabilities are exact)."""
+    rng = np.random.default_rng(0)
+    n = 64
+    x = rng.normal(0, 0.4, (n, 4)).astype(np.float32)
+    ker = gaussian(bandwidth=1.5)
+    l_true = laplacian_dense(ker, x)
+    acc = np.zeros_like(l_true)
+    reps = 12
+    t = 3000
+    for r in range(reps):
+        g = spectral_sparsify(x, ker, num_edges=t, estimator="exact_block",
+                              exact_blocks=True, seed=100 + r)
+        acc += g.laplacian_dense()
+    acc /= reps
+    rel = np.linalg.norm(acc - l_true, "fro") / np.linalg.norm(l_true, "fro")
+    assert rel < 0.05, rel
+
+
+def test_sparsifier_counters_match_analytic():
+    """kernel_evals / kde_queries match the analytic counts of the fused
+    pipeline (shared level-1 estimator + one scan program)."""
+    rng = np.random.default_rng(1)
+    n, t, batch, spb = 400, 1000, 256, 8
+    x = rng.normal(0, 0.5, (n, 5)).astype(np.float32)
+    ker = gaussian(bandwidth=1.5)
+    drawn = ((t + batch - 1) // batch) * batch
+
+    # stratified level-1 reads, shared estimator
+    g = spectral_sparsify(x, ker, num_edges=t, estimator="stratified",
+                          samples_per_block=spb, seed=0, batch=batch)
+    nbr = NeighborSampler(x, ker, mode="blocked", samples_per_block=spb)
+    bs, nb = nbr.block_size, nbr.num_blocks
+    assert g.kernel_evals == n * nb * spb + drawn * (nb * spb + bs + 1)
+    assert g.kde_queries == n + drawn
+
+    # exact level-1 reads, shared estimator
+    g = spectral_sparsify(x, ker, num_edges=t, estimator="exact",
+                          exact_blocks=True, seed=0, batch=batch)
+    assert g.kernel_evals == n * n + drawn * (n + bs + 1)
+    assert g.kde_queries == n + drawn
+
+
+def test_fused_edge_batches_hit_compiled_path(graph):
+    """Repeated edge_batches calls with the same shapes never retrace."""
+    x, ker, k = graph
+    nbr = NeighborSampler(x, ker, mode="blocked", exact_blocks=True, seed=0)
+    _, cdf, degs, total = _degree_cdf(k)
+    nbr.edge_batches(cdf, degs, total, 512, batch=128)   # traces the scan
+    before = dict(sops.TRACE_COUNTS)
+    for _ in range(3):
+        nbr.edge_batches(cdf, degs, total, 512, batch=128)
+    assert dict(sops.TRACE_COUNTS) == before, \
+        "fused edge-batch scan retraced or fell off the compiled path"
