@@ -1,27 +1,172 @@
-"""Theorems 6.15 / 6.17: arboricity and weighted-triangle estimation
-accuracy vs the exact oracles.
+"""Graph applications: engine benchmark + Theorems 6.15 / 6.17 accuracy.
+
+Part 1 (engine): the fused triangle inner loop (``triangle_edge_scan`` --
+degree-ordered orientation, one shared level-1 read, all neighbor draws and
+the reweighting under ``lax.scan``, DESIGN.md §7) and the fused arboricity
+edge sampler (``edge_batch_scan``) against FROZEN copies of the PR-2 host
+loops: per-draw ``nbr.sample`` + an (m, m) pairwise matrix materialized for
+its diagonal (triangles), and the five-round-trip-per-batch edge loop
+(arboricity).  Writes ``BENCH_graph.json`` with inner-loop throughput and
+speedups; the PR-3 acceptance floor is >= 3x at n = 16384 on CPU.
+
+derived = "draws_per_sec=<new>;host_draws_per_sec=<old>;speedup=<x>"
+
+Part 2 (accuracy): estimator accuracy vs the exact dense oracles.
 
 derived = "rel_err=<e>;kernel_evals=<n>"
 """
 from __future__ import annotations
 
+import json
 import time
+from pathlib import Path
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit
 from repro.core.graph.arboricity import estimate_arboricity, exact_arboricity
 from repro.core.graph.triangles import (estimate_triangle_weight,
                                         exact_triangle_weight)
-from repro.core.kernels_fn import gaussian
+from repro.core.kernels_fn import Kernel, gaussian
+from repro.core.sampling.edge import NeighborSampler
+from repro.core.sampling.vertex import DegreeSampler, approximate_degrees
 from repro.data.synthetic_points import gaussian_clusters
 
+_JSON_PATH = Path(__file__).resolve().parent.parent / "BENCH_graph.json"
 
-def run(quick: bool = False):
+
+# --------------------------------------------------------------------- #
+# Frozen PR-2 host loops -- the baselines every engine change is measured
+# against.  Do not "fix" these copies; they are the reference.
+# --------------------------------------------------------------------- #
+def _precedes_host(deg: np.ndarray, a: np.ndarray, b: np.ndarray):
+    return (deg[a] < deg[b]) | ((deg[a] == deg[b]) & (a < b))
+
+
+def _host_triangle_inner(kernel: Kernel, nbr: NeighborSampler,
+                         deg: np.ndarray, u: np.ndarray, v: np.ndarray,
+                         neighbor_samples: int) -> np.ndarray:
+    """Frozen seed inner loop: one ``nbr.sample`` round-trip per draw and
+    an (m, m) pairwise matrix materialized per draw for its diagonal."""
+    xj = nbr.x
+    kuv = np.diagonal(np.asarray(
+        kernel.pairwise(xj[jnp.asarray(u)], xj[jnp.asarray(v)])))
+    w_hat = np.zeros(len(u))
+    for _ in range(neighbor_samples):
+        w, _ = nbr.sample(v)
+        valid = _precedes_host(deg, v, w) & (w != u)
+        kuw = np.diagonal(np.asarray(
+            kernel.pairwise(xj[jnp.asarray(u)], xj[jnp.asarray(w)])))
+        w_hat += valid * kuv * kuw
+    return w_hat * deg[v] / neighbor_samples
+
+
+def _host_arboricity_edges(deg: DegreeSampler, nbr: NeighborSampler,
+                           kernel: Kernel, m: int, batch: int = 512):
+    """Frozen seed edge loop: five device round-trips per batch."""
+    xj = nbr.x
+    srcs, dsts, ws = [], [], []
+    for lo in range(0, m, batch):
+        b = min(batch, m - lo)
+        u = deg.sample(b)
+        v, q_uv = nbr.sample(u)
+        q_vu = nbr.prob_of(v, u)
+        p_e = deg.prob(u) * q_uv + deg.prob(v) * q_vu
+        kuv = np.diagonal(np.asarray(kernel.pairwise(
+            xj[jnp.asarray(u)], xj[jnp.asarray(v)])))
+        srcs.append(u)
+        dsts.append(v)
+        ws.append(kuv / (m * np.maximum(p_e, 1e-30)))
+    return np.concatenate(srcs), np.concatenate(dsts), np.concatenate(ws)
+
+
+def _time(fn, repeats=3, warmup=1):
+    """Best-of-N wall time: robust against background load on shared CPUs."""
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    return min(times)
+
+
+def _engine(quick: bool):
+    rows, results = [], []
+    n = 4096 if quick else 16384
+    m, ns, d, spb = 2048, 16, 16, 16
+    rng = np.random.default_rng(0)
+    x = rng.normal(0, 0.5, (n, d)).astype(np.float32)
+    ker = gaussian(bandwidth=4.0)
+
+    # ---------------- triangles: fused scan vs frozen per-draw loop
+    nbr_f = NeighborSampler(x, ker, mode="blocked", samples_per_block=spb,
+                            seed=2)
+    deg_f = approximate_degrees(nbr_f.blocks)
+    degs_dev = jnp.asarray(deg_f, jnp.float32)
+    u = rng.integers(0, n, size=m)
+    v = rng.integers(0, n - 1, size=m)
+    v = np.where(v >= u, v + 1, v)
+    t_fused = _time(lambda: nbr_f.triangle_batches(u, v, degs_dev, ns),
+                    repeats=5, warmup=1)
+
+    nbr_h = NeighborSampler(x, ker, mode="blocked", samples_per_block=spb,
+                            seed=2)
+    deg_h = approximate_degrees(nbr_h.blocks)
+    swap = ~_precedes_host(deg_h, u, v)          # seed oriented on host
+    uo = np.where(swap, v, u)
+    vo = np.where(swap, u, v)
+    t_host = _time(lambda: _host_triangle_inner(ker, nbr_h, deg_h, uo, vo,
+                                                ns),
+                   repeats=3, warmup=1)
+
+    draws = m * ns
+    tri_speedup = t_host / t_fused
+    rows.append(emit(
+        f"triangles/inner_loop/n={n}", t_fused * 1e6,
+        f"draws_per_sec={draws / t_fused:.0f};"
+        f"host_draws_per_sec={draws / t_host:.0f};"
+        f"speedup={tri_speedup:.1f}x"))
+    results.append(dict(
+        pipeline="triangles", n=n, num_edges=m, neighbor_samples=ns,
+        inner_loop_sec=dict(fused=t_fused, host_loop=t_host),
+        draws_per_sec=dict(fused=draws / t_fused, host_loop=draws / t_host),
+        speedup=tri_speedup))
+
+    # ---------------- arboricity: fused edge scan vs frozen batch loop
+    t_edges = 4096
+    deg_s = DegreeSampler(nbr_f.blocks, seed=1)
+    cdf, degs = deg_s.cdf_device, deg_s.degrees_device
+    t_arb_fused = _time(lambda: nbr_f.edge_batches(cdf, degs, deg_s.total,
+                                                   t_edges, batch=1024),
+                        repeats=5, warmup=1)
+    deg_s2 = DegreeSampler(nbr_h.blocks, seed=1)
+    t_arb_host = _time(lambda: _host_arboricity_edges(deg_s2, nbr_h, ker,
+                                                      t_edges, batch=512),
+                       repeats=3, warmup=1)
+    arb_speedup = t_arb_host / t_arb_fused
+    rows.append(emit(
+        f"arboricity/inner_loop/n={n}", t_arb_fused * 1e6,
+        f"edges_per_sec={t_edges / t_arb_fused:.0f};"
+        f"host_edges_per_sec={t_edges / t_arb_host:.0f};"
+        f"speedup={arb_speedup:.1f}x"))
+    results.append(dict(
+        pipeline="arboricity", n=n, num_edges=t_edges,
+        inner_loop_sec=dict(fused=t_arb_fused, host_loop=t_arb_host),
+        edges_per_sec=dict(fused=t_edges / t_arb_fused,
+                           host_loop=t_edges / t_arb_host),
+        speedup=arb_speedup))
+    return rows, results
+
+
+def _accuracy(quick: bool):
+    rows, results = [], []
     n = 600 if quick else 1200
     x, _ = gaussian_clusters(n=n, d=4, k=2, spread=0.3, sep=1.2, seed=3)
     ker = gaussian(bandwidth=1.0)
-    rows = []
 
     truth = exact_arboricity(ker, x)
     for budget in (2 * n, 8 * n):
@@ -32,15 +177,29 @@ def run(quick: bool = False):
         rel = abs(res.density - truth) / truth
         rows.append(emit(f"arboricity/m={budget}", us,
                          f"rel_err={rel:.4f};kernel_evals={res.kernel_evals}"))
+        results.append(dict(pipeline="arboricity_accuracy", n=n, m=budget,
+                            rel_err=rel, kernel_evals=res.kernel_evals))
 
     truth_t = exact_triangle_weight(ker, x)
-    for ne, ns in ((200, 8), (600, 24)):
+    for ne, nsamp in ((200, 8), (600, 24)):
         t0 = time.perf_counter()
         res = estimate_triangle_weight(x, ker, num_edges=ne,
-                                       neighbor_samples=ns,
+                                       neighbor_samples=nsamp,
                                        estimator="stratified", seed=0)
         us = (time.perf_counter() - t0) * 1e6
         rel = abs(res.total_weight - truth_t) / truth_t
-        rows.append(emit(f"triangles/R={ne}x{ns}", us,
+        rows.append(emit(f"triangles/R={ne}x{nsamp}", us,
                          f"rel_err={rel:.4f};kernel_evals={res.kernel_evals}"))
-    return rows
+        results.append(dict(pipeline="triangles_accuracy", n=n, m=ne,
+                            neighbor_samples=nsamp, rel_err=rel,
+                            kernel_evals=res.kernel_evals))
+    return rows, results
+
+
+def run(quick: bool = False):
+    rows, results = _engine(quick)
+    rows2, results2 = _accuracy(quick)
+    _JSON_PATH.write_text(json.dumps(dict(
+        benchmark="bench_graph", backend=jax.default_backend(), quick=quick,
+        results=results + results2), indent=2) + "\n")
+    return rows + rows2

@@ -1,8 +1,10 @@
 """Kernel-graph analytics over LM embeddings -- the paper's algorithms run
-against framework tensors (DESIGN.md §3).
+against framework tensors (DESIGN.md §3), every pipeline on the fused
+device engine (DESIGN.md §7).
 
 Trains a tiny LM for a few steps, takes its token-embedding table, and runs
-the paper's pipeline on the embedding kernel graph: sparsify, cluster,
+the full Table-1 application suite on the embedding kernel graph: sparsify,
+spectral + local clustering, a Laplacian solve, the top eigenvalue,
 arboricity, triangle weight.  This is the kind of corpus/embedding analysis
 (e.g. vocabulary community structure) the kernel-graph toolkit enables at
 scales where the n x n matrix cannot exist.
@@ -16,10 +18,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ShapeConfig, get_reduced
+from repro.core.cluster.local import same_cluster_test
+from repro.core.cluster.spectral import spectral_cluster
+from repro.core.eigen import top_eigenvalue
 from repro.core.graph.arboricity import estimate_arboricity
 from repro.core.graph.triangles import estimate_triangle_weight
 from repro.core.kernels_fn import gaussian, median_bandwidth
-from repro.core.cluster.spectral import spectral_cluster
+from repro.core.laplacian import cg_laplacian
 from repro.core.sparsify import spectral_sparsify
 from repro.data.pipeline import make_batch
 from repro.models import transformer as T
@@ -54,6 +59,31 @@ def main():
     sizes = np.bincount(res.labels)
     print(f"token communities: sizes={sizes.tolist()} "
           f"(bottom eigenvalues {np.round(res.eigenvalues, 4).tolist()})")
+
+    # Laplacian solve on the sparsifier (Section 5.1.1, fused device CG).
+    b = np.random.default_rng(0).standard_normal(n)
+    b -= b.mean()
+    sol, resid = cg_laplacian(g, b, iters=200)
+    print(f"Laplacian solve on the sparsifier: residual {resid:.2e}")
+
+    # Same-cluster test between two tokens (Algorithm 6.1, one fused walk).
+    same = np.where(res.labels == res.labels[0])[0]
+    diff = np.where(res.labels != res.labels[0])[0]
+    i0 = int(same[1]) if len(same) > 1 else 1
+    i1 = int(diff[0]) if len(diff) else n - 1
+    lc = same_cluster_test(emb, kernel, 0, i1, walk_length=5, num_walks=200,
+                           seed=0)
+    print(f"same-cluster(0, {i1})? {lc.same_cluster} "
+          f"(stat {lc.statistic:.2e} vs thr {lc.threshold:.2e}); "
+          f"same-cluster(0, {i0})? "
+          f"{same_cluster_test(emb, kernel, 0, i0, walk_length=5, num_walks=200, seed=1).same_cluster}")
+
+    # Top eigenvalue from a submatrix (Algorithm 5.18, fused noisy power).
+    eig = top_eigenvalue(emb, kernel, t=min(192, n), method="noisy_power",
+                         seed=0)
+    print(f"top eigenvalue ~ {eig.eigenvalue:.1f} "
+          f"({eig.kernel_evals:,} evals + "
+          f"{eig.matvec_sampled_evals:,} sampled matvec lookups)")
 
     arb = estimate_arboricity(emb, kernel, num_edges=4 * n,
                               estimator="stratified", seed=0)

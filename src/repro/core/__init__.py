@@ -1,4 +1,6 @@
-"""Public API: the paper's algorithms, composable over black-box KDE queries.
+"""Public API: the paper's algorithms (Sections 4-6), composable over
+black-box KDE queries (Definition 1.1).  See README.md for the full
+paper -> module map.
 
     from repro.core import (gaussian, spectral_sparsify, fkv_lowrank,
                             top_eigenvalue, approximate_spectrum, ...)

@@ -6,11 +6,18 @@ with the CDVV14 l2 distribution tester.  Same cluster => ||p_u - p_w||_2^2
 <= 1/(8n) (Lemma 6.7); different clusters => >= 2/n (disjoint supports up to
 escape probability, Lemma 6.8).  We threshold the unbiased collision
 statistic at 1/n, the geometric midpoint of the two regimes.
+
+Fused (DESIGN.md §7): BOTH endpoints' Poissonized walk ensembles run as one
+``walk_scan`` program (the seed launched two separate host walk calls), and
+the collision part of the statistic -- sum_i (X_i - Y_i)^2 over endpoint
+counts -- is one segment-sum program (``ops.signed_endpoint_stat``) instead
+of two host ``np.bincount`` passes.
 """
 from __future__ import annotations
 
 import dataclasses
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.sampling.edge import NeighborSampler
@@ -29,6 +36,9 @@ def l2_distance_statistic(counts_p: np.ndarray, counts_q: np.ndarray,
 
 @dataclasses.dataclass
 class LocalClusterResult:
+    """Algorithm 6.1 output: the thresholded CDVV14 decision plus the raw
+    statistic, the walk budget spent, and the kernel-eval cost."""
+
     same_cluster: bool
     statistic: float
     threshold: float
@@ -41,20 +51,40 @@ def same_cluster_test(x, kernel, u: int, w: int, walk_length: int,
                       num_walks: int, seed: int = 0,
                       sampler: NeighborSampler | None = None,
                       threshold: float | None = None) -> LocalClusterResult:
-    """Algorithm 6.1.  num_walks ~ O(sqrt(n k / eps) log(1/eps)) per Thm 6.9."""
+    """Algorithm 6.1 / Theorem 6.9: decide whether u and w share a cluster
+    with num_walks ~ O(sqrt(n k / eps) log(1/eps)) walks of length t per
+    endpoint.  Both endpoints' walks are ONE fused ``walk_scan`` program
+    and the collision statistic is computed on device.
+
+    Cost: (r_u + r_w) * walk_length walk steps; per step one level-1 read
+    (w*n exact / w*B*s stratified) plus w exact level-2 rows.
+
+    >>> res = same_cluster_test(x, gaussian(1.0), 0, 5, walk_length=6,
+    ...                         num_walks=400)
+    """
     n = int(x.shape[0])
     rng = np.random.default_rng(seed)
     if sampler is None:
         sampler = NeighborSampler(x, kernel, mode="blocked", seed=seed,
                                   exact_blocks=True)
     # Poissonize the sample sizes so the collision statistic is unbiased.
-    r_u = int(rng.poisson(num_walks))
-    r_w = int(rng.poisson(num_walks))
-    ends_u = random_walks(sampler, np.full(max(r_u, 1), u, np.int64), walk_length)
-    ends_w = random_walks(sampler, np.full(max(r_w, 1), w, np.int64), walk_length)
-    cu = np.bincount(ends_u, minlength=n).astype(np.float64)
-    cw = np.bincount(ends_w, minlength=n).astype(np.float64)
-    stat = l2_distance_statistic(cu, cw, num_walks, num_walks)
+    r_u = max(int(rng.poisson(num_walks)), 1)
+    r_w = max(int(rng.poisson(num_walks)), 1)
+    starts = np.concatenate([np.full(r_u, u, np.int64),
+                             np.full(r_w, w, np.int64)])
+    if getattr(sampler, "mode", None) == "blocked":
+        ends, _ = sampler.walk(starts, walk_length)
+        signs = np.concatenate([np.ones(r_u, np.float32),
+                                -np.ones(r_w, np.float32)])
+        sq = float(sampler._ops.signed_endpoint_stat(
+            jnp.asarray(ends, jnp.int32), jnp.asarray(signs), n=n))
+        # CDVV14: z = sum (X_i - Y_i)^2 - X_i - Y_i; sum X_i = r_u etc.
+        stat = (sq - r_u - r_w) / float(num_walks) ** 2
+    else:  # tree-mode fallback: host walks + host counts
+        ends = random_walks(sampler, starts, walk_length)
+        cu = np.bincount(ends[:r_u], minlength=n).astype(np.float64)
+        cw = np.bincount(ends[r_u:], minlength=n).astype(np.float64)
+        stat = l2_distance_statistic(cu, cw, num_walks, num_walks)
     thr = threshold if threshold is not None else 1.0 / n
     return LocalClusterResult(same_cluster=bool(stat <= thr), statistic=stat,
                               threshold=thr, num_walks=num_walks,

@@ -91,6 +91,9 @@ def kmeans(points: np.ndarray, k: int, iters: int = 50,
 
 @dataclasses.dataclass
 class SpectralClusterResult:
+    """Section 6.2 output: labels, the NJW spectral embedding, and the
+    bottom normalized-Laplacian eigenvalues."""
+
     labels: np.ndarray
     embedding: np.ndarray
     eigenvalues: np.ndarray
@@ -98,6 +101,12 @@ class SpectralClusterResult:
 
 def spectral_cluster(g: SparseGraph, k: int, seed: int = 0,
                      iters: int = 150, restarts: int = 4) -> SpectralClusterResult:
+    """Theorems 6.12/6.13: NJW spectral clustering on the sparsifier --
+    bottom-k eigenvectors by subspace iteration (O(m) edge-list matvecs,
+    no kernel evals), row-normalized embedding, k-means with restarts.
+
+    >>> res = spectral_cluster(spectral_sparsify(x, ker, 10 * n), 2)
+    """
     vals, vecs = laplacian_eigenvectors(g, k, iters=iters, seed=seed)
     # Row-normalize the spectral embedding (standard NJW step).
     emb = vecs / np.maximum(np.linalg.norm(vecs, axis=1, keepdims=True), 1e-12)

@@ -8,16 +8,28 @@ Step 2: top eigenvalue of K_S via either the standard gap-independent power
 method (MM15) or the BIMW21 kernel *noisy* power method, whose matvec is
 estimated with sampled kernel evaluations only (our TPU-adapted stand-in for
 their KDE-query matvec: importance-sample indices j ~ |v_j|, evaluate
-k(x_i, x_j) on the sample -- an unbiased estimate of (K v)_i).
+k(x_i, x_j) on the sample -- an unbiased estimate of (K v)_i).  The noisy
+iteration runs entirely on device as ONE ``lax.scan`` program
+(``kde_sampler.ops.noisy_power_scan``, DESIGN.md §7): the inverse-CDF
+importance draw, the sampled-column matvec, and the renormalization never
+round-trip to the host.
 
 The returned eigenvector is sparse: supported only on S (Remark after
 Alg 5.18).
+
+Cost accounting (the PR-3 fix): the t x t submatrix is materialized ONCE, so
+``kernel_evals = t^2`` regardless of iteration count; the per-iteration
+sampled matvec touches only already-materialized entries and is reported
+separately as ``matvec_sampled_evals`` -- the cost the BIMW21 KDE-query
+matvec *would* pay (iters * t * num_samples pair lookups).  The seed
+conflated the two, inflating every "evals vs dense" comparison.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -26,30 +38,24 @@ from repro.core.kernels_fn import Kernel
 
 @dataclasses.dataclass
 class EigenResult:
+    """Algorithm 5.18 output.
+
+    ``kernel_evals`` counts actual kernel evaluations (the one-time t x t
+    submatrix materialization); ``matvec_sampled_evals`` counts the
+    (i, j) pair lookups of the sampled noisy matvecs, reported separately
+    so eval comparisons against dense baselines are not inflated."""
+
     eigenvalue: float
     eigenvector: np.ndarray      # (n,) sparse: nonzero only on sampled set
     support: np.ndarray
     kernel_evals: int
-
-
-def _noisy_matvec(ksub: np.ndarray, v: np.ndarray, num_samples: int,
-                  rng) -> Tuple[np.ndarray, int]:
-    """Unbiased (K v)_i estimate via importance sampling j ~ |v_j|."""
-    t = len(v)
-    absv = np.abs(v)
-    z = absv.sum()
-    if z <= 0:
-        return np.zeros_like(v), 0
-    p = absv / z
-    idx = rng.choice(t, size=min(num_samples, 4 * t), p=p)
-    contrib = np.sign(v[idx]) * z / len(idx)
-    # In the KDE setting each (i, j) pair is one kernel evaluation; here the
-    # submatrix is materialized, so we count t * |idx| evals-equivalent.
-    out = ksub[:, idx] @ contrib
-    return out, t * len(idx)
+    matvec_sampled_evals: int = 0
 
 
 def power_method(ksub: np.ndarray, iters: int, rng) -> Tuple[float, np.ndarray]:
+    """Gap-independent power method (MM15) on the materialized submatrix;
+    returns (Rayleigh quotient, unit vector).  Costs no kernel evals
+    beyond the submatrix the caller already materialized."""
     v = rng.standard_normal(ksub.shape[0])
     v /= np.linalg.norm(v)
     for _ in range(iters):
@@ -62,52 +68,66 @@ def power_method(ksub: np.ndarray, iters: int, rng) -> Tuple[float, np.ndarray]:
     return lam, v
 
 
-def noisy_power_method(ksub: np.ndarray, iters: int, num_samples: int,
-                       rng) -> Tuple[float, np.ndarray, int]:
-    """BIMW21 Algorithm 1 (noisy power method) on the submatrix."""
-    t = ksub.shape[0]
-    v = rng.standard_normal(t)
-    v /= np.linalg.norm(v)
-    evals = 0
-    for _ in range(iters):
-        w, e = _noisy_matvec(ksub, v, num_samples, rng)
-        evals += e
-        nw = np.linalg.norm(w)
-        if nw <= 0:
-            break
-        v = w / nw
-    # Rayleigh quotient with an exact final matvec (t^2 evals).
-    lam = float(v @ (ksub @ v))
-    evals += t * t
-    return lam, v, evals
+def noisy_power_method(ksub: jnp.ndarray, iters: int, num_samples: int,
+                       key) -> Tuple[float, np.ndarray, int]:
+    """BIMW21 Algorithm 1 (noisy power method) on the submatrix, fused:
+    all ``iters`` iterations run as one jitted ``lax.scan`` program
+    (DESIGN.md §7).  Returns (eigenvalue, vector, matvec_sampled_evals)
+    where the last is the per-iteration sampled-pair lookup count
+    ``iters * t * num_samples`` (not fresh kernel evaluations -- the
+    submatrix is already materialized).
+
+    >>> lam, v, _ = noisy_power_method(ksub, 12, 32, jax.random.PRNGKey(0))
+    """
+    from repro.kernels.kde_sampler import ops as _ops
+
+    t = int(ksub.shape[0])
+    k_init, k_iter = jax.random.split(key)
+    v0 = jax.random.normal(k_init, (t,), ksub.dtype)
+    v0 = v0 / jnp.linalg.norm(v0)
+    keys = jax.random.split(k_iter, iters)
+    lam, v = _ops.noisy_power_scan(ksub, v0, keys, num_samples=num_samples)
+    return float(lam), np.asarray(v, np.float64), iters * t * num_samples
 
 
 def top_eigenvalue(x, kernel: Kernel, eps: float = 0.25, tau: float = 0.1,
                    t: Optional[int] = None, method: str = "power",
                    seed: int = 0) -> EigenResult:
-    """Algorithm 5.18."""
+    """Algorithm 5.18 / Theorem 5.22: (1 - eps)-approximate top eigenvalue
+    of the n x n kernel matrix from a t x t principal submatrix,
+    t = O(1/(eps^2 tau^2)) -- cost independent of n.
+
+    Cost: ``t^2`` kernel evals (submatrix materialization); with
+    ``method="noisy_power"`` additionally ``iters * t * num_samples``
+    sampled pair lookups, reported in ``matvec_sampled_evals``.
+
+    >>> res = top_eigenvalue(x, gaussian(1.0), t=180, method="noisy_power")
+    """
     n = int(x.shape[0])
     rng = np.random.default_rng(seed)
     t = int(t if t is not None else min(n, int(np.ceil(1.0 / (eps * eps * tau * tau)))))
     support = rng.choice(n, size=t, replace=False)
     xj = jnp.asarray(x)
-    ksub = np.asarray(kernel.pairwise(xj[jnp.asarray(support)],
-                                      xj[jnp.asarray(support)]), np.float64)
+    ksub_dev = kernel.pairwise(xj[jnp.asarray(support)],
+                               xj[jnp.asarray(support)])
     evals = t * t
     iters = max(int(np.ceil(np.log(max(t, 2) / eps) / np.sqrt(eps))), 8)
+    sampled = 0
     if method == "noisy_power":
-        lam, v, extra = noisy_power_method(ksub, iters,
-                                           num_samples=max(t // 2, 8), rng=rng)
-        evals += extra
+        lam, v, sampled = noisy_power_method(
+            ksub_dev, iters, num_samples=max(t // 2, 8),
+            key=jax.random.PRNGKey(seed + 1))
     else:
+        ksub = np.asarray(ksub_dev, np.float64)
         lam, v = power_method(ksub, iters, rng)
     vec = np.zeros(n)
     vec[support] = v
     return EigenResult(eigenvalue=float(lam * n / t), eigenvector=vec,
-                       support=support, kernel_evals=evals)
+                       support=support, kernel_evals=evals,
+                       matvec_sampled_evals=sampled)
 
 
 def top_eigenvalue_exact(kernel: Kernel, x) -> float:
-    """Oracle: lambda_1(K) by dense eigendecomposition."""
+    """Oracle: lambda_1(K) by dense eigendecomposition (n^2 evals)."""
     k = np.asarray(kernel.matrix(jnp.asarray(x)), np.float64)
     return float(np.linalg.eigvalsh(k)[-1])

@@ -7,11 +7,18 @@ writes the added weight as 1/(m p_e); the Theorem-6.15 proof analyses
 X_i = w_e/(p_e m), which is the unbiased version -- we implement the proof's
 estimator.)
 
+Fused (DESIGN.md §7): the edge-sampling loop IS the sparsifier's fused
+Algorithm 5.1 pipeline -- ``NeighborSampler.edge_batches`` draws every
+(u, v, w_e/(m p_e)) tuple in one ``lax.scan`` program over a shared device
+degree CDF, with the reverse probability collapsed to k(u,v)/deg(v)
+(DESIGN.md §6).  The seed ran a host batch loop with five device
+round-trips per batch.
+
 Offline solver: Charikar's greedy peel.  The paper calls an exact LP
 [Cha00]; with no LP solver in this environment we use the standard greedy
 2-approximation applied identically to both the sampled graph and the exact
 oracle, so the sampling claim (density preserved under subsampling) is
-evaluated apples-to-apples.  Documented in DESIGN.md §9.
+evaluated apples-to-apples.  Documented in DESIGN.md §7.
 """
 from __future__ import annotations
 
@@ -20,9 +27,8 @@ import dataclasses
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.kde.base import make_estimator
 from repro.core.kernels_fn import Kernel
-from repro.core.sampling.edge import NeighborSampler
+from repro.core.sampling.edge import NeighborSampler, shared_level1_estimator
 from repro.core.sampling.vertex import DegreeSampler
 from repro.core.sparsify import SparseGraph
 
@@ -30,16 +36,14 @@ from repro.core.sparsify import SparseGraph
 def greedy_densest_subgraph(n: int, src: np.ndarray, dst: np.ndarray,
                             weight: np.ndarray) -> float:
     """Charikar peel: repeatedly remove the min-weighted-degree vertex;
-    return the max density w(E(U))/|U| seen."""
+    return the max density w(E(U))/|U| seen (2-approximation, O(n^2 + m);
+    the offline solver of Alg 6.14 -- no kernel evals)."""
     deg = np.zeros(n)
     np.add.at(deg, src, weight)
     np.add.at(deg, dst, weight)
     total = float(weight.sum())
     active = np.ones(n, bool)
     best = total / n
-    # adjacency lists for incremental updates
-    order = np.argsort(src, kind="stable")
-    order2 = np.argsort(dst, kind="stable")
     alive = n
     # simple O(n^2 + m) peel: argmin over active degrees each round
     dd = deg.copy()
@@ -66,6 +70,9 @@ def greedy_densest_subgraph(n: int, src: np.ndarray, dst: np.ndarray,
 
 @dataclasses.dataclass
 class ArboricityResult:
+    """Alg 6.14 output: the greedy density of the sampled graph, the
+    sample itself, and the kernel-eval budget spent drawing it."""
+
     density: float
     graph: SparseGraph
     kernel_evals: int
@@ -74,35 +81,35 @@ class ArboricityResult:
 def estimate_arboricity(x, kernel: Kernel, num_edges: int,
                         estimator: str = "stratified",
                         seed: int = 0, batch: int = 512) -> ArboricityResult:
-    """Algorithm 6.14 with the weighted edge sampler of Section 4.3."""
+    """Algorithm 6.14 / Theorem 6.15 with the weighted edge sampler of
+    Section 4.3, fused: all ``num_edges`` draws and their importance
+    weights come from one ``edge_batch_scan`` device program.
+
+    Cost (stratified, m = num_edges rounded up to a batch multiple):
+    ``n*B*s`` degree preprocessing + ``m*(B*s + bs + 1)`` edge draws.
+
+    >>> res = estimate_arboricity(x, gaussian(1.0), num_edges=8 * len(x))
+    """
     n = int(x.shape[0])
-    est = make_estimator(estimator, x, kernel, seed=seed)
-    deg = DegreeSampler(est, seed=seed + 1)
-    nbr = NeighborSampler(x, kernel, mode="blocked", seed=seed + 2,
-                          exact_blocks=(estimator == "exact"))
     m = int(num_edges)
-    srcs, dsts, ws = [], [], []
-    xj = jnp.asarray(x)
-    for lo in range(0, m, batch):
-        b = min(batch, m - lo)
-        u = deg.sample(b)
-        v, q_uv = nbr.sample(u)
-        q_vu = nbr.prob_of(v, u)
-        p_e = deg.prob(u) * q_uv + deg.prob(v) * q_vu
-        kuv = np.diagonal(np.asarray(kernel.pairwise(
-            xj[jnp.asarray(u)], xj[jnp.asarray(v)])))
-        srcs.append(u)
-        dsts.append(v)
-        ws.append(kuv / (m * np.maximum(p_e, 1e-30)))
-    g = SparseGraph(n, np.concatenate(srcs), np.concatenate(dsts),
-                    np.concatenate(ws))
+    nbr = NeighborSampler(x, kernel, mode="blocked", seed=seed + 2,
+                          exact_blocks=(estimator in ("exact",
+                                                      "exact_block")))
+    est = shared_level1_estimator(nbr, estimator, seed=seed)
+    deg = DegreeSampler(est, seed=seed + 1)
+    # edge_batches reweights by k(u,v) / (m (p_u q_uv + p_v q_vu)) -- the
+    # Theorem-6.15 estimator X_i = w_e / (p_e m) with the Section 4.3 law.
+    u, v, w, _, _ = nbr.edge_batches(deg.cdf_device, deg.degrees_device,
+                                     deg.total, m, batch=batch)
+    g = SparseGraph(n, np.asarray(u, np.int64), np.asarray(v, np.int64),
+                    np.asarray(w, np.float64))
     dens = greedy_densest_subgraph(n, g.src, g.dst, g.weight)
-    return ArboricityResult(density=dens, graph=g,
-                            kernel_evals=est.evals + nbr.evals + m)
+    evals = nbr.evals + (0 if est is nbr.blocks else est.evals)
+    return ArboricityResult(density=dens, graph=g, kernel_evals=evals)
 
 
 def exact_arboricity(kernel: Kernel, x) -> float:
-    """Oracle: greedy peel on the full kernel graph."""
+    """Oracle: greedy peel on the full kernel graph (n^2 evals)."""
     k = np.asarray(kernel.matrix(jnp.asarray(x)), np.float64)
     n = k.shape[0]
     iu, ju = np.triu_indices(n, 1)

@@ -7,6 +7,14 @@ with u < v in the degree ordering, estimate the weight W_e of triangles
 w ~ k(v, .)/deg(v) (the Section 4.3 primitive) and averaging
 deg(v) * 1{v < w} * k(u,v) k(u,w); scale by #pairs / |R|.
 
+Fused (DESIGN.md §7): the whole per-edge inner loop -- orientation, ONE
+level-1 read of the v frontier shared by every draw, the neighbor draws
+under ``lax.scan``, the ordering mask, and the reweighting -- is one device
+program (``NeighborSampler.triangle_batches``).  The seed re-sampled the
+frontier and materialized an (m, m) pairwise matrix per draw just to read
+its diagonal.  The degree estimates come from the sampler's own level-1
+structure (one KDE build for the whole pipeline).
+
 Oracle: w_T = (1/6) sum_{i != j != l} K_ij K_jl K_il via one dense matmul.
 """
 from __future__ import annotations
@@ -16,71 +24,63 @@ import dataclasses
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.kde.base import make_estimator
 from repro.core.kernels_fn import Kernel
-from repro.core.sampling.edge import NeighborSampler
+from repro.core.sampling.edge import NeighborSampler, shared_level1_estimator
 from repro.core.sampling.vertex import approximate_degrees
 
 
 @dataclasses.dataclass
 class TriangleResult:
+    """Theorem 6.17 output: the estimate and its sampling/eval budget."""
+
     total_weight: float
     kernel_evals: int
     num_edges_sampled: int
     neighbor_samples: int
 
 
-def _precedes(deg: np.ndarray, a: np.ndarray, b: np.ndarray) -> np.ndarray:
-    """Degree-then-index ordering from Theorem 6.17's proof."""
-    return (deg[a] < deg[b]) | ((deg[a] == deg[b]) & (a < b))
-
-
 def estimate_triangle_weight(x, kernel: Kernel, num_edges: int,
                              neighbor_samples: int, estimator: str = "stratified",
                              seed: int = 0) -> TriangleResult:
+    """Theorem 6.17: (1 +- eps) total triangle weight from ``num_edges``
+    uniform vertex pairs and ``neighbor_samples`` weighted neighbor draws
+    per pair -- query budget independent of n.
+
+    Cost (stratified level-1, m = num_edges, ns = neighbor_samples):
+    ``n*B*s`` degree preprocessing + ``m*(B*s + 1)`` frontier read and
+    k(u,v) pairs + ``ns*m*(bs + 1)`` draw/reweight evals.
+
+    >>> res = estimate_triangle_weight(x, gaussian(1.0), 400, 24)
+    """
     n = int(x.shape[0])
     rng = np.random.default_rng(seed)
-    est = make_estimator(estimator, x, kernel, seed=seed)
-    deg = approximate_degrees(est)
     nbr = NeighborSampler(x, kernel, mode="blocked", seed=seed + 1,
-                          exact_blocks=(estimator == "exact"))
-    xj = jnp.asarray(x)
+                          exact_blocks=(estimator in ("exact",
+                                                      "exact_block")))
+    est = shared_level1_estimator(nbr, estimator, seed=seed)
+    deg = approximate_degrees(est)
 
-    # R: uniform vertex pairs (every pair is an edge of the kernel graph).
+    # R: uniform vertex pairs (every pair is an edge of the kernel graph);
+    # orientation to u < v in the degree order happens in-program.
     u = rng.integers(0, n, size=num_edges)
     v = rng.integers(0, n - 1, size=num_edges)
     v = np.where(v >= u, v + 1, v)
-    # orient so that u < v in the ordering
-    swap = ~_precedes(deg, u, v)
-    u2 = np.where(swap, v, u)
-    v2 = np.where(swap, u, v)
-    u, v = u2, v2
 
-    kuv = np.diagonal(np.asarray(
-        kernel.pairwise(xj[jnp.asarray(u)], xj[jnp.asarray(v)])))
-    evals = num_edges
-
-    # Estimate W_e by neighbor sampling from v.
-    w_hat = np.zeros(num_edges)
-    for _ in range(neighbor_samples):
-        w, _ = nbr.sample(v)
-        valid = _precedes(deg, v, w) & (w != u)
-        kuw = np.diagonal(np.asarray(
-            kernel.pairwise(xj[jnp.asarray(u)], xj[jnp.asarray(w)])))
-        evals += num_edges
-        w_hat += valid * kuv * kuw
-    w_hat *= deg[v] / neighbor_samples
+    _, _, w_hat = nbr.triangle_batches(u, v,
+                                       jnp.asarray(deg, jnp.float32),
+                                       neighbor_samples)
 
     pairs = n * (n - 1) / 2.0
     total = float(w_hat.mean() * pairs)
-    return TriangleResult(total_weight=total,
-                          kernel_evals=evals + est.evals + nbr.evals,
+    evals = nbr.evals + (0 if est is nbr.blocks else est.evals)
+    return TriangleResult(total_weight=total, kernel_evals=evals,
                           num_edges_sampled=num_edges,
                           neighbor_samples=neighbor_samples)
 
 
 def exact_triangle_weight(kernel: Kernel, x) -> float:
-    """(1/6) sum over ordered distinct triples of K_ij K_jl K_il."""
+    """Oracle: (1/6) sum over ordered distinct triples of K_ij K_jl K_il
+    (n^2 evals + one dense matmul)."""
     k = np.asarray(kernel.matrix(jnp.asarray(x)), np.float64)
     np.fill_diagonal(k, 0.0)
     # sum_{i,j} K_ij (K^2)_ij counts each unordered triangle 6 times.

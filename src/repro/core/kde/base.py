@@ -51,9 +51,11 @@ class KDEBase:
         self.evals = 0  # number of kernel evaluations performed
 
     def query(self, y: jnp.ndarray) -> jnp.ndarray:
+        """(m, d) queries -> (m,) estimated row sums sum_j k(y_i, x_j)."""
         raise NotImplementedError
 
     def query1(self, y: jnp.ndarray) -> float:
+        """Single-point convenience wrapper around ``query``."""
         return float(self.query(y[None, :])[0])
 
 
@@ -67,6 +69,7 @@ class ExactKDE(KDEBase):
         self.use_pallas = use_pallas
 
     def query(self, y: jnp.ndarray) -> jnp.ndarray:
+        """Exact row sums; m*n kernel evals per call."""
         y = jnp.asarray(y, jnp.float32)
         self.evals += y.shape[0] * self.n
         if self.use_pallas:
@@ -90,6 +93,7 @@ class RSKDE(KDEBase):
         self._rng = np.random.default_rng(seed)
 
     def query(self, y: jnp.ndarray) -> jnp.ndarray:
+        """(1 +- eps) row-sum estimates; m*num_samples evals per call."""
         y = jnp.asarray(y, jnp.float32)
         idx = self._rng.integers(0, self.n, size=self.num_samples)
         self.evals += y.shape[0] * self.num_samples
@@ -145,6 +149,7 @@ class StratifiedKDE(KDEBase):
             **self._static_cfg())
 
     def query(self, y: jnp.ndarray) -> jnp.ndarray:
+        """Stratified row-sum estimates; m*B*s evals per call."""
         return jnp.sum(self.block_sums(y), axis=-1)
 
 
@@ -167,6 +172,7 @@ class ExactBlockKDE(StratifiedKDE):
         self.use_pallas = use_pallas
 
     def block_sums(self, y: jnp.ndarray) -> jnp.ndarray:
+        """Exact (m, B) per-block sums; m*n evals per call."""
         y = jnp.asarray(y, jnp.float32)
         self.evals += y.shape[0] * self.n
         if self.use_pallas:

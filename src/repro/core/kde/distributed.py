@@ -109,5 +109,7 @@ def degree_preprocessing(mesh: Mesh, kernel: Kernel,
 
 
 def make_sharded_dataset(mesh: Mesh, x, data_axes: Sequence[str] = ("data",)):
+    """Place the dataset on the mesh, sharded over ``data_axes``
+    (Section 3 KDE queries then never reshard X)."""
     sharding = NamedSharding(mesh, P(tuple(data_axes)))
     return jax.device_put(x, sharding)

@@ -24,6 +24,10 @@ from repro.core.kernels_fn import Kernel
 
 
 class GridHBE(KDEBase):
+    """KAP22/DEANN-style estimator (Section 3.1 black-box slot):
+    exact NEAR term over a random-shifted grid bucket + RS FAR term;
+    per query <= max_bucket + num_far_samples kernel evals."""
+
     def __init__(self, x, kernel: Kernel, cell_width: float | None = None,
                  num_hash_dims: int = 8, num_far_samples: int = 64,
                  max_bucket: int = 256, seed: int = 0):
@@ -61,6 +65,7 @@ class GridHBE(KDEBase):
         return idx
 
     def query(self, y: jnp.ndarray) -> jnp.ndarray:
+        """NEAR-exact + FAR-sampled row-sum estimates (Section 3.1)."""
         y = jnp.asarray(y, jnp.float32)
         yn = np.asarray(y)
         m = yn.shape[0]

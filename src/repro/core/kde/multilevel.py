@@ -53,6 +53,7 @@ class MultiLevelKDE:
 
     @property
     def evals(self) -> int:
+        """Kernel evaluations summed over every tree node."""
         return sum(node.evals for node in self._nodes.values())
 
     def segment_query(self, y: jnp.ndarray, lo: int, hi: int) -> jnp.ndarray:
@@ -60,8 +61,10 @@ class MultiLevelKDE:
         return self._nodes[(lo, hi)].query(y)
 
     def children(self, lo: int, hi: int):
+        """The two dyadic child segments of [lo, hi)."""
         mid = lo + (hi - lo) // 2
         return (lo, mid), (mid, hi)
 
     def is_leaf(self, lo: int, hi: int) -> bool:
+        """True when [lo, hi) is evaluated exactly (Algorithm 4.1)."""
         return hi - lo <= self.leaf_size

@@ -62,6 +62,10 @@ def _sq_dists(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
 
 
 def gaussian(bandwidth: float = 1.0) -> Kernel:
+    """exp(-||x-y||_2^2 / sigma^2) (Table 1; squaring constant sqrt(2)).
+
+    >>> ker = gaussian(bandwidth=1.0)
+    """
     inv = 1.0 / (bandwidth * bandwidth)
 
     def pw(x, y):
@@ -72,6 +76,7 @@ def gaussian(bandwidth: float = 1.0) -> Kernel:
 
 
 def exponential(bandwidth: float = 1.0) -> Kernel:
+    """exp(-||x-y||_2 / sigma) (Table 1; squaring constant 2)."""
     inv = 1.0 / bandwidth
 
     def pw(x, y):
@@ -101,6 +106,8 @@ def laplacian(bandwidth: float = 1.0) -> Kernel:
 
 
 def rational_quadratic(beta: float = 1.0, bandwidth: float = 1.0) -> Kernel:
+    """(1 + ||x-y||_2^2/sigma^2)^(-beta) (Table 1; no squaring constant,
+    so the Section 5.2 low-rank reduction does not apply to it)."""
     inv = 1.0 / (bandwidth * bandwidth)
 
     def pw(x, y):
@@ -120,6 +127,10 @@ _REGISTRY = {
 
 
 def make_kernel(name: str, bandwidth: float = 1.0, **kw) -> Kernel:
+    """Factory over the Table-1 kernels by name.
+
+    >>> ker = make_kernel("laplacian", bandwidth=2.0)
+    """
     return _REGISTRY[name](bandwidth=bandwidth, **kw)
 
 

@@ -4,11 +4,19 @@ Solve L_G x = b by (1) building an eps-sparsifier G' (Theorem 5.3), then
 (2) running preconditioned CG on L_{G'} (our stand-in for the fast KMP11/ST04
 solver -- CG on an m-edge graph costs O(m) per iteration and Theorem 5.11
 bounds the sparsifier-induced error by 2 sqrt(eps) ||L^+ b||_L).
+
+The CG loop is device-resident (DESIGN.md §7): the whole iteration runs as
+ONE jitted ``lax.while_loop`` program (``kde_sampler.ops.laplacian_cg``)
+whose ``L_{G'} p`` matvec is a pair of segment-sum scatters over the COO
+edge list -- no ``np.add.at``, no per-iteration host round-trips.  The edge
+list of the PR-2 fused sparsifier is uploaded once and reused by every
+iteration.
 """
 from __future__ import annotations
 
 from typing import Optional, Tuple
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.kernels_fn import Kernel
@@ -22,40 +30,35 @@ def project_ones(v: np.ndarray) -> np.ndarray:
 
 def cg_laplacian(g: SparseGraph, b: np.ndarray, iters: int = 200,
                  tol: float = 1e-10) -> Tuple[np.ndarray, float]:
-    """Jacobi-preconditioned CG for L_G' x = b with b ⟂ 1."""
-    b = project_ones(np.asarray(b, np.float64))
-    deg = np.zeros(g.n)
-    np.add.at(deg, g.src, g.weight)
-    np.add.at(deg, g.dst, g.weight)
-    dinv = 1.0 / np.maximum(deg, 1e-30)
+    """Jacobi-preconditioned CG for L_G' x = b with b perp 1 (the solve
+    step of Section 5.1.1), fused: one ``lax.while_loop`` program on
+    device, segment-sum matvecs, best-iterate tracking for float32
+    stability.  Costs no kernel evals (operates on the materialized
+    sparsifier); O(m) work per iteration.
 
-    x = np.zeros_like(b)
-    r = b.copy()
-    z = project_ones(dinv * r)
-    p = z.copy()
-    rz = float(r @ z)
-    for _ in range(iters):
-        ap = g.matvec(p)
-        denom = float(p @ ap)
-        if denom <= 0:
-            break
-        alpha = rz / denom
-        x = x + alpha * p
-        r = r - alpha * ap
-        if float(np.linalg.norm(r)) < tol * max(np.linalg.norm(b), 1e-30):
-            break
-        z = project_ones(dinv * r)
-        rz_new = float(r @ z)
-        p = z + (rz_new / max(rz, 1e-300)) * p
-        rz = rz_new
-    return project_ones(x), float(np.linalg.norm(r))
+    >>> sol, res = cg_laplacian(g, b, iters=300)
+    """
+    from repro.kernels.kde_sampler import ops as _ops
+
+    b = np.asarray(b, np.float64)
+    sol, res = _ops.laplacian_cg(
+        jnp.asarray(g.src, jnp.int32), jnp.asarray(g.dst, jnp.int32),
+        jnp.asarray(g.weight, jnp.float32), jnp.asarray(b, jnp.float32),
+        jnp.float32(tol), n=int(g.n), iters=int(iters))
+    return project_ones(np.asarray(sol, np.float64)), float(res)
 
 
 def solve_kernel_laplacian(x, kernel: Kernel, b: np.ndarray,
                            num_edges: Optional[int] = None,
                            estimator: str = "stratified", seed: int = 0,
                            iters: int = 300) -> Tuple[np.ndarray, SparseGraph]:
-    """End-to-end Section 5.1.1: sparsify the kernel graph, solve on it."""
+    """End-to-end Section 5.1.1 / Theorem 5.11: sparsify the kernel graph
+    (Algorithm 5.1, ``num_edges`` defaults to 8 n log n), then solve on the
+    sparsifier with the fused device CG.  Cost: the sparsifier's kernel
+    evals (see ``spectral_sparsify``); the solve itself adds none.
+
+    >>> sol, g = solve_kernel_laplacian(x, gaussian(1.0), b)
+    """
     n = int(x.shape[0])
     if num_edges is None:
         num_edges = int(8 * n * max(np.log(n), 1.0))
@@ -65,7 +68,8 @@ def solve_kernel_laplacian(x, kernel: Kernel, b: np.ndarray,
 
 
 def laplacian_dense(kernel: Kernel, x) -> np.ndarray:
-    """Exact dense Laplacian of the kernel graph (oracle for tests)."""
+    """Exact dense Laplacian of the kernel graph (oracle for tests;
+    n^2 kernel evals)."""
     import jax.numpy as jnp
 
     k = np.asarray(kernel.matrix(jnp.asarray(x)), np.float64)
@@ -74,7 +78,8 @@ def laplacian_dense(kernel: Kernel, x) -> np.ndarray:
 
 
 def normalized_laplacian_dense(kernel: Kernel, x) -> np.ndarray:
-    """I - D^{-1/2} K_offdiag D^{-1/2} (used by spectrum/clustering oracles)."""
+    """I - D^{-1/2} K_offdiag D^{-1/2} (used by spectrum/clustering
+    oracles; n^2 kernel evals)."""
     import jax.numpy as jnp
 
     k = np.asarray(kernel.matrix(jnp.asarray(x)), np.float64)

@@ -23,6 +23,8 @@ from repro.core.sampling.rownorm import RowNormSampler
 
 @dataclasses.dataclass
 class LowRankResult:
+    """Algorithm 5.15 output: the factors plus the eval/query budget."""
+
     u: np.ndarray            # (r, n) right factor, rows ~ orthonormal
     v: Optional[np.ndarray]  # (n, r) left factor (CP17 fit), or None
     kernel_evals: int
@@ -104,6 +106,7 @@ def projection_error(k: np.ndarray, u: np.ndarray) -> float:
 
 
 def factored_error(k: np.ndarray, v: np.ndarray, u: np.ndarray) -> float:
+    """||K - V U||_F^2 (evaluation oracle for the Theorem 5.13 fit)."""
     return float(np.linalg.norm(k - v @ u, "fro") ** 2)
 
 

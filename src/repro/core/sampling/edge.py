@@ -46,6 +46,19 @@ from repro.core.kernels_fn import Kernel
 
 
 class NeighborSampler:
+    """Algorithm 4.11 / Theorem 4.12: sample v ~ k(u, v)/deg(u) given u.
+
+    ``mode="blocked"`` is the fused depth-2 device engine (DESIGN.md §2-§4,
+    one compiled program per batch, one level-1 read per frontier);
+    ``mode="tree"`` is the paper's literal dyadic descent over a
+    ``MultiLevelKDE``.  Cost per blocked sample: one level-1 read (w*B*s
+    stratified / w*n exact kernel evals for a w-frontier) plus w exact
+    level-2 rows of ``block_size`` columns.
+
+    >>> nbr = NeighborSampler(x, gaussian(1.0), mode="blocked")
+    >>> v, q = nbr.sample(np.array([0, 1, 2]))
+    """
+
     def __init__(self, x: jnp.ndarray, kernel: Kernel, mode: str = "blocked",
                  block_size: Optional[int] = None, samples_per_block: int = 16,
                  exact_blocks: bool = False, tree: Optional[MultiLevelKDE] = None,
@@ -111,6 +124,8 @@ class NeighborSampler:
 
     @property
     def evals(self) -> int:
+        """Total kernel evaluations across the level-1 structure and every
+        sampling call -- the paper's Section 7 cost metric."""
         if self.mode == "blocked":
             return self._blocks.evals + getattr(self, "_extra_evals", 0)
         return self._tree.evals + getattr(self, "_extra_evals", 0)
@@ -325,6 +340,33 @@ class NeighborSampler:
         return tuple(np.asarray(a).reshape(-1)[:t] for a in out)
 
     # ------------------------------------------------------------------ #
+    def triangle_batches(self, u: np.ndarray, v: np.ndarray,
+                         degs_device: jnp.ndarray, num_draws: int,
+                         key: Optional[jnp.ndarray] = None):
+        """Theorem 6.17's inner loop, fully fused (blocked mode): orient
+        the (u, v) vertex pairs by the degree-then-index order, read the
+        oriented v frontier's level-1 sums ONCE, draw ``num_draws``
+        neighbors w ~ k(v, .)/deg(v) under ``lax.scan``, and reweight --
+        one program, one device->host transfer of (u', v', W_e).
+
+        Cost: one level-1 read of the m-edge frontier plus, per draw, m
+        exact level-2 rows and m aligned k(u, w) pairs -- ``m*(B*s + 1) +
+        num_draws*m*(bs + 1)`` kernel evals for stratified reads
+        (``m*(n + 1) + ...`` exact)."""
+        assert self.mode == "blocked", "fused triangle batches need blocked mode"
+        m = len(np.asarray(u))
+        keys = jax.random.split(self._next_key() if key is None else key,
+                                int(num_draws) + 1)
+        uu, vv, w_hat = self._ops.triangle_edge_scan(
+            self.x, self.x_sq, jnp.asarray(u, jnp.int32),
+            jnp.asarray(v, jnp.int32), jnp.asarray(degs_device), keys,
+            **self._cfg)
+        self._count(self._level1_evals(m) + m
+                    + int(num_draws) * (m * self.block_size + m))
+        self._l1_cache = None  # frontier moved; cached sums are stale
+        return np.asarray(uu), np.asarray(vv), np.asarray(w_hat)
+
+    # ------------------------------------------------------------------ #
     def walk(self, starts: np.ndarray, length: int, exact: bool = False,
              rounds: int = 8, slack: float = 2.0,
              key: Optional[jnp.ndarray] = None, record_path: bool = False):
@@ -349,6 +391,23 @@ class NeighborSampler:
         self._count(length * per_step)
         self._l1_cache = None  # frontier moved; cached sums are stale
         return np.asarray(end), (np.asarray(path) if record_path else None)
+
+
+def shared_level1_estimator(nbr: NeighborSampler, estimator: str,
+                            seed: int = 0):
+    """Reuse ``nbr``'s level-1 KDE structure as the degree estimator
+    whenever it implements the requested one (DESIGN.md §6/§7): one device
+    dataset, one ``x_sq`` sweep, one eval counter for the whole pipeline.
+    ``rs`` / ``grid_hbe`` (and exact/stratified mismatches) fall back to a
+    standalone ``make_estimator`` over the sampler's device dataset."""
+    from repro.core.kde.base import make_estimator
+
+    wants_exact = estimator in ("exact", "exact_block")
+    if wants_exact == nbr.exact_blocks and estimator not in ("rs",
+                                                             "grid_hbe"):
+        return nbr.blocks
+    return make_estimator(estimator if estimator != "exact_block" else
+                          "exact", nbr.x, nbr.kernel, seed=seed)
 
 
 class EdgeSampler:

@@ -23,6 +23,14 @@ from repro.core.sampling.vertex import PrefixCDF
 
 
 class RowNormSampler:
+    """Section 5.2: sample row indices i ~ ||K_i,*||_2^2 / ||K||_F^2 via n
+    KDE queries against the scaled dataset cX, and read the FKV sketch
+    rows as one jitted program.  Cost: n KDE queries preprocessing +
+    ``len(idx) * n`` evals per ``rows`` call.
+
+    >>> s = RowNormSampler(x, gaussian(1.0)); idx = s.sample(150)
+    """
+
     def __init__(self, x, kernel: Kernel, estimator: str = "exact",
                  seed: int = 0, **est_kw):
         self.x = jnp.asarray(x, jnp.float32)   # shared device dataset
@@ -53,12 +61,15 @@ class RowNormSampler:
 
     @property
     def evals(self) -> int:
+        """Kernel evaluations spent on preprocessing + row reads."""
         return self._est.evals + self._row_evals
 
     def sample(self, size: int) -> np.ndarray:
+        """Draw ``size`` iid row indices i ~ ||K_i,*||^2 (Section 5.2)."""
         return self._cdf.sample(size)
 
     def prob(self, idx) -> np.ndarray:
+        """Probability this sampler assigns to row idx."""
         return self._cdf.prob(idx)
 
     # ------------------------------------------------------------------ #

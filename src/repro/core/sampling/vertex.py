@@ -48,6 +48,8 @@ class PrefixCDF:
         return len(self.weights)
 
     def sample(self, size: int) -> np.ndarray:
+        """Draw ``size`` iid indices i ~ w_i / sum w (Lemma 4.8: the dense
+        inverse-CDF form of the Algorithm 4.5 tree descent)."""
         u = self._rng.uniform(0.0, self.total, size=size)
         return np.searchsorted(self._prefix, u, side="right").clip(
             0, len(self.weights) - 1)
@@ -58,6 +60,7 @@ class PrefixCDF:
 
     @property
     def cdf_device(self) -> jnp.ndarray:
+        """Normalized float32 prefix array for jitted inverse-CDF draws."""
         if self._cdf_dev is None:
             self._cdf_dev = jnp.asarray(
                 (self._prefix / self.total).astype(np.float32))
@@ -65,6 +68,7 @@ class PrefixCDF:
 
     @property
     def probs_device(self) -> jnp.ndarray:
+        """Float32 probability array w_i / sum w for jitted consumers."""
         if self._probs_dev is None:
             self._probs_dev = jnp.asarray(
                 (self.weights / self.total).astype(np.float32))
@@ -72,6 +76,7 @@ class PrefixCDF:
 
     @property
     def weights_device(self) -> jnp.ndarray:
+        """Raw float32 weight array for jitted consumers."""
         if self._weights_dev is None:
             self._weights_dev = jnp.asarray(self.weights.astype(np.float32))
         return self._weights_dev
@@ -97,6 +102,10 @@ class DegreeSampler:
         self.total = self._cdf.total
 
     def sample(self, size: int) -> np.ndarray:
+        """Draw ``size`` vertices u ~ deg(u) / sum deg (Algorithm 4.6).
+
+        >>> u = DegreeSampler(est).sample(1024)
+        """
         return self._cdf.sample(size)
 
     def prob(self, idx) -> np.ndarray:

@@ -16,8 +16,15 @@ from repro.core.sampling.edge import NeighborSampler
 
 def random_walks(sampler: NeighborSampler, starts: np.ndarray, length: int,
                  exact: bool = False, record_path: bool = False):
-    """Run |starts| walks of ``length`` steps.  Returns endpoints (and the
-    full (length+1, w) path if requested)."""
+    """Algorithm 4.16: run |starts| = w walks of ``length`` steps.  Returns
+    endpoints (and the full (length+1, w) path if requested).
+
+    Cost: ``length`` fused steps, each one level-1 read (w*B*s stratified /
+    w*n exact kernel evals) plus w exact level-2 rows; ``exact=True`` adds
+    the Theorem 4.12 rejection rounds per step.
+
+    >>> ends = random_walks(nbr, np.zeros(64, np.int64), length=8)
+    """
     starts = np.asarray(starts)
     if length <= 0:
         cur = starts.copy()
@@ -44,7 +51,8 @@ def random_walks(sampler: NeighborSampler, starts: np.ndarray, length: int,
 
 def endpoint_counts(sampler: NeighborSampler, start: int, length: int,
                     num_walks: int, n: int, exact: bool = False) -> np.ndarray:
-    """Empirical endpoint distribution p_u^t from ``num_walks`` walks."""
+    """Empirical endpoint distribution p_u^t from ``num_walks`` walks
+    (the Theorem 6.9 ingredient; cost = one ``random_walks`` call)."""
     ends = random_walks(sampler, np.full(num_walks, start, np.int64), length,
                         exact=exact)
     return np.bincount(ends, minlength=n).astype(np.float64)

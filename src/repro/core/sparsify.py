@@ -19,9 +19,8 @@ from typing import Optional
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.kde.base import make_estimator
 from repro.core.kernels_fn import Kernel
-from repro.core.sampling.edge import NeighborSampler
+from repro.core.sampling.edge import NeighborSampler, shared_level1_estimator
 from repro.core.sampling.vertex import DegreeSampler
 
 
@@ -37,6 +36,7 @@ class SparseGraph:
 
     @property
     def num_edges(self) -> int:
+        """Number of (possibly repeated) sampled edges."""
         return len(self.src)
 
     def laplacian_dense(self) -> np.ndarray:
@@ -48,6 +48,7 @@ class SparseGraph:
         return np.diag(d) - a
 
     def adjacency_dense(self) -> np.ndarray:
+        """Dense symmetric adjacency (evaluation only)."""
         a = np.zeros((self.n, self.n))
         np.add.at(a, (self.src, self.dst), self.weight)
         np.add.at(a, (self.dst, self.src), self.weight)
@@ -88,13 +89,7 @@ def spectral_sparsify(x, kernel: Kernel, num_edges: int,
     # level-1 structure whenever it implements the requested estimator --
     # one KDE build and one preprocessing sweep over x, not two.  The
     # sampler's structure is exact (ExactBlockKDE) iff exact_blocks.
-    wants_exact = estimator in ("exact", "exact_block")
-    if wants_exact == exact_blocks and estimator not in ("rs", "grid_hbe"):
-        est = nbr.blocks
-    else:
-        est = make_estimator(
-            estimator if estimator != "exact_block" else "exact",
-            nbr.x, kernel, seed=seed)
+    est = shared_level1_estimator(nbr, estimator, seed=seed)
     deg = DegreeSampler(est, seed=seed + 1)
     u, v, w, _, _ = nbr.edge_batches(deg.cdf_device, deg.degrees_device,
                                      deg.total, t, batch=batch)

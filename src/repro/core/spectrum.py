@@ -28,6 +28,9 @@ from repro.core.sampling.edge import NeighborSampler
 
 @dataclasses.dataclass
 class SpectrumResult:
+    """Theorem 5.17 output: the EMD-approximated spectrum, the walk-return
+    moments it was inverted from, and the kernel-eval budget."""
+
     eigenvalues: np.ndarray      # (n,) approximated normalized-Laplacian spectrum
     moments: np.ndarray          # estimated walk-return moments
     kernel_evals: int
@@ -36,16 +39,26 @@ class SpectrumResult:
 def estimate_return_moments(sampler: NeighborSampler, n: int, length: int,
                             num_sources: int, walks_per_source: int,
                             seed: int = 0) -> np.ndarray:
-    """m_l = E_u[p^l_{uu}] for l = 1..length (m_0 = 1 implicitly)."""
+    """m_l = E_u[p^l_{uu}] for l = 1..length (m_0 = 1 implicitly).
+
+    Fused (DESIGN.md §7): ALL sources' walk ensembles run as one
+    ``walk_scan`` program with ``record_path=True`` -- the (length, S*w)
+    path comes back in one transfer and the return-hit averages are read
+    off it, where the seed ran ``num_sources * length`` host sampling
+    round-trips.  Cost: S*w*length walk steps (one level-1 read + w
+    level-2 rows each)."""
     rng = np.random.default_rng(seed)
     sources = rng.integers(0, n, size=num_sources)
-    hits = np.zeros(length, np.float64)
-    for u in sources:
-        cur = np.full(walks_per_source, int(u), np.int64)
-        for step in range(length):
-            cur, _ = sampler.sample(cur)
-            hits[step] += float((cur == u).mean())
-    return hits / num_sources
+    starts = np.repeat(sources, walks_per_source)
+    if getattr(sampler, "mode", None) == "blocked":
+        _, path = sampler.walk(starts, length, record_path=True)
+        return (np.asarray(path) == starts[None, :]).mean(axis=1)
+    hits = np.zeros(length, np.float64)  # tree-mode fallback: host steps
+    cur = starts.copy()
+    for step in range(length):
+        cur, _ = sampler.sample(cur)
+        hits[step] = float((cur == starts).mean())
+    return hits
 
 
 def invert_moments(moments: np.ndarray, n: int, grid: int = 201,
@@ -84,6 +97,13 @@ def approximate_spectrum(x, kernel: Kernel, length: int = 10,
                          num_sources: int = 32, walks_per_source: int = 64,
                          seed: int = 0,
                          sampler: Optional[NeighborSampler] = None) -> SpectrumResult:
+    """Theorem 5.17 (ApproxSpectralMoment): the normalized-Laplacian
+    spectrum in EMD from walk-return moments -- walk budget independent of
+    n.  Cost: ``num_sources * walks_per_source * length`` fused walk steps
+    (each one level-1 read plus exact level-2 rows).
+
+    >>> sp = approximate_spectrum(x, gaussian(1.0), length=8)
+    """
     n = int(x.shape[0])
     if sampler is None:
         sampler = NeighborSampler(x, kernel, mode="blocked", seed=seed,

@@ -50,7 +50,7 @@ TRACE_COUNTS = collections.Counter()
 _STATIC = frozenset((
     "kind", "inv_bw", "beta", "pairwise", "block_size", "num_blocks",
     "n", "s", "exact", "use_pallas", "interpret", "bm", "rounds", "slack",
-    "batch", "record_path"))
+    "batch", "record_path", "iters", "num_samples"))
 
 
 def _jit(fn):
@@ -181,30 +181,16 @@ def _level2_kv(x, x_sq, views, src, blk, *, kind, inv_bw, beta, pairwise,
 _level2_draw = _ref.level2_draw
 
 
-def _choose_block(bs, key):
-    """Exact inverse-CDF categorical over rows of the (floored) block
-    sums.  (The Pallas kernel uses Gumbel-max instead because it streams
-    blocks one at a time; both are exact samplers of the same law.)"""
-    c = jnp.cumsum(bs, axis=1)
-    tot = c[:, -1]
-    u = jax.random.uniform(key, (bs.shape[0],))
-    blk = jnp.sum((u * tot)[:, None] > c, axis=1).astype(jnp.int32)
-    blk = blk.clip(0, bs.shape[1] - 1)
-    pb = jnp.take_along_axis(bs, blk[:, None], axis=1)[:, 0] / tot
-    return blk, pb
+_choose_block = _ref.choose_block
 
 
 def _sample_core(x, x_sq, views, src, bs, key, *, kind, inv_bw, beta,
                  pairwise, block_size, n):
-    """(block draw -> level-2 row -> neighbor draw) from given level-1 sums."""
-    k_blk, k_in = jax.random.split(key)
-    blk, pb = _choose_block(bs, k_blk)
-    kv, live, cols_c = _level2_kv(x, x_sq, views, src, blk, kind=kind,
-                                  inv_bw=inv_bw, beta=beta, pairwise=pairwise,
-                                  block_size=block_size, n=n)
-    nb, pin = _level2_draw(kv, live, cols_c,
-                           jax.random.uniform(k_in, (src.shape[0],)))
-    return nb, pb * pin
+    """(block draw -> level-2 row -> neighbor draw) from given level-1 sums.
+    Delegates to ``ref.sample_from_sums`` so every fused program and its
+    oracle consume the identical key stream and math."""
+    return _ref.sample_from_sums(x, x_sq, views, src, bs, key, kind, inv_bw,
+                                 beta, block_size, n, pairwise)
 
 
 def _fused_sample(x, x_sq, src, key, *, kind, inv_bw, beta, pairwise,
@@ -460,3 +446,154 @@ def walk_scan(x, x_sq, starts, keys, *, kind, inv_bw, beta, pairwise,
 
     end, path = jax.lax.scan(body, starts, keys)
     return end, path
+
+
+# --------------------------------------------------------------------- #
+# fused application programs (DESIGN.md §7): eigen / Laplacian / local
+# clustering / triangles run their inner loops as single programs too
+# --------------------------------------------------------------------- #
+@_jit
+def noisy_power_scan(ksub, v0, keys, *, num_samples):
+    """BIMW21 noisy power method (Algorithm 5.18 step 2) as ONE program:
+    every iteration importance-samples ``num_samples`` indices j ~ |v_j|
+    by inverse CDF, forms the unbiased matvec estimate
+    ``sum_j sign(v_j) z / S * ksub[:, j]``, and renormalizes -- all under
+    ``lax.scan`` with no host round-trips.  Returns (Rayleigh quotient
+    from one exact final matvec, final unit vector).  Oracle:
+    ``ref.noisy_power_ref`` (identical key stream, unrolled)."""
+    TRACE_COUNTS["noisy_power_scan"] += 1
+    t = ksub.shape[0]
+
+    def body(v, k):
+        absv = jnp.abs(v)
+        z = jnp.sum(absv)
+        cdf = jnp.cumsum(absv)
+        u = jax.random.uniform(k, (num_samples,)) * jnp.maximum(z, 1e-30)
+        idx = jnp.clip(jnp.searchsorted(cdf, u, side="right"),
+                       0, t - 1).astype(jnp.int32)
+        contrib = jnp.sign(v[idx]) * z / num_samples
+        w = ksub[:, idx] @ contrib
+        nw = jnp.linalg.norm(w)
+        return jnp.where((nw > 0.0) & (z > 0.0),
+                         w / jnp.maximum(nw, 1e-30), v), None
+
+    v, _ = jax.lax.scan(body, v0, keys)
+    lam = v @ (ksub @ v)
+    return lam, v
+
+
+@_jit
+def laplacian_matvec(src, dst, w, p, *, n):
+    """L_{G'} p = D p - A p over a COO edge list as segment-sum scatters
+    (no ``np.add.at``); one jitted program per (n, m) shape pair."""
+    TRACE_COUNTS["laplacian_matvec"] += 1
+    return _ref.laplacian_matvec_ref(src, dst, w, p, n)
+
+
+@_jit
+def laplacian_cg(src, dst, w, b, tol, *, n, iters):
+    """Jacobi-preconditioned CG for ``L_{G'} x = b`` (b perp 1) as ONE
+    ``lax.while_loop`` program: the segment-sum matvec, the dot products,
+    and the convergence test all stay on device (Section 5.1.1's solve
+    step -- the seed ran one host iteration per CG step).
+
+    Float32-safe: the loop tracks the best iterate seen (CG in f32 stalls
+    near machine precision instead of hitting ``tol``) and stops on
+    stagnation -- non-positive curvature / preconditioned residual, a
+    non-finite residual, or 32 consecutive iterations without improving
+    the best residual (the f32 plateau; without this exit a sub-f32
+    ``tol`` would burn the full ``iters`` budget after convergence).
+    Returns (best iterate, projected to 1^perp, and its residual norm)."""
+    TRACE_COUNTS["laplacian_cg"] += 1
+    deg = jnp.zeros((n,), w.dtype).at[src].add(w).at[dst].add(w)
+    dinv = 1.0 / jnp.maximum(deg, 1e-30)
+
+    def proj(v):
+        return v - jnp.mean(v)
+
+    def matvec(p):
+        av = jnp.zeros((n,), w.dtype).at[src].add(w * p[dst]).at[dst].add(
+            w * p[src])
+        return deg * p - av
+
+    bb = proj(b)
+    x0 = jnp.zeros((n,), w.dtype)
+    r0 = bb
+    z0 = proj(dinv * r0)
+    rz0 = jnp.dot(r0, z0)
+    bnorm = jnp.maximum(jnp.linalg.norm(bb), 1e-30)
+
+    def cond(c):
+        return (c[0] < iters) & (~c[-1])
+
+    def body(c):
+        i, x_, r_, p_, rz_, bx, br, stall, _ = c
+        ap = matvec(p_)
+        denom = jnp.dot(p_, ap)
+        ok = (denom > 0.0) & (rz_ > 0.0)
+        alpha = jnp.where(ok, rz_ / jnp.maximum(denom, 1e-30), 0.0)
+        x2 = x_ + alpha * p_
+        r2 = r_ - alpha * ap
+        rn = jnp.linalg.norm(r2)
+        better = ok & (rn < br)
+        bx2 = jnp.where(better, x2, bx)
+        br2 = jnp.where(better, rn, br)
+        stall2 = jnp.where(better, 0, stall + 1)
+        z2 = proj(dinv * r2)
+        rz2 = jnp.dot(r2, z2)
+        p2 = z2 + jnp.where(ok, rz2 / jnp.maximum(rz_, 1e-30), 0.0) * p_
+        stop = (~ok) | (rn < tol * bnorm) | (~jnp.isfinite(rn)) \
+            | (rz2 <= 0.0) | (stall2 >= 32)
+        return i + 1, x2, r2, p2, rz2, bx2, br2, stall2, stop
+
+    init = (0, x0, r0, z0, rz0, x0, jnp.linalg.norm(r0), 0, False)
+    out = jax.lax.while_loop(cond, body, init)
+    return proj(out[5]), out[6]
+
+
+@_jit
+def signed_endpoint_stat(ends, signs, *, n):
+    """``sum_i (sum_j signs_j [ends_j = i])^2`` -- the collision part of
+    the CDVV14 l2 statistic computed on device: with signs +1 for the u
+    walks and -1 for the w walks this is ``sum_i (X_i - Y_i)^2`` over the
+    endpoint count vectors, one segment-sum and one reduction."""
+    TRACE_COUNTS["signed_endpoint_stat"] += 1
+    c = jnp.zeros((n,), signs.dtype).at[ends].add(signs)
+    return jnp.sum(c * c)
+
+
+@_jit
+def triangle_edge_scan(x, x_sq, u, v, degs, keys, *, kind, inv_bw, beta,
+                       pairwise, block_size, num_blocks, n, s, exact,
+                       use_pallas, interpret, bm):
+    """Theorem 6.17's per-edge inner loop as ONE program: degree-ordered
+    orientation of the (u, v) pairs, ONE masked level-1 read of the
+    oriented v frontier (keys[0], shared by every draw -- the §4 caching
+    contract inside a single trace), then a ``lax.scan`` over keys[1:]
+    where each step draws w ~ k(v, .)/deg(v), masks by the ordering
+    ``v < w`` and ``w != u``, and accumulates k(u,v) k(u,w); the final
+    reweighting by deg(v)/num_draws also happens in-program.  Returns
+    (oriented u, oriented v, per-edge weight estimates W_e).  Oracle:
+    ``ref.triangle_batch_ref``."""
+    TRACE_COUNTS["triangle_edge_scan"] += 1
+    views = _block_views(x, x_sq, block_size)
+    prec = _ref.degree_precedes(degs, u, v)
+    uu = jnp.where(prec, u, v)
+    vv = jnp.where(prec, v, u)
+    kuv = _ref.kv_pairs(x[uu], x[vv], kind, inv_bw, beta, pairwise)
+    bs = _masked_sums_any(x, x_sq, vv, keys[0], kind=kind, inv_bw=inv_bw,
+                          beta=beta, pairwise=pairwise, block_size=block_size,
+                          num_blocks=num_blocks, n=n, s=s, exact=exact,
+                          use_pallas=use_pallas, interpret=interpret, bm=bm)
+
+    def body(acc, k):
+        w, _ = _sample_core(x, x_sq, views, vv, bs, k, kind=kind,
+                            inv_bw=inv_bw, beta=beta, pairwise=pairwise,
+                            block_size=block_size, n=n)
+        valid = _ref.degree_precedes(degs, vv, w) & (w != uu)
+        kuw = _ref.kv_pairs(x[uu], x[w], kind, inv_bw, beta, pairwise)
+        return acc + jnp.where(valid, kuv * kuw, 0.0), None
+
+    acc, _ = jax.lax.scan(body, jnp.zeros_like(kuv), keys[1:])
+    num_draws = keys.shape[0] - 1
+    return uu, vv, acc * degs[vv] / num_draws

@@ -153,6 +153,118 @@ def level2_draw(kv, live, cols_c, u2):
     return nb, pin
 
 
+def choose_block(bs, key):
+    """Exact inverse-CDF categorical over rows of the (floored) block sums;
+    returns (block index, realized block probability).  (The Pallas kernel
+    uses Gumbel-max instead because it streams blocks one at a time; both
+    are exact samplers of the same law.)"""
+    c = jnp.cumsum(bs, axis=1)
+    tot = c[:, -1]
+    u = jax.random.uniform(key, (bs.shape[0],))
+    blk = jnp.sum((u * tot)[:, None] > c, axis=1).astype(jnp.int32)
+    blk = blk.clip(0, bs.shape[1] - 1)
+    pb = jnp.take_along_axis(bs, blk[:, None], axis=1)[:, 0] / tot
+    return blk, pb
+
+
+def sample_from_sums(x, x_sq, views, src, bs, key, kind: str, inv_bw: float,
+                     beta: float, block_size: int, n: int, pairwise=None):
+    """One depth-2 draw from given level-1 sums ``bs`` of the ``src``
+    frontier: (block draw -> exact level-2 row -> in-block draw), with the
+    PR-2 key-split discipline (k_blk, k_in = split(key)).  Shared verbatim
+    by ``ops._sample_core`` and the application oracles, so fused programs
+    and their ref loops consume identical randomness."""
+    k_blk, k_in = jax.random.split(key)
+    blk, pb = choose_block(bs, k_blk)
+    kv, live, cols_c = level2_row(x, x_sq, views, src, blk, kind, inv_bw,
+                                  beta, block_size, n, pairwise)
+    nb, pin = level2_draw(kv, live, cols_c,
+                          jax.random.uniform(k_in, (src.shape[0],)))
+    return nb, pb * pin
+
+
+def masked_exact_sums_ref(q, x, x_sq, own, kind: str, inv_bw: float,
+                          beta: float, bn: int, n: int, pairwise=None):
+    """Masked level-1 sums on the *exact non-Pallas* path, matching
+    ``ops._masked_block_sums(exact=True)`` bit-for-bit: one dense sweep over
+    the unpadded dataset, zero-padded to a block multiple, own-block
+    corrected by the self kernel k(x, x) = 1, floored."""
+    m = q.shape[0]
+    kv = kv_matrix(q, x, x_sq, kind, inv_bw, beta, pairwise)
+    pad = -n % bn
+    if pad:
+        kv = jnp.pad(kv, ((0, 0), (0, pad)))
+    bs = kv.reshape(m, -1, bn).sum(-1)
+    corr = jnp.arange(bs.shape[1], dtype=jnp.int32)[None, :] == own[:, None]
+    bs = jnp.where(corr, bs - 1.0, bs)
+    return jnp.maximum(bs, BLOCK_SUM_FLOOR)
+
+
+def degree_precedes(degs, a, b):
+    """Degree-then-index total vertex order from Theorem 6.17's proof:
+    a < b iff (deg_a, a) < (deg_b, b) lexicographically."""
+    return (degs[a] < degs[b]) | ((degs[a] == degs[b]) & (a < b))
+
+
+def noisy_power_ref(ksub, v0, keys, num_samples: int):
+    """Oracle of ``ops.noisy_power_scan`` -- the BIMW21 noisy power method
+    with the identical per-iteration math and key stream, as a host loop
+    over the unrolled iterations instead of a ``lax.scan``.  Returns
+    (Rayleigh quotient, final unit vector)."""
+    t = ksub.shape[0]
+    v = v0
+    for i in range(keys.shape[0]):
+        absv = jnp.abs(v)
+        z = jnp.sum(absv)
+        cdf = jnp.cumsum(absv)
+        u = jax.random.uniform(keys[i], (num_samples,)) * jnp.maximum(z, 1e-30)
+        idx = jnp.clip(jnp.searchsorted(cdf, u, side="right"),
+                       0, t - 1).astype(jnp.int32)
+        contrib = jnp.sign(v[idx]) * z / num_samples
+        w = ksub[:, idx] @ contrib
+        nw = jnp.linalg.norm(w)
+        v = jnp.where((nw > 0.0) & (z > 0.0), w / jnp.maximum(nw, 1e-30), v)
+    lam = v @ (ksub @ v)
+    return lam, v
+
+
+def laplacian_matvec_ref(src, dst, w, p, n: int):
+    """Oracle of ``ops.laplacian_matvec``: L p = D p - A p via two
+    segment-sum scatters over the COO edge list (the jnp transcription of
+    ``SparseGraph.matvec``)."""
+    av = jnp.zeros((n,), w.dtype).at[src].add(w * p[dst]).at[dst].add(
+        w * p[src])
+    deg = jnp.zeros((n,), w.dtype).at[src].add(w).at[dst].add(w)
+    return deg * p - av
+
+
+def triangle_batch_ref(x, x_sq, u, v, degs, keys, kind: str, inv_bw: float,
+                       beta: float, block_size: int, n: int, pairwise=None):
+    """Oracle of ``ops.triangle_edge_scan`` on its exact level-1 path:
+    Theorem 6.17's per-edge estimator with the identical key discipline --
+    degree-ordered orientation, ONE masked level-1 read of the v frontier
+    (keys[0]), then one ``sample_from_sums`` neighbor draw per remaining
+    key, validity mask ``v < w`` (degree order) and ``w != u``, and the
+    in-program reweighting by deg(v) / num_draws."""
+    views = block_views(x, x_sq, block_size)
+    prec = degree_precedes(degs, u, v)
+    uu = jnp.where(prec, u, v)
+    vv = jnp.where(prec, v, u)
+    kuv = kv_pairs(x[uu], x[vv], kind, inv_bw, beta, pairwise)
+    bs = masked_exact_sums_ref(x[vv], x, x_sq,
+                               (vv // block_size).astype(jnp.int32),
+                               kind, inv_bw, beta, block_size, n, pairwise)
+    acc = jnp.zeros_like(kuv)
+    num_draws = keys.shape[0] - 1
+    for i in range(1, keys.shape[0]):
+        w, _ = sample_from_sums(x, x_sq, views, vv, bs, keys[i], kind,
+                                inv_bw, beta, block_size, n, pairwise)
+        valid = degree_precedes(degs, vv, w) & (w != uu)
+        kuw = kv_pairs(x[uu], x[w], kind, inv_bw, beta, pairwise)
+        acc = acc + jnp.where(valid, kuv * kuw, 0.0)
+    return uu, vv, acc * degs[vv] / num_draws
+
+
 def masked_block_sums_ref(q, x, x_sq, own, kind: str, inv_bw: float,
                           beta: float, bn: int, pairwise=None) -> jnp.ndarray:
     """(m, B) per-block sums over a padded dataset (n multiple of ``bn``;

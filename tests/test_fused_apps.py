@@ -1,0 +1,261 @@
+"""Fused application pipelines (DESIGN.md §7): ref-oracle agreement for the
+device programs behind eigen / Laplacian / local clustering / triangles /
+arboricity, accuracy vs the dense NumPy oracles, and eval-counter audits
+against the analytic counts."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cluster.local import same_cluster_test
+from repro.core.eigen import top_eigenvalue, top_eigenvalue_exact
+from repro.core.graph.arboricity import estimate_arboricity, exact_arboricity
+from repro.core.graph.triangles import (estimate_triangle_weight,
+                                        exact_triangle_weight)
+from repro.core.kernels_fn import gaussian
+from repro.core.laplacian import cg_laplacian
+from repro.core.sampling.edge import NeighborSampler
+from repro.core.sparsify import spectral_sparsify
+from repro.core.spectrum import approximate_spectrum
+from repro.data.synthetic_points import gaussian_clusters
+from repro.kernels.kde_sampler import ops as sops
+from repro.kernels.kde_sampler import ref as sref
+
+
+@pytest.fixture(scope="module")
+def cloud():
+    rng = np.random.default_rng(0)
+    x = rng.normal(0, 0.35, (300, 5)).astype(np.float32)
+    ker = gaussian(bandwidth=2.0)
+    k = np.asarray(ker.matrix(jnp.asarray(x)), np.float64)
+    return x, ker, k
+
+
+@pytest.fixture(scope="module")
+def clustered():
+    x, lab = gaussian_clusters(n=400, d=4, k=2, spread=0.3, sep=1.2, seed=3)
+    ker = gaussian(bandwidth=1.0)
+    return x, lab, ker
+
+
+# ------------------------------------------------------------- eigen
+def test_noisy_power_scan_matches_ref_oracle(cloud):
+    """The one-program noisy power method reproduces the unrolled ref
+    oracle under the identical key stream."""
+    x, ker, k = cloud
+    t = 96
+    ksub = jnp.asarray(k[:t, :t], jnp.float32)
+    key = jax.random.PRNGKey(5)
+    v0 = jax.random.normal(key, (t,), jnp.float32)
+    v0 = v0 / jnp.linalg.norm(v0)
+    keys = jax.random.split(jax.random.PRNGKey(6), 10)
+    lam, v = sops.noisy_power_scan(ksub, v0, keys, num_samples=48)
+    lam_r, v_r = sref.noisy_power_ref(ksub, v0, keys, 48)
+    np.testing.assert_allclose(np.asarray(v), np.asarray(v_r), rtol=2e-5,
+                               atol=2e-6)
+    np.testing.assert_allclose(float(lam), float(lam_r), rtol=2e-5)
+
+
+def test_top_eigenvalue_lemma_5_21_bound(cloud):
+    """Lemma 5.21: |n/t lambda_1(K_S) - lambda_1(K)| <= c n / sqrt(t)."""
+    x, ker, k = cloud
+    n, t = k.shape[0], 150
+    lam_true = top_eigenvalue_exact(ker, x)
+    res = top_eigenvalue(x, ker, t=t, method="noisy_power", seed=0)
+    assert abs(res.eigenvalue - lam_true) <= 2.0 * n / np.sqrt(t)
+
+
+def test_eigen_counters_not_inflated(cloud):
+    """PR-3 bugfix: kernel_evals counts the one-time t^2 materialization;
+    the sampled matvec lookups are reported separately (the seed added
+    t * |idx| fresh 'evals' per iteration)."""
+    x, ker, _ = cloud
+    t, eps = 150, 0.25
+    res = top_eigenvalue(x, ker, t=t, eps=eps, method="noisy_power", seed=0)
+    assert res.kernel_evals == t * t
+    iters = max(int(np.ceil(np.log(max(t, 2) / eps) / np.sqrt(eps))), 8)
+    assert res.matvec_sampled_evals == iters * t * max(t // 2, 8)
+    res_p = top_eigenvalue(x, ker, t=t, eps=eps, method="power", seed=0)
+    assert res_p.kernel_evals == t * t
+    assert res_p.matvec_sampled_evals == 0
+
+
+# ------------------------------------------------------------- laplacian
+def test_laplacian_matvec_matches_sparsegraph(cloud):
+    """The segment-sum device matvec is the SparseGraph.matvec oracle."""
+    x, ker, _ = cloud
+    g = spectral_sparsify(x, ker, num_edges=4000, estimator="exact",
+                          exact_blocks=True, seed=0)
+    p = np.random.default_rng(3).standard_normal(g.n)
+    got = np.asarray(sops.laplacian_matvec(
+        jnp.asarray(g.src, jnp.int32), jnp.asarray(g.dst, jnp.int32),
+        jnp.asarray(g.weight, jnp.float32), jnp.asarray(p, jnp.float32),
+        n=g.n), np.float64)
+    np.testing.assert_allclose(got, g.matvec(p), rtol=2e-4, atol=2e-4)
+
+
+def test_device_cg_residual_and_solution(cloud):
+    """One-program CG: small residual and agreement with the dense
+    pseudoinverse solve on the sparsifier Laplacian."""
+    x, ker, _ = cloud
+    g = spectral_sparsify(x, ker, num_edges=12000, estimator="exact",
+                          exact_blocks=True, seed=0)
+    b = np.random.default_rng(1).standard_normal(g.n)
+    b -= b.mean()
+    sol, res = cg_laplacian(g, b, iters=400)
+    assert res < 1e-4 * np.linalg.norm(b)
+    x_direct = np.linalg.lstsq(g.laplacian_dense(), b, rcond=None)[0]
+    x_direct -= x_direct.mean()
+    assert np.linalg.norm(sol - x_direct) / np.linalg.norm(x_direct) < 1e-3
+
+
+# ------------------------------------------------------------- local
+def test_signed_endpoint_stat_matches_bincount():
+    """Device collision statistic == the numpy bincount oracle."""
+    rng = np.random.default_rng(0)
+    n = 120
+    ends = rng.integers(0, n, size=500)
+    signs = np.where(rng.uniform(size=500) < 0.5, 1.0, -1.0)
+    got = float(sops.signed_endpoint_stat(jnp.asarray(ends, jnp.int32),
+                                          jnp.asarray(signs, jnp.float32),
+                                          n=n))
+    c = np.zeros(n)
+    np.add.at(c, ends, signs)
+    assert abs(got - float((c * c).sum())) < 1e-3
+
+
+def test_same_cluster_confusion_and_counters(clustered):
+    """2-cluster mixture: same-pairs accepted, cross-pairs rejected, and
+    the eval counter matches the analytic fused-walk count."""
+    x, lab, ker = clustered
+    n = x.shape[0]
+    i0 = np.where(lab == 0)[0]
+    i1 = np.where(lab == 1)[0]
+    cases = [(int(i0[0]), int(i0[5]), True), (int(i1[1]), int(i1[7]), True),
+             (int(i0[0]), int(i1[0]), False), (int(i0[3]), int(i1[2]), False)]
+    for seed, (u, w, want_same) in enumerate(cases):
+        nb = NeighborSampler(x, ker, mode="blocked", exact_blocks=True,
+                             seed=seed)
+        res = same_cluster_test(x, ker, u, w, walk_length=6, num_walks=400,
+                                sampler=nb, seed=seed)
+        assert res.same_cluster == want_same, (u, w, res.statistic)
+        # analytic count: W walks, T steps, each one level-1 read (W * n)
+        # plus W exact level-2 rows of block_size columns
+        rng = np.random.default_rng(seed)
+        walks = (max(int(rng.poisson(400)), 1)
+                 + max(int(rng.poisson(400)), 1))
+        assert res.kernel_evals == 6 * walks * (n + nb.block_size)
+
+
+# ------------------------------------------------------------- triangles
+def test_triangle_scan_matches_ref_oracle(cloud):
+    """The fused triangle program (exact level-1 path) reproduces the
+    ref.py oracle: oriented pairs bit-for-bit, weights to f32 tolerance."""
+    x, ker, k = cloud
+    n, bs = 300, 32
+    nb = (n + bs - 1) // bs
+    xd = jnp.asarray(x)
+    x_sq = jnp.sum(xd * xd, axis=-1)
+    deg = jnp.asarray((k.sum(1) - 1.0).astype(np.float32))
+    rng = np.random.default_rng(2)
+    u = jnp.asarray(rng.integers(0, n, 64), jnp.int32)
+    v = jnp.asarray((rng.integers(0, n - 1, 64) + 1 + np.arange(64)) % n,
+                    jnp.int32)
+    v = jnp.where(v == u, (v + 1) % n, v)
+    keys = jax.random.split(jax.random.PRNGKey(9), 9)
+    cfg = dict(kind="gaussian", inv_bw=1.0 / 2.0, beta=1.0, pairwise=None,
+               block_size=bs, num_blocks=nb, n=n, s=8, exact=True,
+               use_pallas=False, interpret=False, bm=128)
+    uu, vv, w_hat = sops.triangle_edge_scan(xd, x_sq, u, v, deg, keys, **cfg)
+    ru, rv, rw = sref.triangle_batch_ref(xd, x_sq, u, v, deg, keys,
+                                         "gaussian", 1.0 / 2.0, 1.0, bs, n)
+    np.testing.assert_array_equal(np.asarray(uu), np.asarray(ru))
+    np.testing.assert_array_equal(np.asarray(vv), np.asarray(rv))
+    np.testing.assert_allclose(np.asarray(w_hat), np.asarray(rw), rtol=2e-4,
+                               atol=1e-7)
+
+
+def test_triangle_accuracy_and_counters(clustered):
+    """Theorem 6.17 accuracy through the fused path + analytic evals."""
+    x, lab, ker = clustered
+    n = x.shape[0]
+    truth = exact_triangle_weight(ker, x)
+    m, ns = 400, 24
+    res = estimate_triangle_weight(x, ker, num_edges=m, neighbor_samples=ns,
+                                   estimator="exact", seed=0)
+    assert abs(res.total_weight - truth) / truth < 0.2
+    nbr = NeighborSampler(x, ker, mode="blocked", exact_blocks=True)
+    bs = nbr.block_size
+    # n*n degree preprocessing + m*(n + 1) frontier read and k(u,v) pairs
+    # + ns*m*(bs + 1) draws and k(u,w) pairs
+    assert res.kernel_evals == n * n + m * (n + 1) + ns * m * (bs + 1)
+
+    spb = 16
+    res_s = estimate_triangle_weight(x, ker, num_edges=m,
+                                     neighbor_samples=ns,
+                                     estimator="stratified", seed=0)
+    nb = nbr.num_blocks
+    assert res_s.kernel_evals == (n * nb * spb + m * (nb * spb + 1)
+                                  + ns * m * (bs + 1))
+
+
+# ------------------------------------------------------------- arboricity
+def test_arboricity_accuracy_and_counters(clustered):
+    """Theorem 6.15 accuracy through the fused edge-batch path + analytic
+    evals (identical count structure to the sparsifier audit)."""
+    x, lab, ker = clustered
+    n = x.shape[0]
+    truth = exact_arboricity(ker, x)
+    m, batch = 8000, 512
+    res = estimate_arboricity(x, ker, num_edges=m, estimator="exact",
+                              seed=0, batch=batch)
+    assert abs(res.density - truth) / truth < 0.1
+    nbr = NeighborSampler(x, ker, mode="blocked", exact_blocks=True)
+    drawn = ((m + batch - 1) // batch) * batch
+    assert res.kernel_evals == n * n + drawn * (n + nbr.block_size + 1)
+
+
+# ------------------------------------------------------------- spectrum
+def test_spectrum_walk_counters(cloud):
+    """The fused moment estimator's eval counter matches the analytic
+    one-walk-program count."""
+    x, ker, _ = cloud
+    n = x.shape[0]
+    length, srcs, wps = 6, 8, 16
+    sp = approximate_spectrum(x, ker, length=length, num_sources=srcs,
+                              walks_per_source=wps, seed=0)
+    nbr = NeighborSampler(x, ker, mode="blocked", exact_blocks=True)
+    walks = srcs * wps
+    assert sp.kernel_evals == length * walks * (n + nbr.block_size)
+
+
+# ------------------------------------------------------------- compiled path
+def test_fused_apps_hit_compiled_path(cloud):
+    """Repeated same-shape calls of the new application programs never
+    retrace."""
+    x, ker, k = cloud
+    nbr = NeighborSampler(x, ker, mode="blocked", exact_blocks=True, seed=0)
+    deg = jnp.asarray((k.sum(1) - 1.0).astype(np.float32))
+    rng = np.random.default_rng(0)
+    u = rng.integers(0, 300, 32)
+    v = (u + 1 + rng.integers(0, 298, 32)) % 300
+    g = spectral_sparsify(x, ker, num_edges=2000, estimator="exact",
+                          exact_blocks=True, seed=0)
+    b = rng.standard_normal(300)
+    ksub = jnp.asarray(k[:64, :64], jnp.float32)
+    v0 = jnp.ones(64, jnp.float32) / 8.0
+    keys = jax.random.split(jax.random.PRNGKey(0), 4)
+
+    def run_all():
+        nbr.triangle_batches(u, v, deg, 4)
+        cg_laplacian(g, b, iters=50)
+        sops.noisy_power_scan(ksub, v0, keys, num_samples=16)
+        sops.signed_endpoint_stat(jnp.zeros(10, jnp.int32),
+                                  jnp.ones(10, jnp.float32), n=300)
+
+    run_all()  # traces every program once
+    before = dict(sops.TRACE_COUNTS)
+    for _ in range(2):
+        run_all()
+    assert dict(sops.TRACE_COUNTS) == before, \
+        "a fused application program retraced or fell off the compiled path"

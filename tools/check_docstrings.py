@@ -1,0 +1,76 @@
+"""Docstring presence check for the public core API (pydocstyle-style,
+dependency-free) -- the CI guard behind the PR-3 docstring audit.
+
+Rules, applied to every module under ``src/repro/core``:
+
+1. the module has a docstring that cites the paper (an ``Algorithm /
+   Theorem / Lemma / Corollary / Definition / Section N`` reference), so
+   each file is anchored to what it reproduces;
+2. every public module-level function and class has a docstring;
+3. every public method of a public class has a docstring (dunders and
+   ``_private`` names are exempt; bare ``@property`` wrappers are not).
+
+  PYTHONPATH=src python tools/check_docstrings.py
+"""
+from __future__ import annotations
+
+import ast
+import re
+import sys
+from pathlib import Path
+
+CORE = Path(__file__).resolve().parent.parent / "src" / "repro" / "core"
+PAPER_REF = re.compile(
+    r"(Algorithm|Theorem|Lemma|Corollary|Definition|Section|§)\s*[0-9]")
+
+
+def _public(name: str) -> bool:
+    return not name.startswith("_")
+
+
+def _check_def(node, where: str, errors: list, require_ref: bool = False):
+    doc = ast.get_docstring(node)
+    if not doc:
+        errors.append(f"{where}: missing docstring")
+    elif require_ref and not PAPER_REF.search(doc):
+        errors.append(f"{where}: docstring cites no paper "
+                      "Algorithm/Theorem/Section number")
+
+
+def check_module(path: Path) -> list:
+    errors = []
+    rel = path.relative_to(CORE.parent.parent.parent)
+    tree = ast.parse(path.read_text(), filename=str(path))
+    _check_def(tree, f"{rel} (module)", errors, require_ref=True)
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if _public(node.name):
+                _check_def(node, f"{rel}:{node.lineno} def {node.name}",
+                           errors)
+        elif isinstance(node, ast.ClassDef) and _public(node.name):
+            _check_def(node, f"{rel}:{node.lineno} class {node.name}", errors)
+            for sub in node.body:
+                if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                        and _public(sub.name):
+                    _check_def(sub, f"{rel}:{sub.lineno} "
+                               f"{node.name}.{sub.name}", errors)
+    return errors
+
+
+def main() -> int:
+    errors = []
+    for path in sorted(CORE.rglob("*.py")):
+        if path.name == "__init__.py" and not path.read_text().strip():
+            continue
+        errors.extend(check_module(path))
+    if errors:
+        print(f"{len(errors)} docstring violation(s) in src/repro/core:")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print("docstring check: src/repro/core is clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
