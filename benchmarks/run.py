@@ -19,6 +19,7 @@ BENCHES = {
     "lra": "benchmarks.bench_lra",                 # Figure 3
     "sparsify": "benchmarks.bench_sparsify",       # Figure 4 / §7.1
     "graph": "benchmarks.bench_graph",             # Thms 6.15 / 6.17
+    "distributed": "benchmarks.bench_distributed", # sharded engine (§9)
     "eigen_spectrum": "benchmarks.bench_eigen_spectrum",  # Thms 5.22 / 5.17
     "attention": "benchmarks.bench_attention",     # framework integration
 }

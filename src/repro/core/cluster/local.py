@@ -50,7 +50,8 @@ class LocalClusterResult:
 def same_cluster_test(x, kernel, u: int, w: int, walk_length: int,
                       num_walks: int, seed: int = 0,
                       sampler: NeighborSampler | None = None,
-                      threshold: float | None = None) -> LocalClusterResult:
+                      threshold: float | None = None,
+                      mesh=None) -> LocalClusterResult:
     """Algorithm 6.1 / Theorem 6.9: decide whether u and w share a cluster
     with num_walks ~ O(sqrt(n k / eps) log(1/eps)) walks of length t per
     endpoint.  Both endpoints' walks are ONE fused ``walk_scan`` program
@@ -66,7 +67,7 @@ def same_cluster_test(x, kernel, u: int, w: int, walk_length: int,
     rng = np.random.default_rng(seed)
     if sampler is None:
         sampler = NeighborSampler(x, kernel, mode="blocked", seed=seed,
-                                  exact_blocks=True)
+                                  exact_blocks=True, mesh=mesh)
     # Poissonize the sample sizes so the collision statistic is unbiased.
     r_u = max(int(rng.poisson(num_walks)), 1)
     r_w = max(int(rng.poisson(num_walks)), 1)

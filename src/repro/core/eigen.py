@@ -69,30 +69,39 @@ def power_method(ksub: np.ndarray, iters: int, rng) -> Tuple[float, np.ndarray]:
 
 
 def noisy_power_method(ksub: jnp.ndarray, iters: int, num_samples: int,
-                       key) -> Tuple[float, np.ndarray, int]:
+                       key, mesh=None) -> Tuple[float, np.ndarray, int]:
     """BIMW21 Algorithm 1 (noisy power method) on the submatrix, fused:
     all ``iters`` iterations run as one jitted ``lax.scan`` program
-    (DESIGN.md §7).  Returns (eigenvalue, vector, matvec_sampled_evals)
-    where the last is the per-iteration sampled-pair lookup count
-    ``iters * t * num_samples`` (not fresh kernel evaluations -- the
-    submatrix is already materialized).
+    (DESIGN.md §7).  With ``mesh=`` the submatrix is sharded over columns
+    and each iteration's sampled matvec is a local masked gather + one
+    psum (DESIGN.md §9); the key stream and math are identical.  Returns
+    (eigenvalue, vector, matvec_sampled_evals) where the last is the
+    per-iteration sampled-pair lookup count ``iters * t * num_samples``
+    (not fresh kernel evaluations -- the submatrix is already
+    materialized).
 
     >>> lam, v, _ = noisy_power_method(ksub, 12, 32, jax.random.PRNGKey(0))
     """
     from repro.kernels.kde_sampler import ops as _ops
+    from repro.kernels.kde_sampler.sharded import sharded_noisy_power
 
     t = int(ksub.shape[0])
     k_init, k_iter = jax.random.split(key)
     v0 = jax.random.normal(k_init, (t,), ksub.dtype)
     v0 = v0 / jnp.linalg.norm(v0)
     keys = jax.random.split(k_iter, iters)
-    lam, v = _ops.noisy_power_scan(ksub, v0, keys, num_samples=num_samples)
+    if mesh is not None:
+        lam, v = sharded_noisy_power(mesh, ksub, v0, keys,
+                                     num_samples=num_samples)
+    else:
+        lam, v = _ops.noisy_power_scan(ksub, v0, keys,
+                                       num_samples=num_samples)
     return float(lam), np.asarray(v, np.float64), iters * t * num_samples
 
 
 def top_eigenvalue(x, kernel: Kernel, eps: float = 0.25, tau: float = 0.1,
                    t: Optional[int] = None, method: str = "power",
-                   seed: int = 0) -> EigenResult:
+                   seed: int = 0, mesh=None) -> EigenResult:
     """Algorithm 5.18 / Theorem 5.22: (1 - eps)-approximate top eigenvalue
     of the n x n kernel matrix from a t x t principal submatrix,
     t = O(1/(eps^2 tau^2)) -- cost independent of n.
@@ -104,6 +113,10 @@ def top_eigenvalue(x, kernel: Kernel, eps: float = 0.25, tau: float = 0.1,
     >>> res = top_eigenvalue(x, gaussian(1.0), t=180, method="noisy_power")
     """
     n = int(x.shape[0])
+    if mesh is not None and method != "noisy_power":
+        raise ValueError("mesh= shards the noisy power iteration; use "
+                         "method='noisy_power' (the plain power method is "
+                         "a host post-processing step)")
     rng = np.random.default_rng(seed)
     t = int(t if t is not None else min(n, int(np.ceil(1.0 / (eps * eps * tau * tau)))))
     support = rng.choice(n, size=t, replace=False)
@@ -116,7 +129,7 @@ def top_eigenvalue(x, kernel: Kernel, eps: float = 0.25, tau: float = 0.1,
     if method == "noisy_power":
         lam, v, sampled = noisy_power_method(
             ksub_dev, iters, num_samples=max(t // 2, 8),
-            key=jax.random.PRNGKey(seed + 1))
+            key=jax.random.PRNGKey(seed + 1), mesh=mesh)
     else:
         ksub = np.asarray(ksub_dev, np.float64)
         lam, v = power_method(ksub, iters, rng)

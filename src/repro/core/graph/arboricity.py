@@ -80,10 +80,12 @@ class ArboricityResult:
 
 def estimate_arboricity(x, kernel: Kernel, num_edges: int,
                         estimator: str = "stratified",
-                        seed: int = 0, batch: int = 512) -> ArboricityResult:
+                        seed: int = 0, batch: int = 512,
+                        mesh=None) -> ArboricityResult:
     """Algorithm 6.14 / Theorem 6.15 with the weighted edge sampler of
     Section 4.3, fused: all ``num_edges`` draws and their importance
-    weights come from one ``edge_batch_scan`` device program.
+    weights come from one ``edge_batch_scan`` device program (sharded
+    over ``mesh`` when given -- one psum per batch, DESIGN.md §9).
 
     Cost (stratified, m = num_edges rounded up to a batch multiple):
     ``n*B*s`` degree preprocessing + ``m*(B*s + bs + 1)`` edge draws.
@@ -94,9 +96,11 @@ def estimate_arboricity(x, kernel: Kernel, num_edges: int,
     m = int(num_edges)
     nbr = NeighborSampler(x, kernel, mode="blocked", seed=seed + 2,
                           exact_blocks=(estimator in ("exact",
-                                                      "exact_block")))
+                                                      "exact_block")),
+                          mesh=mesh)
     est = shared_level1_estimator(nbr, estimator, seed=seed)
-    deg = DegreeSampler(est, seed=seed + 1)
+    deg = DegreeSampler(est, seed=seed + 1,
+                        mesh=mesh if est is nbr.blocks else None)
     # edge_batches reweights by k(u,v) / (m (p_u q_uv + p_v q_vu)) -- the
     # Theorem-6.15 estimator X_i = w_e / (p_e m) with the Section 4.3 law.
     u, v, w, _, _ = nbr.edge_batches(deg.cdf_device, deg.degrees_device,

@@ -41,7 +41,7 @@ class TriangleResult:
 
 def estimate_triangle_weight(x, kernel: Kernel, num_edges: int,
                              neighbor_samples: int, estimator: str = "stratified",
-                             seed: int = 0) -> TriangleResult:
+                             seed: int = 0, mesh=None) -> TriangleResult:
     """Theorem 6.17: (1 +- eps) total triangle weight from ``num_edges``
     uniform vertex pairs and ``neighbor_samples`` weighted neighbor draws
     per pair -- query budget independent of n.
@@ -56,7 +56,8 @@ def estimate_triangle_weight(x, kernel: Kernel, num_edges: int,
     rng = np.random.default_rng(seed)
     nbr = NeighborSampler(x, kernel, mode="blocked", seed=seed + 1,
                           exact_blocks=(estimator in ("exact",
-                                                      "exact_block")))
+                                                      "exact_block")),
+                          mesh=mesh)
     est = shared_level1_estimator(nbr, estimator, seed=seed)
     deg = approximate_degrees(est)
 

@@ -1,111 +1,74 @@
-"""Distributed KDE queries -- the multi-pod substrate for every reduction.
+"""Distributed KDE structures -- thin wrappers over the sharded engine.
 
-The dataset X is sharded over the ("pod", "data") mesh axes (each device
-holds n/shards points); a KDE query computes local partial kernel row sums
-and one psum.  Degree vectors, squared-row-norm distributions (Section 5.2),
-and level-1 block sums all reduce to this primitive, so every paper
-algorithm distributes the same way: sampling decisions happen on the host
-against the psum'd totals while the O(n d) sweeps stay sharded.
+The dataset X is sharded over mesh ``data_axes`` (each device holds n/P
+rows); Section 3 KDE queries, Algorithm 4.3 degree preprocessing and the
+level-1 block-sum reads of the depth-2 sampler all run as shard_map
+programs built by ``repro.kernels.kde_sampler.sharded`` -- the ONE engine
+behind both the single- and multi-device paths.  Sampling decisions no
+longer happen on the host: the two-stage collective draw of DESIGN.md §9
+(psum-of-totals owner selection) lives in the engine, and this module only
+adapts it to the Definition 1.1 estimator interface.
 
-Built with shard_map so the collective schedule is explicit (one
-psum per query batch; no resharding of X ever).
+``ShardedKDE`` is that adapter: a drop-in ``KDEBase`` for
+``NeighborSampler`` / ``DegreeSampler`` / ``RowNormSampler`` whose
+``query`` is one collective program and whose ``engine`` carries the
+mesh-resident level-1 block structure every fused pipeline shares.
+
+The functional API (``sharded_kde_query`` / ``sharded_block_sums`` /
+``degree_preprocessing`` / ``make_sharded_dataset``) is kept for callers
+that manage their own sharded arrays; the collective schedule is unchanged
+(one psum per query batch; X is never resharded, the degree ring moves
+shard-sized blocks only).
 """
 from __future__ import annotations
 
-import functools
-from typing import Sequence
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.kernels_fn import Kernel
-
-from repro.compat import shard_map
+from repro.kernels.kde_sampler import sharded as _sh
 
 
 def sharded_kde_query(mesh: Mesh, kernel: Kernel,
                       data_axes: Sequence[str] = ("data",)):
-    """Returns a jitted f(y: (m, d), x: (n, d)) -> (m,) with x sharded along
-    ``data_axes`` and y replicated."""
-    axes = tuple(data_axes)
-
-    def local(y, x_shard):
-        part = jnp.sum(kernel.pairwise(y, x_shard), axis=1)
-        return jax.lax.psum(part, axes)
-
-    shmap = shard_map(
-        local, mesh=mesh,
-        in_specs=(P(), P(axes)),
-        out_specs=P(),
-    )
-    return jax.jit(shmap)
+    """Returns a jitted f(y: (m, d), x: (n, d)) -> (m,) with x sharded
+    along ``data_axes`` and y replicated (Section 3 query; one psum)."""
+    return _sh.make_kde_query(mesh, kernel, data_axes)
 
 
 def sharded_block_sums(mesh: Mesh, kernel: Kernel, num_blocks_per_shard: int,
                        data_axes: Sequence[str] = ("data",)):
-    """Level-1 read of the depth-2 sampler, distributed: each shard returns
-    its local per-block sums; the global block-sum matrix is the concat over
-    shards (no collective needed -- sampling uses the psum of totals only).
+    """Level-1 read of the depth-2 sampler, distributed: each shard
+    returns its local per-block sums; the global block-sum matrix is the
+    concat over shards (no collective -- the §9 draw psums totals itself).
 
-    f(y: (m, d), x: (n, d)) -> (m, shards * B) block sums, fully addressable.
-    """
-    axes = tuple(data_axes)
-
-    def local(y, x_shard):
-        ns = x_shard.shape[0]
-        bs = ns // num_blocks_per_shard
-        kv = kernel.pairwise(y, x_shard)              # (m, ns)
-        kv = kv.reshape(y.shape[0], num_blocks_per_shard, bs).sum(-1)
-        return kv
-
-    shmap = shard_map(
-        local, mesh=mesh,
-        in_specs=(P(), P(axes)),
-        out_specs=P(None, axes),
-    )
-    return jax.jit(shmap)
+    f(y: (m, d), x: (n, d)[, own: (m,)]) -> (m, shards * B) block sums.
+    Ragged shards (shard size not divisible by the block count) are padded
+    in-body with the far-offset sentinel rows, so tail blocks sum only
+    their real rows instead of crashing the reshape.  Passing ``own``
+    (each query's global block index) applies the §2 sampling contract:
+    self-block correction and the 1e-12 floor, matching the single-device
+    ``ops.masked_block_sums`` bitwise on aligned layouts."""
+    return _sh.make_block_sums(mesh, kernel, num_blocks_per_shard, data_axes)
 
 
 def degree_preprocessing(mesh: Mesh, kernel: Kernel,
                          data_axes: Sequence[str] = ("data",)):
-    """Algorithm 4.3 distributed: every shard queries its own points against
-    the full (sharded) dataset via a ring of collective permutes -- O(n^2/P)
-    work per device, the optimal balance; returns the degree vector sharded
-    the same way as X.
+    """Algorithm 4.3 distributed: every shard queries its own points
+    against the full (sharded) dataset via a ring of collective permutes
+    -- O(n^2/P) work per device; returns the degree vector sharded the
+    same way as X.
 
-    With multiple ``data_axes`` the ring runs over the *flattened* device
-    index across all of those axes (``ppermute`` with a tuple of axis names
-    linearizes them row-major, matching how ``P(axes)`` lays out the
-    shards), so every one of ``prod(axis sizes)`` shards visits every other
-    shard exactly once.  A ring built over ``axis_size(axes[0])`` alone --
-    the previous behavior -- silently dropped the contributions of the
-    remaining axes' shards.
-    """
-    axes = tuple(data_axes)
-    size = 1
-    for a in axes:
-        size *= int(mesh.shape[a])
-    perm = [(i, (i + 1) % size) for i in range(size)]
-    axis = axes[0] if len(axes) == 1 else axes
-
-    def local(x_shard):
-        # Ring all-to-all accumulation: rotate shards around the flattened
-        # ring, each step adds the kernel sums against one remote shard.
-        def step(carry, _):
-            acc, blk = carry
-            acc = acc + jnp.sum(kernel.pairwise(x_shard, blk), axis=1)
-            blk = jax.lax.ppermute(blk, axis, perm=perm)
-            return (acc, blk), None
-
-        # derive from x_shard so the carry is 'varying' over the mesh axes
-        acc0 = jnp.sum(x_shard, axis=1) * 0.0
-        (acc, _), _ = jax.lax.scan(step, (acc0, x_shard), None, length=size)
-        return acc - 1.0  # remove self kernel
-
-    shmap = shard_map(local, mesh=mesh, in_specs=(P(axes),),
-                      out_specs=P(axes))
-    return jax.jit(shmap)
+    The ring runs over the *flattened* device index across all
+    ``data_axes`` (row-major, matching ``P(axes)``), and the self kernel
+    is removed by subtracting the kernel's *actual* per-point diagonal
+    k(x_i, x_i) -- custom kernels with non-unit diagonals get unbiased
+    degrees (the previous hardcoded ``- 1.0`` biased them)."""
+    return _sh.make_degree_ring(mesh, kernel, data_axes)
 
 
 def make_sharded_dataset(mesh: Mesh, x, data_axes: Sequence[str] = ("data",)):
@@ -113,3 +76,84 @@ def make_sharded_dataset(mesh: Mesh, x, data_axes: Sequence[str] = ("data",)):
     (Section 3 KDE queries then never reshard X)."""
     sharding = NamedSharding(mesh, P(tuple(data_axes)))
     return jax.device_put(x, sharding)
+
+
+class ShardedKDE:
+    """Definition 1.1 estimator over a mesh-sharded dataset.
+
+    A drop-in for ``StratifiedKDE`` / ``ExactBlockKDE`` in every pipeline:
+    same attributes (``x``, ``x_sq``, ``block_size``, ``num_blocks``,
+    ``samples_per_block``, ``evals``), same ``query`` semantics, but the
+    level-1 state lives sharded on ``mesh`` inside ``self.engine`` (a
+    ``kde_sampler.sharded.ShardedBlocks``), which ``NeighborSampler``'s
+    mesh path shares for its collective draws (DESIGN.md §9).
+
+    ``evals`` counts the single-device-equivalent logical cost (m*n exact
+    / m*B*s stratified per m-query batch) so counter audits agree with the
+    flat engine exactly.
+
+    >>> est = ShardedKDE(mesh, x, gaussian(1.0), exact=True)
+    """
+
+    def __init__(self, mesh: Mesh, x, kernel: Kernel,
+                 block_size: Optional[int] = None,
+                 samples_per_block: int = 16, exact: bool = False,
+                 data_axes: Sequence[str] = ("data",), seed: int = 0):
+        n = int(x.shape[0])
+        bs = block_size or max(int(np.sqrt(n)), 16)
+        self.engine = _sh.ShardedBlocks(
+            mesh, x, kernel, block_size=bs,
+            samples_per_block=samples_per_block, exact=exact,
+            data_axes=data_axes)
+        self.kernel = kernel
+        self.n = n
+        self.d = self.engine.d
+        # replicated views of the real rows (frontier gathers, fallbacks)
+        self.x = self.engine.x_rep[: n]
+        self.x_sq = self.engine.x_sq_rep[: n]
+        self.block_size = self.engine.block_size
+        self.num_blocks = self.engine.num_blocks
+        self.samples_per_block = self.engine.samples_per_block
+        self.exact = bool(exact)
+        self.evals = 0
+        self._key = jax.random.PRNGKey(seed)
+
+    def _split(self) -> jnp.ndarray:
+        self._key, k = jax.random.split(self._key)
+        return k
+
+    def _query_evals(self, m: int) -> int:
+        if self.exact:
+            return m * self.n
+        return m * self.num_blocks * self.samples_per_block
+
+    def query(self, y: jnp.ndarray) -> jnp.ndarray:
+        """(m, d) replicated queries -> (m,) row-sum estimates; one local
+        sweep + one psum (Section 3)."""
+        y = jnp.asarray(y, jnp.float32)
+        self.evals += self._query_evals(y.shape[0])
+        return self.engine.kde_query(y, self._split())
+
+    def query1(self, y: jnp.ndarray) -> float:
+        """Single-point convenience wrapper around ``query``."""
+        return float(self.query(y[None, :])[0])
+
+    def degrees(self, batch: int = 1024) -> np.ndarray:
+        """Algorithm 4.3 on the mesh: exact estimators run the
+        memory-optimal ring as ONE program (O(shard^2) live memory per
+        device), the stratified path runs batched collective queries
+        (``batch`` rows each, the same memory bound as the single-device
+        host loop); both subtract the kernel's actual diagonal."""
+        if self.exact:
+            self.evals += self.n * self.n
+            return np.asarray(self.engine.degrees_ring(self.kernel),
+                              np.float64)
+        from repro.kernels.kde_sampler.ref import BUILTIN_KINDS
+        total = np.zeros(self.n, np.float64)
+        for lo in range(0, self.n, batch):
+            hi = min(lo + batch, self.n)
+            total[lo:hi] = np.asarray(self.query(self.x[lo:hi]))
+        if self.kernel.name in BUILTIN_KINDS:
+            return total - 1.0
+        return total - np.asarray(self.kernel.pairs(self.x, self.x),
+                                  np.float64)

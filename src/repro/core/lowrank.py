@@ -39,7 +39,7 @@ class LowRankResult:
 
 def fkv_lowrank(x, kernel: Kernel, rank: int, num_rows: Optional[int] = None,
                 estimator: str = "exact", seed: int = 0,
-                fit_cols: Optional[int] = None) -> LowRankResult:
+                fit_cols: Optional[int] = None, mesh=None) -> LowRankResult:
     """Theorem 5.12 pipeline.  num_rows defaults to 25*rank (the paper's
     experimental setting, Section 7.1).
 
@@ -50,7 +50,8 @@ def fkv_lowrank(x, kernel: Kernel, rank: int, num_rows: Optional[int] = None,
     its columns through the same program (K is symmetric)."""
     n = int(x.shape[0])
     s = int(num_rows if num_rows is not None else 25 * rank)
-    sampler = RowNormSampler(x, kernel, estimator=estimator, seed=seed)
+    sampler = RowNormSampler(x, kernel, estimator=estimator, seed=seed,
+                             mesh=mesh)
     idx = sampler.sample(s)
     sk = sampler.sketch_rows(idx)                    # (s, n), one program
 

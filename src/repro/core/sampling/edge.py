@@ -55,6 +55,12 @@ class NeighborSampler:
     stratified / w*n exact kernel evals for a w-frontier) plus w exact
     level-2 rows of ``block_size`` columns.
 
+    With ``mesh=`` (blocked mode only) the level-1 block structure lives
+    sharded over the mesh's ``data_axes`` and every draw is the two-stage
+    collective program of DESIGN.md §9 (one psum per draw batch) --
+    distribution-identical to the flat draw, same §4 caching contract,
+    same eval counters.
+
     >>> nbr = NeighborSampler(x, gaussian(1.0), mode="blocked")
     >>> v, q = nbr.sample(np.array([0, 1, 2]))
     """
@@ -63,7 +69,8 @@ class NeighborSampler:
                  block_size: Optional[int] = None, samples_per_block: int = 16,
                  exact_blocks: bool = False, tree: Optional[MultiLevelKDE] = None,
                  seed: int = 0, use_pallas: Optional[bool] = None,
-                 interpret: Optional[bool] = None):
+                 interpret: Optional[bool] = None, mesh=None,
+                 data_axes=("data",)):
         from repro.kernels.kde_sampler import ops as _ops
         self._ops = _ops
         self.x = jnp.asarray(x, jnp.float32)
@@ -72,9 +79,23 @@ class NeighborSampler:
         self.mode = mode
         self._rng = np.random.default_rng(seed)
         self._key = jax.random.PRNGKey(seed)
+        self._engine = None
+        if mesh is not None:
+            assert mode == "blocked", "mesh= needs the blocked engine"
         if mode == "blocked":
             bs = block_size or max(int(np.sqrt(self.n)), 16)
-            if exact_blocks:
+            if mesh is not None:
+                # Mesh construction path (DESIGN.md §9): the level-1 block
+                # structure lives sharded inside a ShardedKDE; draws are
+                # two-stage collective programs.  The §4 caching contract
+                # and every eval-counter formula below are unchanged.
+                from repro.core.kde.distributed import ShardedKDE
+                self._blocks = ShardedKDE(
+                    mesh, self.x, kernel, block_size=bs,
+                    samples_per_block=samples_per_block, exact=exact_blocks,
+                    data_axes=data_axes, seed=seed)
+                self._engine = self._blocks.engine
+            elif exact_blocks:
                 self._blocks = ExactBlockKDE(self.x, kernel, block_size=bs)
             else:
                 self._blocks = StratifiedKDE(self.x, kernel, block_size=bs,
@@ -89,9 +110,11 @@ class NeighborSampler:
             self.num_blocks = self._blocks.num_blocks
             self.exact_blocks = exact_blocks
             if use_pallas is None:
-                use_pallas = _ops.default_use_pallas()
+                use_pallas = (_ops.default_use_pallas()
+                              if self._engine is None else False)
             if interpret is None:
-                interpret = jax.default_backend() != "tpu"
+                interpret = (jax.default_backend() != "tpu"
+                             and self._engine is None)
             from repro.kernels.kde_sampler.ref import static_pairwise
             # Static engine configuration shared by every jitted entry point.
             self._cfg = dict(
@@ -155,14 +178,17 @@ class NeighborSampler:
         dig = self._digest(src32)
         if self._l1_cache is not None and self._l1_cache[0] == dig:
             return self._l1_cache[1]
-        bs = self._ops.masked_block_sums(self.x, self.x_sq, src_dev,
-                                         self._next_key(),
-                                         **{k: self._cfg[k] for k in
-                                            ("kind", "inv_bw", "beta",
-                                             "pairwise", "block_size",
-                                             "num_blocks", "n", "s", "exact",
-                                             "use_pallas", "interpret",
-                                             "bm")})
+        if self._engine is not None:
+            bs = self._engine.masked_block_sums(src_dev, self._next_key())
+        else:
+            bs = self._ops.masked_block_sums(self.x, self.x_sq, src_dev,
+                                             self._next_key(),
+                                             **{k: self._cfg[k] for k in
+                                                ("kind", "inv_bw", "beta",
+                                                 "pairwise", "block_size",
+                                                 "num_blocks", "n", "s",
+                                                 "exact", "use_pallas",
+                                                 "interpret", "bm")})
         self._count(self._level1_evals(len(src32)))
         self._l1_cache = (dig, bs)
         return bs
@@ -176,12 +202,21 @@ class NeighborSampler:
         src_dev = jnp.asarray(src32)
         dig = self._digest(src32)
         if self._l1_cache is not None and self._l1_cache[0] == dig:
-            nb, prob = self._ops.sample_from_block_sums(
-                self.x, self.x_sq, src_dev, self._l1_cache[1],
-                self._next_key(), **self._l2_cfg)
+            if self._engine is not None:
+                nb, prob = self._engine.sample_from_block_sums(
+                    src_dev, self._l1_cache[1], self._next_key())
+            else:
+                nb, prob = self._ops.sample_from_block_sums(
+                    self.x, self.x_sq, src_dev, self._l1_cache[1],
+                    self._next_key(), **self._l2_cfg)
         else:
-            nb, prob, bs = self._ops.fused_sample(
-                self.x, self.x_sq, src_dev, self._next_key(), **self._cfg)
+            if self._engine is not None:
+                nb, prob, bs = self._engine.fused_sample(src_dev,
+                                                         self._next_key())
+            else:
+                nb, prob, bs = self._ops.fused_sample(
+                    self.x, self.x_sq, src_dev, self._next_key(),
+                    **self._cfg)
             self._count(self._level1_evals(len(src)))
             self._l1_cache = (dig, bs)
         self._count(len(src) * self.block_size)
@@ -195,9 +230,13 @@ class NeighborSampler:
         src32 = np.ascontiguousarray(src, np.int32)
         src_dev = jnp.asarray(src32)
         bs = self._level1(src32, src_dev)
-        out = self._ops.prob_of_from_block_sums(
-            self.x, self.x_sq, src_dev, jnp.asarray(dst, jnp.int32), bs,
-            **self._l2_cfg)
+        if self._engine is not None:
+            out = self._engine.prob_of_from_block_sums(
+                src_dev, jnp.asarray(dst, jnp.int32), bs)
+        else:
+            out = self._ops.prob_of_from_block_sums(
+                self.x, self.x_sq, src_dev, jnp.asarray(dst, jnp.int32), bs,
+                **self._l2_cfg)
         self._count(len(src) * self.block_size)
         return np.asarray(out)
 
@@ -279,9 +318,13 @@ class NeighborSampler:
         src32 = np.ascontiguousarray(src, np.int32)
         src_dev = jnp.asarray(src32)
         bs = self._level1(src32, src_dev)
-        cur = self._ops.fused_sample_exact(
-            self.x, self.x_sq, src_dev, bs, self._next_key(),
-            rounds=rounds, slack=slack, **self._l2_cfg)
+        if self._engine is not None:
+            cur = self._engine.sample_exact(src_dev, bs, self._next_key(),
+                                            rounds=rounds, slack=slack)
+        else:
+            cur = self._ops.fused_sample_exact(
+                self.x, self.x_sq, src_dev, bs, self._next_key(),
+                rounds=rounds, slack=slack, **self._l2_cfg)
         self._count((rounds + 1) * len(src) * self.block_size
                     + rounds * len(src))
         return np.asarray(cur)
@@ -326,10 +369,15 @@ class NeighborSampler:
         num_batches = max((t + batch - 1) // batch, 1)
         keys = jax.random.split(self._next_key() if key is None else key,
                                 num_batches)
-        out = self._ops.edge_batch_scan(
-            self.x, self.x_sq, jnp.asarray(cdf_device),
-            jnp.asarray(degs_device), 1.0 / float(total_degree), 1.0 / t,
-            keys, batch=int(batch), **self._cfg)
+        if self._engine is not None:
+            out = self._engine.edge_batch_scan(
+                jnp.asarray(cdf_device), jnp.asarray(degs_device),
+                1.0 / float(total_degree), 1.0 / t, keys, batch=int(batch))
+        else:
+            out = self._ops.edge_batch_scan(
+                self.x, self.x_sq, jnp.asarray(cdf_device),
+                jnp.asarray(degs_device), 1.0 / float(total_degree), 1.0 / t,
+                keys, batch=int(batch), **self._cfg)
         drawn = num_batches * batch
         # per edge: one level-1 read of the u frontier, one exact level-2
         # row, and one aligned k(u, v) pair (the reverse probability
@@ -357,10 +405,15 @@ class NeighborSampler:
         m = len(np.asarray(u))
         keys = jax.random.split(self._next_key() if key is None else key,
                                 int(num_draws) + 1)
-        uu, vv, w_hat = self._ops.triangle_edge_scan(
-            self.x, self.x_sq, jnp.asarray(u, jnp.int32),
-            jnp.asarray(v, jnp.int32), jnp.asarray(degs_device), keys,
-            **self._cfg)
+        if self._engine is not None:
+            uu, vv, w_hat = self._engine.triangle_edge_scan(
+                jnp.asarray(u, jnp.int32), jnp.asarray(v, jnp.int32),
+                jnp.asarray(degs_device), keys)
+        else:
+            uu, vv, w_hat = self._ops.triangle_edge_scan(
+                self.x, self.x_sq, jnp.asarray(u, jnp.int32),
+                jnp.asarray(v, jnp.int32), jnp.asarray(degs_device), keys,
+                **self._cfg)
         self._count(self._level1_evals(m) + m
                     + int(num_draws) * (m * self.block_size + m))
         self._l1_cache = None  # frontier moved; cached sums are stale
@@ -380,10 +433,15 @@ class NeighborSampler:
         starts_dev = jnp.asarray(starts, jnp.int32)
         keys = jax.random.split(self._next_key() if key is None else key,
                                 length)
-        end, path = self._ops.walk_scan(
-            self.x, self.x_sq, starts_dev, keys,
-            rounds=rounds if exact else 0, slack=slack,
-            record_path=bool(record_path), **self._cfg)
+        if self._engine is not None:
+            end, path = self._engine.walk_scan(
+                starts_dev, keys, rounds=rounds if exact else 0,
+                slack=slack, record_path=bool(record_path))
+        else:
+            end, path = self._ops.walk_scan(
+                self.x, self.x_sq, starts_dev, keys,
+                rounds=rounds if exact else 0, slack=slack,
+                record_path=bool(record_path), **self._cfg)
         w = len(np.asarray(starts))
         per_step = self._level1_evals(w) + w * self.block_size
         if exact:

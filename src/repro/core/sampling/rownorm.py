@@ -32,13 +32,34 @@ class RowNormSampler:
     """
 
     def __init__(self, x, kernel: Kernel, estimator: str = "exact",
-                 seed: int = 0, **est_kw):
+                 seed: int = 0, mesh=None, data_axes=("data",), **est_kw):
         self.x = jnp.asarray(x, jnp.float32)   # shared device dataset
         self.x_sq = jnp.sum(self.x * self.x, axis=-1)
         self.kernel = kernel
         xs = squared_kernel_dataset(kernel, self.x)
-        self._est: KDEBase = make_estimator(estimator, xs, kernel, seed=seed,
-                                            **est_kw)
+        self._rows_engine = None
+        if mesh is not None:
+            # Mesh path (DESIGN.md §9): the row-norm KDE structure over cX
+            # AND the sketch-row reads over X both live sharded; queries
+            # and rows are collective programs, the prefix CDF stays the
+            # float64 host accumulation.
+            if estimator not in ("exact", "exact_block", "stratified"):
+                raise ValueError(
+                    f"mesh= supports exact/exact_block/stratified row-norm "
+                    f"estimators, got {estimator!r}")
+            from repro.core.kde.distributed import ShardedKDE
+            from repro.kernels.kde_sampler.sharded import ShardedBlocks
+            self._est: KDEBase = ShardedKDE(
+                mesh, xs, kernel,
+                exact=(estimator in ("exact", "exact_block")),
+                data_axes=data_axes, seed=seed, **est_kw)
+            self._rows_engine = ShardedBlocks(
+                mesh, self.x, kernel, block_size=self._est.block_size,
+                exact=True, data_axes=data_axes)
+            self.x = self._rows_engine.x_rep[: int(xs.shape[0])]
+        else:
+            self._est = make_estimator(estimator, xs, kernel, seed=seed,
+                                       **est_kw)
         n = int(xs.shape[0])
         self.n = n
         # KDE on cX returns sum_j k(cx_i, cx_j) = sum_j k(x_i, x_j)^2, the
@@ -75,12 +96,15 @@ class RowNormSampler:
     # ------------------------------------------------------------------ #
     # batched device row evaluation (Section 5.2 post-processing)
     def rows(self, idx: np.ndarray) -> np.ndarray:
-        """Exact kernel rows K_{idx,*} as one jitted device program."""
+        """Exact kernel rows K_{idx,*} as one jitted device program (the
+        mesh path computes them shard-local against the sharded dataset)."""
         from repro.kernels.kde_sampler import ops as sampler_ops
         sel = jnp.asarray(np.ascontiguousarray(idx, np.int32))
+        self._row_evals += len(idx) * self.n
+        if self._rows_engine is not None:
+            return np.asarray(self._rows_engine.kernel_rows(self.x[sel]))
         out = sampler_ops.kernel_rows(self.x[sel], self.x, self.x_sq,
                                       **self._row_cfg)
-        self._row_evals += len(idx) * self.n
         return np.asarray(out)
 
     def sketch_rows(self, idx: np.ndarray) -> np.ndarray:

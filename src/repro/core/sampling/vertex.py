@@ -83,20 +83,43 @@ class PrefixCDF:
 
 
 def approximate_degrees(estimator: KDEBase, batch: int = 1024) -> np.ndarray:
-    """Algorithm 4.3: p_i = KDE_X(x_i) - k(x_i, x_i)  (self kernel = 1)."""
+    """Algorithm 4.3: p_i = KDE_X(x_i) - k(x_i, x_i).
+
+    The self kernel is the estimator kernel's *actual* per-point diagonal
+    (``Kernel.pairs(x, x)``), not a hardcoded 1.0 -- custom kernels with
+    k(u, u) != 1 previously got biased degrees.  Mesh-resident estimators
+    (``ShardedKDE``) expose a one-program ``degrees()`` and are dispatched
+    to it instead of the host batch loop."""
+    if hasattr(estimator, "degrees"):
+        return np.maximum(np.asarray(estimator.degrees(), np.float64),
+                          1e-12)
+    from repro.kernels.kde_sampler.ref import BUILTIN_KINDS
     n = estimator.n
     out = np.zeros(n, np.float64)
     for lo in range(0, n, batch):
         hi = min(lo + batch, n)
         out[lo:hi] = np.asarray(estimator.query(estimator.x[lo:hi]))
-    out = out - 1.0  # k(x, x) = 1 for all our kernels
+    if estimator.kernel.name in BUILTIN_KINDS:
+        out = out - 1.0          # k(x, x) = 1 exactly for Table-1 kernels
+    else:
+        out = out - np.asarray(
+            estimator.kernel.pairs(estimator.x, estimator.x), np.float64)
     return np.maximum(out, 1e-12)
 
 
 class DegreeSampler:
-    """Algorithm 4.6: sample vertices proportional to (approximate) degree."""
+    """Algorithm 4.6: sample vertices proportional to (approximate) degree.
 
-    def __init__(self, estimator: KDEBase, seed: int = 0):
+    With ``mesh=`` the estimator must be mesh-resident (a ``ShardedKDE``)
+    and the Algorithm 4.3 preprocessing runs as ONE collective device
+    program (the ring for exact reads, one batched query for stratified)
+    instead of a host batch loop; the prefix CDF then accumulates in
+    float64 on the host exactly as on the single-device path."""
+
+    def __init__(self, estimator: KDEBase, seed: int = 0, mesh=None):
+        if mesh is not None and not hasattr(estimator, "degrees"):
+            raise ValueError("DegreeSampler(mesh=...) needs a mesh-resident"
+                             " estimator (core.kde.distributed.ShardedKDE)")
         self.degrees = approximate_degrees(estimator)
         self._cdf = PrefixCDF(self.degrees, seed=seed)
         self.total = self._cdf.total

@@ -70,7 +70,8 @@ class SparseGraph:
 def spectral_sparsify(x, kernel: Kernel, num_edges: int,
                       estimator: str = "stratified", seed: int = 0,
                       batch: int = 1024, exact_blocks: bool = False,
-                      samples_per_block: int = 16) -> SparseGraph:
+                      samples_per_block: int = 16,
+                      mesh=None) -> SparseGraph:
     """Algorithm 5.1 with edge budget ``num_edges`` (= t).
 
     Fully fused (DESIGN.md §6): ONE device dataset + level-1 structure is
@@ -78,19 +79,22 @@ def spectral_sparsify(x, kernel: Kernel, num_edges: int,
     degree CDF lives on device (float64-accumulated prefix, rounded to
     f32), and all edge batches -- steps (a)-(d) including the reverse
     probability q_vu and the reweighting -- run as one ``lax.scan``
-    program with a single device->host transfer of the edge list.
+    program with a single device->host transfer of the edge list.  With
+    ``mesh=`` the same program runs sharded (DESIGN.md §9): the level-1
+    state is mesh-resident and each edge batch performs one psum.
     """
     n = int(x.shape[0])
     t = int(num_edges)
     nbr = NeighborSampler(x, kernel, mode="blocked", seed=seed + 2,
                           exact_blocks=exact_blocks,
-                          samples_per_block=samples_per_block)
+                          samples_per_block=samples_per_block, mesh=mesh)
     # Degree preprocessing (Algorithm 4.3) against the sampler's own
     # level-1 structure whenever it implements the requested estimator --
     # one KDE build and one preprocessing sweep over x, not two.  The
     # sampler's structure is exact (ExactBlockKDE) iff exact_blocks.
     est = shared_level1_estimator(nbr, estimator, seed=seed)
-    deg = DegreeSampler(est, seed=seed + 1)
+    deg = DegreeSampler(est, seed=seed + 1,
+                        mesh=mesh if est is nbr.blocks else None)
     u, v, w, _, _ = nbr.edge_batches(deg.cdf_device, deg.degrees_device,
                                      deg.total, t, batch=batch)
     g = SparseGraph(n, np.asarray(u, np.int64), np.asarray(v, np.int64),

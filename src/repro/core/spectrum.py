@@ -96,7 +96,8 @@ def _project_simplex(v: np.ndarray) -> np.ndarray:
 def approximate_spectrum(x, kernel: Kernel, length: int = 10,
                          num_sources: int = 32, walks_per_source: int = 64,
                          seed: int = 0,
-                         sampler: Optional[NeighborSampler] = None) -> SpectrumResult:
+                         sampler: Optional[NeighborSampler] = None,
+                         mesh=None) -> SpectrumResult:
     """Theorem 5.17 (ApproxSpectralMoment): the normalized-Laplacian
     spectrum in EMD from walk-return moments -- walk budget independent of
     n.  Cost: ``num_sources * walks_per_source * length`` fused walk steps
@@ -107,7 +108,7 @@ def approximate_spectrum(x, kernel: Kernel, length: int = 10,
     n = int(x.shape[0])
     if sampler is None:
         sampler = NeighborSampler(x, kernel, mode="blocked", seed=seed,
-                                  exact_blocks=True)
+                                  exact_blocks=True, mesh=mesh)
     moments = estimate_return_moments(sampler, n, length, num_sources,
                                       walks_per_source, seed=seed + 1)
     lams = invert_moments(moments, n)

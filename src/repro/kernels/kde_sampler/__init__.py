@@ -1,1 +1,3 @@
-"""Fused device-resident depth-2 neighbor sampling engine (DESIGN.md §3)."""
+"""Fused depth-2 neighbor sampling engine: single-device programs in
+``ops`` (DESIGN.md §3), the mesh-resident collective engine in ``sharded``
+(DESIGN.md §9), shared pure-jnp oracles in ``ref``."""

@@ -252,15 +252,23 @@ def sample_from_block_sums(x, x_sq, src, bs, key, *, kind, inv_bw, beta,
 
 def _prob_core(x, x_sq, views, src, dst, bs, *, kind, inv_bw, beta, pairwise,
                block_size, n):
-    """q(dst | src) from given level-1 sums of the src frontier."""
+    """q(dst | src) from given level-1 sums of the src frontier.  Mirrors
+    ``ref.level2_draw``'s zero-row guard: if dst's block row underflows to
+    all zeros the sampler draws uniformly over the live columns, so the
+    probability reported here is the matching 1/|live| -- not 0."""
     blk = (dst // block_size).astype(jnp.int32)
     pb = jnp.take_along_axis(bs, blk[:, None], axis=1)[:, 0] / bs.sum(axis=1)
-    kv, _, _ = _level2_kv(x, x_sq, views, src, blk, kind=kind, inv_bw=inv_bw,
-                          beta=beta, pairwise=pairwise,
-                          block_size=block_size, n=n)
-    kd = jnp.take_along_axis(kv, (dst - blk * block_size)[:, None],
-                             axis=1)[:, 0]
-    return pb * kd / jnp.maximum(kv.sum(axis=1), 1e-30)
+    kv, live, _ = _level2_kv(x, x_sq, views, src, blk, kind=kind,
+                             inv_bw=inv_bw, beta=beta, pairwise=pairwise,
+                             block_size=block_size, n=n)
+    col = (dst - blk * block_size)[:, None]
+    kd = jnp.take_along_axis(kv, col, axis=1)[:, 0]
+    rowsum = kv.sum(axis=1)
+    live_d = jnp.take_along_axis(live, col, axis=1)[:, 0]
+    pin_fallback = live_d / jnp.maximum(live.sum(axis=1), 1.0)
+    pin = jnp.where(rowsum > 0.0, kd / jnp.maximum(rowsum, 1e-30),
+                    pin_fallback)
+    return pb * pin
 
 
 @_jit

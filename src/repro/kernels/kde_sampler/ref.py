@@ -292,6 +292,124 @@ def sample_block_ref(q, x, x_sq, own, gumbel, kind: str, inv_bw: float,
     return blk, pb, tot, bs
 
 
+def sharded_masked_sums_ref(x_pad, x_sq_pad, src, key, kind: str,
+                            inv_bw: float, beta: float, block_size: int,
+                            blocks_per_shard: int, num_shards: int, n: int,
+                            exact: bool = True, s: int = 16, pairwise=None):
+    """Single-device oracle of ``sharded.ShardedBlocks._local_sums``,
+    concatenated over shards: the §2-contract level-1 read on the padded
+    ``P * shard_size`` layout -- own-block corrected, real blocks floored
+    at 1e-12, all-sentinel blocks pinned to 0.  The stratified path
+    replicates the per-shard ``fold_in(key, p)`` subsample key discipline
+    (so shard-local draws match the device program bit-for-bit)."""
+    w = src.shape[0]
+    bs = block_size
+    shard_size = blocks_per_shard * bs
+    num_blocks_pad = num_shards * blocks_per_shard
+    q = x_pad[src]
+    if exact:
+        kv = kv_matrix(q, x_pad, x_sq_pad, kind, inv_bw, beta, pairwise)
+        sums = kv.reshape(w, num_blocks_pad, bs).sum(-1)
+    else:
+        parts = []
+        for p in range(num_shards):
+            kk = jax.random.fold_in(key, p)
+            lo = p * shard_size
+            base = jnp.arange(blocks_per_shard, dtype=jnp.int32) * bs
+            u = jax.random.uniform(kk, (blocks_per_shard, bs))
+            pos = base[:, None] + jnp.arange(bs, dtype=jnp.int32)[None, :]
+            valid = (lo + pos) < n
+            u = jnp.where(valid, u, jnp.inf)
+            _, order = jax.lax.top_k(-u, s)
+            idx = jnp.take_along_axis(pos, order, axis=1)
+            sel_valid = jnp.take_along_axis(valid, order, axis=1)
+            flat = lo + idx.reshape(-1)
+            kv = kv_matrix(q, x_pad[flat], x_sq_pad[flat], kind, inv_bw,
+                           beta, pairwise)
+            kv = kv.reshape(w, blocks_per_shard, s) * sel_valid[None]
+            sizes = jnp.clip(n - (lo + base), 0, bs).astype(jnp.float32)
+            s_b = jnp.minimum(sizes, float(s))
+            parts.append(kv.sum(-1)
+                         * (sizes / jnp.maximum(s_b, 1.0))[None, :])
+        sums = jnp.concatenate(parts, axis=1)
+    own = (src // bs).astype(jnp.int32)
+    corr = jnp.arange(num_blocks_pad, dtype=jnp.int32)[None, :] == own[:, None]
+    sums = jnp.where(corr, sums - 1.0, sums)
+    gbase = jnp.arange(num_blocks_pad, dtype=jnp.int32) * bs
+    real = jnp.clip(n - gbase, 0, bs) > 0
+    return jnp.where(real[None, :], jnp.maximum(sums, BLOCK_SUM_FLOOR), 0.0)
+
+
+def sharded_sample_from_sums_ref(x_pad, x_sq_pad, views, src, sums, key,
+                                 kind: str, inv_bw: float, beta: float,
+                                 block_size: int, blocks_per_shard: int,
+                                 n: int, pairwise=None):
+    """Single-device oracle of the two-stage collective draw
+    (``sharded.ShardedBlocks._local_draw``): hierarchical inverse-CDF over
+    (shard totals -> owner's local block sums -> in-block columns) with
+    the identical ``(k_shard, k_blk, k_in) = split(key, 3)`` discipline.
+    Returns (nb, prob, total); ints match the device program bit-for-bit,
+    floats to f32 tolerance."""
+    w, num_blocks_pad = sums.shape
+    num_shards = num_blocks_pad // blocks_per_shard
+    k_shard, k_blk, k_in = jax.random.split(key, 3)
+    by_shard = sums.reshape(w, num_shards, blocks_per_shard)
+    t = by_shard.sum(-1)                                  # (w, P)
+    ct = jnp.cumsum(t, axis=1)
+    tot = ct[:, -1]
+    u0 = jax.random.uniform(k_shard, (w,))
+    owner = jnp.sum((u0 * tot)[:, None] > ct, axis=1).clip(0, num_shards - 1)
+    local = jnp.take_along_axis(by_shard, owner[:, None, None],
+                                axis=1)[:, 0]             # (w, B_p)
+    t_o = jnp.take_along_axis(t, owner[:, None], axis=1)[:, 0]
+    c = jnp.cumsum(local, axis=1)
+    u1 = jax.random.uniform(k_blk, (w,))
+    blk_l = jnp.sum((u1 * t_o)[:, None] > c, axis=1).clip(
+        0, blocks_per_shard - 1).astype(jnp.int32)
+    s_b = jnp.take_along_axis(local, blk_l[:, None], axis=1)[:, 0]
+    gblk = (owner * blocks_per_shard).astype(jnp.int32) + blk_l
+    kv, live, cols_c = level2_row(x_pad, x_sq_pad, views, src, gblk, kind,
+                                  inv_bw, beta, block_size, n, pairwise)
+    nb, pin = level2_draw(kv, live, cols_c,
+                          jax.random.uniform(k_in, (w,)))
+    return nb, s_b * pin / jnp.maximum(tot, 1e-30), tot
+
+
+def sharded_fused_sample_ref(x_pad, x_sq_pad, src, key, kind: str,
+                             inv_bw: float, beta: float, block_size: int,
+                             blocks_per_shard: int, num_shards: int, n: int,
+                             exact: bool = True, s: int = 16, pairwise=None):
+    """Oracle of ``sharded.ShardedBlocks.fused_sample``: the §2 level-1
+    read (``k_l1``) followed by the two-stage draw (``k_rest``) with the
+    engine's ``k_l1, k_rest = split(key)`` discipline."""
+    k_l1, k_rest = jax.random.split(key)
+    sums = sharded_masked_sums_ref(x_pad, x_sq_pad, src, k_l1, kind, inv_bw,
+                                   beta, block_size, blocks_per_shard,
+                                   num_shards, n, exact=exact, s=s,
+                                   pairwise=pairwise)
+    views = block_views(x_pad, x_sq_pad, block_size)
+    nb, prob, _ = sharded_sample_from_sums_ref(
+        x_pad, x_sq_pad, views, src, sums, k_rest, kind, inv_bw, beta,
+        block_size, blocks_per_shard, n, pairwise)
+    return nb, prob, sums
+
+
+def sharded_walk_ref(x_pad, x_sq_pad, starts, keys, kind: str, inv_bw: float,
+                     beta: float, block_size: int, blocks_per_shard: int,
+                     num_shards: int, n: int, exact: bool = True, s: int = 16,
+                     pairwise=None):
+    """Oracle of ``sharded.ShardedBlocks.walk_scan`` (rounds = 0): a host
+    loop of per-step ``split -> level-1 read -> two-stage draw`` with the
+    identical key stream; endpoints must match bit-for-bit."""
+    cur = starts
+    for i in range(keys.shape[0]):
+        cur, _, _ = sharded_fused_sample_ref(
+            x_pad, x_sq_pad, cur, keys[i], kind, inv_bw, beta, block_size,
+            blocks_per_shard, num_shards, n, exact=exact, s=s,
+            pairwise=pairwise)
+    return cur
+
+
 def fused_edge_batch_ref(x, x_sq, cdf, degs, inv_total, inv_t, key,
                          batch: int, kind: str, inv_bw: float, beta: float,
                          block_size: int, num_blocks: int, n: int,

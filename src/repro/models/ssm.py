@@ -10,7 +10,7 @@ Both are implemented twice:
                     computed in log space with a per-chunk clamp (-30) --
                     contributions below e^-30 are numerically zero anyway.
 
-Simplifications vs the exact HF checkpoints (documented in DESIGN.md §9):
+Simplifications vs the exact HF checkpoints:
 rwkv6 uses full-rank decay projections and a SwiGLU channel mix; mamba2
 omits the depthwise conv1d (decode state = SSM state only).
 """

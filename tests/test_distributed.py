@@ -1,4 +1,6 @@
-"""Distribution layer: sharded KDE, sharding rules, small-mesh dry-run
+"""Distribution layer: the sharded sampling engine (DESIGN.md §9 -- ref
+oracles, collective schedule, distribution equivalence, pipeline counter
+audits), sharded KDE wrappers, sharding rules, small-mesh dry-run
 (subprocesses own their XLA_FLAGS -- the main test process stays 1-device)."""
 import json
 import os
@@ -87,6 +89,240 @@ np.testing.assert_allclose(got, want, rtol=1e-4)
 print("BLOCKSUMS_OK")
 """)
     assert "BLOCKSUMS_OK" in out
+
+
+def test_sharded_block_sums_ragged_shard_regression():
+    """Regression: a shard size not divisible by the block count used to
+    crash the in-body reshape.  Now the shard is padded with the sentinel
+    rows (kernel values exactly 0), so tail blocks sum only their real
+    rows -- checked against a host oracle of the same layout."""
+    out = _run("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core.kernels_fn import gaussian
+from repro.core.kde.distributed import sharded_block_sums, make_sharded_dataset
+ker = gaussian(1.0)
+rng = np.random.default_rng(0)
+x = rng.normal(0, 0.6, (256, 5)).astype(np.float32)   # shard = 64 rows
+y = rng.normal(0, 0.6, (6, 5)).astype(np.float32)
+mesh = jax.make_mesh((4,), ("data",))
+xs = make_sharded_dataset(mesh, x)
+f = sharded_block_sums(mesh, ker, num_blocks_per_shard=5)  # 64 % 5 != 0
+got = np.asarray(f(jnp.asarray(y), xs))               # (6, 20)
+kv = np.asarray(ker.pairwise(jnp.asarray(y), jnp.asarray(x)))
+want = np.zeros((6, 20))
+for p in range(4):                                    # bs_l = ceil(64/5) = 13
+    for b in range(5):
+        lo = p * 64 + b * 13
+        hi = min(p * 64 + min((b + 1) * 13, 64), 256)
+        if lo < hi:
+            want[:, p * 5 + b] = kv[:, lo:hi].sum(1)
+np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+print("RAGGED_OK")
+""")
+    assert "RAGGED_OK" in out
+
+
+def test_sharded_block_sums_section2_contract_bitwise():
+    """With ``own=`` the distributed level-1 read applies the §2 sampling
+    contract (self-block correction, 1e-12 floor) and must agree bitwise
+    with the single-device ``ops.masked_block_sums`` on aligned layouts."""
+    out = _run("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core.kernels_fn import gaussian
+from repro.core.kde.distributed import sharded_block_sums, make_sharded_dataset
+from repro.kernels.kde_sampler import ops as sops
+ker = gaussian(1.0)
+rng = np.random.default_rng(0)
+n, bs = 256, 16
+x = rng.normal(0, 0.6, (n, 5)).astype(np.float32)
+src = rng.integers(0, n, 24).astype(np.int32)
+mesh = jax.make_mesh((8,), ("data",))
+xs = make_sharded_dataset(mesh, x)
+f = sharded_block_sums(mesh, ker, num_blocks_per_shard=2)   # 32/2 = bs 16
+got = np.asarray(f(jnp.asarray(x[src]), xs, own=src // bs))
+xd = jnp.asarray(x)
+want = np.asarray(sops.masked_block_sums(
+    xd, jnp.sum(xd * xd, -1), jnp.asarray(src), jax.random.PRNGKey(0),
+    kind="gaussian", inv_bw=1.0, beta=1.0, pairwise=None, block_size=bs,
+    num_blocks=n // bs, n=n, s=16, exact=True))
+np.testing.assert_array_equal(got, want)
+print("CONTRACT_BITWISE_OK")
+""")
+    assert "CONTRACT_BITWISE_OK" in out
+
+
+def test_sharded_engine_oracle_schedule_and_no_retrace():
+    """The ShardedBlocks engine: (a) draws/walks reproduce the ref.py
+    oracles bit-for-bit on both level-1 paths, (b) the collective schedule
+    is exactly one psum and zero ppermute per draw batch (jaxpr-counted),
+    (c) repeated calls never retrace, (d) the level-1 read agrees bitwise
+    with the single-device engine."""
+    out = _run("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core.kernels_fn import gaussian
+from repro.kernels.kde_sampler.sharded import ShardedBlocks, collective_counts
+from repro.kernels.kde_sampler import ref as sref, ops as sops
+ker = gaussian(1.0)
+rng = np.random.default_rng(0)
+n, d, bsz = 250, 5, 16
+x = rng.normal(0, 0.6, (n, d)).astype(np.float32)
+mesh = jax.make_mesh((8,), ("data",))
+key = jax.random.PRNGKey(3)
+src = jnp.asarray(rng.integers(0, n, 64), jnp.int32)
+for exact in (True, False):
+    eng = ShardedBlocks(mesh, x, ker, block_size=bsz, exact=exact,
+                        samples_per_block=8)
+    nb, prob, sums = eng.fused_sample(src, key)
+    rnb, rprob, rsums = sref.sharded_fused_sample_ref(
+        eng.x_rep, eng.x_sq_rep, src, key, "gaussian", 1.0, 1.0, bsz,
+        eng.blocks_per_shard, eng.num_shards, n, exact=exact, s=8)
+    np.testing.assert_array_equal(np.asarray(nb), np.asarray(rnb))
+    np.testing.assert_allclose(np.asarray(prob), np.asarray(rprob),
+                               rtol=2e-5, atol=1e-9)
+    np.testing.assert_array_equal(np.asarray(sums), np.asarray(rsums))
+eng = ShardedBlocks(mesh, x, ker, block_size=bsz, exact=True)
+keys = jax.random.split(jax.random.PRNGKey(7), 5)
+end, _ = eng.walk_scan(src, keys)
+rend = sref.sharded_walk_ref(eng.x_rep, eng.x_sq_rep, src, keys, "gaussian",
+                             1.0, 1.0, bsz, eng.blocks_per_shard,
+                             eng.num_shards, n, exact=True)
+np.testing.assert_array_equal(np.asarray(end), np.asarray(rend))
+# bitwise vs the single-device level-1 read (real blocks; pads are 0)
+xd = jnp.asarray(x)
+sd = np.asarray(sops.masked_block_sums(
+    xd, jnp.sum(xd * xd, -1), src, key, kind="gaussian", inv_bw=1.0,
+    beta=1.0, pairwise=None, block_size=bsz, num_blocks=-(-n // bsz), n=n,
+    s=16, exact=True))
+sums = np.asarray(eng.masked_block_sums(src, key))
+np.testing.assert_array_equal(sums[:, :sd.shape[1]], sd)
+assert np.all(sums[:, sd.shape[1]:] == 0.0)
+# collective schedule: one psum, no ppermute, per draw batch
+degs = (np.asarray(ker.matrix(xd), np.float64).sum(1) - 1).astype(np.float32)
+cdf = (np.cumsum(degs) / degs.sum()).astype(np.float32)
+ekeys = jax.random.split(jax.random.PRNGKey(1), 3)
+u = src[:40]; v = (src[:40] + 7) % n
+for name, cc in [
+    ("walk", collective_counts(lambda s, k: eng.walk_scan(s, k), src, keys)),
+    ("edges", collective_counts(
+        lambda c, dg, ks: eng.edge_batch_scan(c, dg, 1.0 / degs.sum(),
+                                              1.0 / 300, ks, batch=64),
+        cdf, degs, ekeys)),
+    ("tri", collective_counts(
+        lambda a, b, dg, ks: eng.triangle_edge_scan(a, b, dg, ks),
+        u, v, degs, ekeys)),
+    ("draw", collective_counts(lambda s, k: eng.fused_sample(s, k), src,
+                               key)),
+]:
+    assert cc["psum_total"] == 1 and cc["ppermute_total"] == 0, (name, cc)
+# noisy power: one psum per iteration (scan body) + one final exact matvec
+from repro.kernels.kde_sampler.sharded import sharded_noisy_power
+ksub = jnp.asarray(np.asarray(ker.matrix(xd[:96, :]), np.float32))
+v0 = jnp.ones(96, jnp.float32) / jnp.sqrt(96.0)
+nkeys = jax.random.split(jax.random.PRNGKey(4), 6)
+cc = collective_counts(lambda kk: sharded_noisy_power(
+    mesh, ksub, v0, kk, num_samples=16), nkeys)
+assert cc["psum_total"] == 2 and cc["ppermute_total"] == 0, cc
+# no-retrace
+eng.fused_sample(src, key); eng.walk_scan(src, keys)
+before = dict(sops.TRACE_COUNTS)
+for _ in range(3):
+    eng.fused_sample(src, key); eng.walk_scan(src, keys)
+assert dict(sops.TRACE_COUNTS) == before
+print("ENGINE_OK")
+""")
+    assert "ENGINE_OK" in out
+
+
+def test_sharded_draw_distribution_equivalence_ks():
+    """The two-stage collective draw samples the same law as the flat
+    single-device draw: one-sample KS against the exact conditional
+    k(u, .)/deg(u) for both engines, and a two-sample KS between them."""
+    out = _run("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core.kernels_fn import gaussian
+from repro.core.sampling.edge import NeighborSampler
+ker = gaussian(1.0)
+rng = np.random.default_rng(0)
+n, m, u0 = 512, 4096, 17
+x = rng.normal(0, 0.5, (n, 6)).astype(np.float32)
+mesh = jax.make_mesh((8,), ("data",))
+k = np.asarray(ker.matrix(jnp.asarray(x)), np.float64)
+p = k[u0].copy(); p[u0] = 0.0; p /= p.sum()
+cdf = np.cumsum(p)
+src = np.full(m, u0, np.int64)
+def ecdf_D(samples):
+    counts = np.bincount(samples, minlength=n)
+    return np.abs(np.cumsum(counts) / len(samples) - cdf).max()
+nb_s, _ = NeighborSampler(x, ker, exact_blocks=True, seed=1,
+                          mesh=mesh).sample(src)
+nb_1, _ = NeighborSampler(x, ker, exact_blocks=True, seed=1).sample(src)
+D_s, D_1 = ecdf_D(nb_s), ecdf_D(nb_1)
+thresh = 2.2 / np.sqrt(m)              # ~ alpha << 1e-3 one-sample KS
+assert D_s < thresh and D_1 < thresh, (D_s, D_1, thresh)
+c2 = np.bincount(nb_s, minlength=n), np.bincount(nb_1, minlength=n)
+D_2 = np.abs(np.cumsum(c2[0]) / m - np.cumsum(c2[1]) / m).max()
+assert D_2 < 2.2 * np.sqrt(2.0 / m), D_2
+print("KS_OK", D_s, D_1, D_2)
+""")
+    assert "KS_OK" in out
+
+
+def test_sharded_pipelines_counters_and_accuracy():
+    """Every mesh=-enabled Table-1 pipeline (sparsify, arboricity,
+    triangles, LRA, eigen, walks via spectrum) matches the single-device
+    eval counters EXACTLY and stays within the single-device accuracy
+    envelope on a simulated 8-device mesh."""
+    out = _run("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core.kernels_fn import gaussian
+from repro.core.sparsify import spectral_sparsify
+from repro.core.graph.arboricity import estimate_arboricity, exact_arboricity
+from repro.core.graph.triangles import estimate_triangle_weight, exact_triangle_weight
+from repro.core.lowrank import fkv_lowrank, projection_error, optimal_error
+from repro.core.eigen import top_eigenvalue
+from repro.core.spectrum import approximate_spectrum
+mesh = jax.make_mesh((8,), ("data",))
+rng = np.random.default_rng(0)
+x = rng.normal(0, 0.35, (300, 5)).astype(np.float32)
+ker = gaussian(2.0)
+k = np.asarray(ker.matrix(jnp.asarray(x)), np.float64)
+
+g1 = spectral_sparsify(x, ker, 3000, estimator="exact", exact_blocks=True, seed=0)
+g2 = spectral_sparsify(x, ker, 3000, estimator="exact", exact_blocks=True, seed=0, mesh=mesh)
+assert (g1.kernel_evals, g1.kde_queries) == (g2.kernel_evals, g2.kde_queries)
+lt = np.diag(k.sum(1) - 1) - (k - np.eye(300))
+err = np.linalg.norm(g2.laplacian_dense() - lt) / np.linalg.norm(lt)
+assert err < 0.5, err
+g1s = spectral_sparsify(x, ker, 3000, seed=0)
+g2s = spectral_sparsify(x, ker, 3000, seed=0, mesh=mesh)
+assert g1s.kernel_evals == g2s.kernel_evals    # stratified counters too
+
+a1 = estimate_arboricity(x, ker, 4000, estimator="exact", seed=0)
+a2 = estimate_arboricity(x, ker, 4000, estimator="exact", seed=0, mesh=mesh)
+tr = exact_arboricity(ker, x)
+assert a1.kernel_evals == a2.kernel_evals and abs(a2.density - tr) / tr < 0.15
+
+t1 = estimate_triangle_weight(x, ker, 300, 16, estimator="exact", seed=0)
+t2 = estimate_triangle_weight(x, ker, 300, 16, estimator="exact", seed=0, mesh=mesh)
+tt = exact_triangle_weight(ker, x)
+assert t1.kernel_evals == t2.kernel_evals and abs(t2.total_weight - tt) / tt < 0.3
+
+r1 = fkv_lowrank(x, ker, rank=6, num_rows=120, seed=0)
+r2 = fkv_lowrank(x, ker, rank=6, num_rows=120, seed=0, mesh=mesh)
+assert r1.kernel_evals == r2.kernel_evals
+assert projection_error(k, r2.u) < optimal_error(k, 6) + 0.02 * np.linalg.norm(k) ** 2
+
+e1 = top_eigenvalue(x, ker, t=150, method="noisy_power", seed=0)
+e2 = top_eigenvalue(x, ker, t=150, method="noisy_power", seed=0, mesh=mesh)
+assert e1.kernel_evals == e2.kernel_evals
+assert abs(e2.eigenvalue - e1.eigenvalue) / abs(e1.eigenvalue) < 1e-3
+
+sp1 = approximate_spectrum(x, ker, length=5, num_sources=6, walks_per_source=8, seed=0)
+sp2 = approximate_spectrum(x, ker, length=5, num_sources=6, walks_per_source=8, seed=0, mesh=mesh)
+assert sp1.kernel_evals == sp2.kernel_evals
+print("PIPELINES_OK")
+""")
+    assert "PIPELINES_OK" in out
 
 
 def test_param_sharding_rules():

@@ -181,6 +181,21 @@ def test_prob_of_consistent_with_realized_probs(graph):
     np.testing.assert_allclose(probs, recomputed, rtol=1e-4, atol=1e-10)
 
 
+def test_prob_of_matches_zero_row_fallback():
+    """Underflow regression: with a tiny bandwidth, level-2 rows underflow
+    to all zeros and ``sample`` falls back to a uniform draw over the live
+    columns -- ``prob_of`` must report that same 1/|live| probability
+    instead of 0 (DESIGN.md §3 zero-row guard, both sides)."""
+    rng = np.random.default_rng(1)
+    x = rng.normal(0, 0.5, (333, 4)).astype(np.float32)
+    nb = NeighborSampler(x, gaussian(0.05), mode="blocked",
+                         exact_blocks=True, seed=0)
+    src = np.full(512, 7, np.int64)
+    v, probs = nb.sample(src)
+    recomputed = nb.prob_of(src, v)
+    np.testing.assert_allclose(probs, recomputed, rtol=2e-4, atol=1e-10)
+
+
 def test_level1_cache_shared_across_calls(graph):
     """Repeated sample/prob_of/sample_exact on one frontier re-sweep the
     dataset exactly once (the level-1 caching contract)."""
