@@ -97,7 +97,9 @@ def estimate_arboricity(x, kernel: Kernel, num_edges: int,
     nbr = NeighborSampler(x, kernel, mode="blocked", seed=seed + 2,
                           exact_blocks=(estimator in ("exact",
                                                       "exact_block")),
-                          mesh=mesh)
+                          mesh=mesh,
+                          level1="hash" if estimator == "hash"
+                          and mesh is None else "blocked")
     est = shared_level1_estimator(nbr, estimator, seed=seed)
     deg = DegreeSampler(est, seed=seed + 1,
                         mesh=mesh if est is nbr.blocks else None)

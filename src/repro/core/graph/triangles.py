@@ -57,7 +57,9 @@ def estimate_triangle_weight(x, kernel: Kernel, num_edges: int,
     nbr = NeighborSampler(x, kernel, mode="blocked", seed=seed + 1,
                           exact_blocks=(estimator in ("exact",
                                                       "exact_block")),
-                          mesh=mesh)
+                          mesh=mesh,
+                          level1="hash" if estimator == "hash"
+                          and mesh is None else "blocked")
     est = shared_level1_estimator(nbr, estimator, seed=seed)
     deg = approximate_degrees(est)
 

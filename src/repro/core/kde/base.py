@@ -15,7 +15,13 @@ Backends
                        into contiguous blocks and each block contributes an
                        independent uniform subsample (same cost as RS, strictly
                        lower variance; on TPU every block is one VMEM tile).
-* ``GridHBE``       -- practical hash-based estimator (``hbe.py``).
+* ``GridHBE``       -- practical hash-based estimator (``hbe.py``), host
+                       per-query loop; kept as the oracle of
+* ``HashedKDE``     -- the device-resident hashed estimator
+                       (``hashed.py`` / ``kernels/kde_hash``): the same
+                       KAP22 near/far decomposition as ONE jitted program
+                       per query batch, O(max_bucket + num_far) kernel
+                       evals per query (the paper's sub-linear black box).
 
 All estimators count kernel evaluations (``.evals``) -- the paper's headline
 cost metric in Section 7.
@@ -199,4 +205,7 @@ def make_estimator(name: str, x, kernel: Kernel, seed: int = 0,
     if name == "grid_hbe":
         from repro.core.kde.hbe import GridHBE
         return GridHBE(x, kernel, seed=seed, **kw)
+    if name == "hash":
+        from repro.core.kde.hashed import HashedKDE
+        return HashedKDE(x, kernel, seed=seed, **kw)
     raise ValueError(f"unknown estimator {name!r}")

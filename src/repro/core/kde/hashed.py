@@ -1,0 +1,103 @@
+"""Device-resident hashed KDE estimator -- the Section 3.1 black-box slot.
+
+``HashedKDE`` adapts the ``repro.kernels.kde_hash`` engine to the
+Definition 1.1 estimator interface: the KAP22/DEANN near/far decomposition
+(exact NEAR term over the query's random-shifted grid bucket + a
+Horvitz-Thompson FAR term over uniform complement samples) as ONE jitted
+device program per query batch -- the sub-linear per-query cost the
+paper's framework assumes (O(max_bucket + num_far_samples) kernel evals
+per query instead of the dense backends' O(n)).
+
+``GridHBE`` (``hbe.py``) remains the host oracle of the same estimator
+family; ``HashedKDE`` is what the fused pipelines consume
+(``estimator="hash"``), and with ``mesh=`` the bucket tables live sharded
+(each shard hashes its own rows) with exactly one psum per query batch
+(DESIGN.md §10).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kde.base import KDEBase
+from repro.core.kernels_fn import Kernel
+
+
+class HashedKDE(KDEBase):
+    """Definition 1.1 estimator over the static padded-bucket layout.
+
+    Per query: <= ``max_bucket`` exact NEAR evals + ``num_far_samples``
+    HT-weighted FAR evals, all inside one compiled program (Pallas bucket
+    kernel on TPU).  ``evals`` counts the *realized* NEAR reads plus the
+    FAR budget -- the paper's Section 7 cost metric.
+
+    >>> est = HashedKDE(x, gaussian(1.0)); est.query(x[:32])
+    """
+
+    def __init__(self, x, kernel: Kernel, cell_width: float | None = None,
+                 num_hash_dims: int = 8, num_far_samples: int = 64,
+                 max_bucket: int = 256, seed: int = 0,
+                 use_pallas: bool | None = None,
+                 interpret: bool | None = None, mesh=None,
+                 data_axes=("data",)):
+        super().__init__(x, kernel)
+        from repro.kernels.kde_hash import ops as _ops
+        from repro.kernels.kde_sampler.ref import static_pairwise
+        self._ops = _ops
+        self.num_far_samples = int(num_far_samples)
+        self.max_bucket = int(max_bucket)
+        self._key = jax.random.PRNGKey(seed)
+        self.engine = None
+        if mesh is not None:
+            from repro.kernels.kde_hash.sharded import ShardedHashTable
+            self.engine = ShardedHashTable(
+                mesh, self.x, kernel, cell_width=cell_width,
+                num_hash_dims=num_hash_dims, max_bucket=max_bucket,
+                num_far_samples=num_far_samples, data_axes=data_axes,
+                seed=seed)
+            self.state = None
+            self.cell_width = self.engine.spec.cell_width
+            return
+        self.state, self.cell_width = _ops.build_hash_state(
+            self.x, kernel, cell_width=cell_width,
+            num_hash_dims=num_hash_dims, max_bucket=max_bucket, seed=seed)
+        if use_pallas is None:
+            use_pallas = _ops._sops.default_use_pallas()
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        self._cfg = dict(kind=kernel.name, inv_bw=1.0 / kernel.bandwidth,
+                         beta=getattr(kernel, "beta", 1.0),
+                         pairwise=static_pairwise(kernel),
+                         cell_width=self.cell_width,
+                         num_far=min(self.num_far_samples, self.n),
+                         n=self.n, use_pallas=bool(use_pallas),
+                         interpret=bool(interpret))
+
+    def _split(self) -> jnp.ndarray:
+        self._key, k = jax.random.split(self._key)
+        return k
+
+    def query(self, y: jnp.ndarray) -> jnp.ndarray:
+        """NEAR-exact + FAR-sampled row-sum estimates (Section 3.1): one
+        device program (one psum on the mesh path) per batch."""
+        y = jnp.asarray(y, jnp.float32)
+        if self.engine is not None:
+            est, cnt = self.engine.query(y, self._split())
+            self.evals += int(np.asarray(cnt).sum()) \
+                + y.shape[0] * self.engine.num_far * self.engine.num_shards
+            return est
+        est, cnt = self._ops.hashed_query(self.x, y, self.state,
+                                          self._split(), **self._cfg)
+        self.evals += int(np.asarray(cnt).sum()) \
+            + y.shape[0] * self._cfg["num_far"]
+        return est
+
+    def degrees(self, batch: int = 1024) -> np.ndarray:
+        """Algorithm 4.3 over the hashed structure: n queries of the
+        dataset against itself minus the kernel's actual diagonal --
+        O(n (max_bucket + num_far_samples)) kernel evals total.  (Defined
+        so ``DegreeSampler(mesh=...)`` accepts the mesh adapter; the body
+        is the shared host loop.)"""
+        from repro.core.sampling.vertex import host_degree_loop
+        return host_degree_loop(self, batch)

@@ -90,9 +90,28 @@ class GridHBE(KDEBase):
                 if n_near:
                     near_set = np.zeros(self.n, bool)
                     near_set[near] = True
-                    kv = kv * (~near_set[samp])
-                    frac = max(1 - near_set[samp].mean(), 1e-9)
-                    total += n_far * float(kv.sum()) / (s * frac)
+                    hits = near_set[samp]
+                    if hits.all():
+                        # Degenerate case: every FAR sample landed in the
+                        # NEAR bucket (a bucket holding most of the
+                        # dataset), so the masked ratio estimate would be
+                        # 0/0 -> 0 and the FAR mass silently dropped.
+                        # Resample from the explicit complement (an exact
+                        # sweep when it is no larger than the budget).
+                        comp = np.flatnonzero(~near_set)
+                        if len(comp) <= s:
+                            samp2 = comp
+                        else:
+                            samp2 = self._rng.choice(comp, size=s,
+                                                     replace=False)
+                        self.evals += len(samp2)
+                        kv2 = np.asarray(self.kernel.pairwise(
+                            yi, self.x[jnp.asarray(samp2)]))[0]
+                        total += n_far * float(kv2.mean())
+                    else:
+                        kv = kv * (~hits)
+                        frac = 1.0 - hits.mean()
+                        total += n_far * float(kv.sum()) / (s * frac)
                 else:
                     total += self.n * float(kv.mean())
             out[i] = total

@@ -61,6 +61,13 @@ class NeighborSampler:
     distribution-identical to the flat draw, same §4 caching contract,
     same eval counters.
 
+    With ``level1="hash"`` the level-1 block masses are estimated by the
+    ``kde_hash`` padded-bucket estimator (exact NEAR members + HT FAR
+    samples scattered into their blocks, O(max_bucket + num_far) evals
+    per frontier row, DESIGN.md §10); the block draw, the exact level-2
+    read and the Theorem 4.12 rejection-exact mode are unchanged, so the
+    §2 sampling contract and the §4 cache carry over verbatim.
+
     >>> nbr = NeighborSampler(x, gaussian(1.0), mode="blocked")
     >>> v, q = nbr.sample(np.array([0, 1, 2]))
     """
@@ -70,18 +77,33 @@ class NeighborSampler:
                  exact_blocks: bool = False, tree: Optional[MultiLevelKDE] = None,
                  seed: int = 0, use_pallas: Optional[bool] = None,
                  interpret: Optional[bool] = None, mesh=None,
-                 data_axes=("data",)):
+                 data_axes=("data",), level1: str = "blocked",
+                 hash_opts: Optional[dict] = None):
         from repro.kernels.kde_sampler import ops as _ops
         self._ops = _ops
         self.x = jnp.asarray(x, jnp.float32)
         self.kernel = kernel
         self.n = int(x.shape[0])
         self.mode = mode
+        self.level1 = level1
         self._rng = np.random.default_rng(seed)
         self._key = jax.random.PRNGKey(seed)
         self._engine = None
+        self._hash = None
+        self._hstate = None
+        if level1 not in ("blocked", "hash"):
+            raise ValueError(f"unknown level1 {level1!r}")
+        if level1 == "hash" and exact_blocks:
+            raise ValueError("level1='hash' replaces the level-1 read with "
+                             "hashed estimates; exact_blocks=True (the "
+                             "reproducible exact read) cannot be honored "
+                             "-- pick one")
         if mesh is not None:
             assert mode == "blocked", "mesh= needs the blocked engine"
+            if level1 == "hash":
+                raise ValueError("level1='hash' is single-device for now; "
+                                 "the sharded hash table covers queries "
+                                 "(kde_hash.sharded), not draws")
         if mode == "blocked":
             bs = block_size or max(int(np.sqrt(self.n)), 16)
             if mesh is not None:
@@ -115,6 +137,28 @@ class NeighborSampler:
             if interpret is None:
                 interpret = (jax.default_backend() != "tpu"
                              and self._engine is None)
+            self._far_per_block = 1
+            if level1 == "hash":
+                # Hashed level-1 (DESIGN.md §10): block masses estimated
+                # from the kde_hash padded-bucket layout (exact NEAR
+                # scatter + ``far_per_block`` stratified FAR slots per
+                # block) at O(max_bucket + B far_per_block) evals per
+                # frontier row; level-2 stays the exact in-block read, so
+                # the §2 contract and every consumer of cached block sums
+                # are unchanged.
+                from repro.core.kde.hashed import HashedKDE
+                hopts = dict(hash_opts or {})
+                # Defaults tuned so the full degrees->sparsify pipeline at
+                # n=16k spends ~20% of the stratified eval budget while
+                # keeping spectral error within 1.25x (BENCH_kde.json).
+                self._far_per_block = int(hopts.pop("far_per_block", 2))
+                hopts.setdefault("max_bucket", 128)
+                self._hash = HashedKDE(self.x, kernel,
+                                       seed=seed + 7919,
+                                       use_pallas=bool(use_pallas),
+                                       interpret=bool(interpret),
+                                       **hopts)
+                self._hstate = self._hash.state
             from repro.kernels.kde_sampler.ref import static_pairwise
             # Static engine configuration shared by every jitted entry point.
             self._cfg = dict(
@@ -124,7 +168,9 @@ class NeighborSampler:
                 block_size=self.block_size, num_blocks=self.num_blocks,
                 n=self.n, s=self._blocks.samples_per_block,
                 exact=exact_blocks, use_pallas=bool(use_pallas),
-                interpret=bool(interpret), bm=128)
+                interpret=bool(interpret),
+                bm=32 if level1 == "hash" else 128,
+                level1=level1, num_far=self._far_per_block)
             self._l2_cfg = {k: self._cfg[k] for k in
                             ("kind", "inv_bw", "beta", "pairwise",
                              "block_size", "n")}
@@ -160,9 +206,20 @@ class NeighborSampler:
         self._key, k = jax.random.split(self._key)
         return k
 
+    @property
+    def hash_estimator(self):
+        """The shared hashed-KDE estimator behind ``level1="hash"`` --
+        exposed so consumers (Algorithm 4.3 degree preprocessing) reuse
+        the one bucket layout instead of hashing the dataset twice."""
+        assert self._hash is not None, "level1='hash' sampler required"
+        return self._hash
+
     # ------------------------------------------------------------------ #
     # blocked mode: fused device engine
     def _level1_evals(self, w: int) -> int:
+        if self.level1 == "hash":
+            return w * (self._hash.max_bucket
+                        + self.num_blocks * self._cfg["num_far"])
         if self.exact_blocks:
             return w * self.n
         return w * self.num_blocks * self._cfg["s"]
@@ -183,12 +240,8 @@ class NeighborSampler:
         else:
             bs = self._ops.masked_block_sums(self.x, self.x_sq, src_dev,
                                              self._next_key(),
-                                             **{k: self._cfg[k] for k in
-                                                ("kind", "inv_bw", "beta",
-                                                 "pairwise", "block_size",
-                                                 "num_blocks", "n", "s",
-                                                 "exact", "use_pallas",
-                                                 "interpret", "bm")})
+                                             hstate=self._hstate,
+                                             **self._cfg)
         self._count(self._level1_evals(len(src32)))
         self._l1_cache = (dig, bs)
         return bs
@@ -216,7 +269,7 @@ class NeighborSampler:
             else:
                 nb, prob, bs = self._ops.fused_sample(
                     self.x, self.x_sq, src_dev, self._next_key(),
-                    **self._cfg)
+                    hstate=self._hstate, **self._cfg)
             self._count(self._level1_evals(len(src)))
             self._l1_cache = (dig, bs)
         self._count(len(src) * self.block_size)
@@ -377,7 +430,7 @@ class NeighborSampler:
             out = self._ops.edge_batch_scan(
                 self.x, self.x_sq, jnp.asarray(cdf_device),
                 jnp.asarray(degs_device), 1.0 / float(total_degree), 1.0 / t,
-                keys, batch=int(batch), **self._cfg)
+                keys, hstate=self._hstate, batch=int(batch), **self._cfg)
         drawn = num_batches * batch
         # per edge: one level-1 read of the u frontier, one exact level-2
         # row, and one aligned k(u, v) pair (the reverse probability
@@ -413,7 +466,7 @@ class NeighborSampler:
             uu, vv, w_hat = self._ops.triangle_edge_scan(
                 self.x, self.x_sq, jnp.asarray(u, jnp.int32),
                 jnp.asarray(v, jnp.int32), jnp.asarray(degs_device), keys,
-                **self._cfg)
+                hstate=self._hstate, **self._cfg)
         self._count(self._level1_evals(m) + m
                     + int(num_draws) * (m * self.block_size + m))
         self._l1_cache = None  # frontier moved; cached sums are stale
@@ -440,8 +493,8 @@ class NeighborSampler:
         else:
             end, path = self._ops.walk_scan(
                 self.x, self.x_sq, starts_dev, keys,
-                rounds=rounds if exact else 0, slack=slack,
-                record_path=bool(record_path), **self._cfg)
+                hstate=self._hstate, rounds=rounds if exact else 0,
+                slack=slack, record_path=bool(record_path), **self._cfg)
         w = len(np.asarray(starts))
         per_step = self._level1_evals(w) + w * self.block_size
         if exact:
@@ -456,10 +509,16 @@ def shared_level1_estimator(nbr: NeighborSampler, estimator: str,
     """Reuse ``nbr``'s level-1 KDE structure as the degree estimator
     whenever it implements the requested one (DESIGN.md §6/§7): one device
     dataset, one ``x_sq`` sweep, one eval counter for the whole pipeline.
+    A ``level1="hash"`` sampler shares its hashed bucket layout the same
+    way (``estimator="hash"`` -> the sampler's own ``HashedKDE``).
     ``rs`` / ``grid_hbe`` (and exact/stratified mismatches) fall back to a
     standalone ``make_estimator`` over the sampler's device dataset."""
     from repro.core.kde.base import make_estimator
 
+    if estimator == "hash":
+        if nbr.level1 == "hash":
+            return nbr.hash_estimator
+        return make_estimator("hash", nbr.x, nbr.kernel, seed=seed)
     wants_exact = estimator in ("exact", "exact_block")
     if wants_exact == nbr.exact_blocks and estimator not in ("rs",
                                                              "grid_hbe"):

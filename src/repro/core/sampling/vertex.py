@@ -82,17 +82,12 @@ class PrefixCDF:
         return self._weights_dev
 
 
-def approximate_degrees(estimator: KDEBase, batch: int = 1024) -> np.ndarray:
-    """Algorithm 4.3: p_i = KDE_X(x_i) - k(x_i, x_i).
-
-    The self kernel is the estimator kernel's *actual* per-point diagonal
-    (``Kernel.pairs(x, x)``), not a hardcoded 1.0 -- custom kernels with
-    k(u, u) != 1 previously got biased degrees.  Mesh-resident estimators
-    (``ShardedKDE``) expose a one-program ``degrees()`` and are dispatched
-    to it instead of the host batch loop."""
-    if hasattr(estimator, "degrees"):
-        return np.maximum(np.asarray(estimator.degrees(), np.float64),
-                          1e-12)
+def host_degree_loop(estimator: KDEBase, batch: int = 1024) -> np.ndarray:
+    """Algorithm 4.3 as batched estimator queries of the dataset against
+    itself, minus the kernel's *actual* per-point diagonal
+    (``Kernel.pairs(x, x)``, a constant 1.0 only for the Table-1 kinds).
+    The ONE host fallback shared by ``approximate_degrees`` and the
+    estimator adapters that expose a ``degrees()`` method."""
     from repro.kernels.kde_sampler.ref import BUILTIN_KINDS
     n = estimator.n
     out = np.zeros(n, np.float64)
@@ -100,11 +95,23 @@ def approximate_degrees(estimator: KDEBase, batch: int = 1024) -> np.ndarray:
         hi = min(lo + batch, n)
         out[lo:hi] = np.asarray(estimator.query(estimator.x[lo:hi]))
     if estimator.kernel.name in BUILTIN_KINDS:
-        out = out - 1.0          # k(x, x) = 1 exactly for Table-1 kernels
-    else:
-        out = out - np.asarray(
-            estimator.kernel.pairs(estimator.x, estimator.x), np.float64)
-    return np.maximum(out, 1e-12)
+        return out - 1.0         # k(x, x) = 1 exactly for Table-1 kernels
+    return out - np.asarray(
+        estimator.kernel.pairs(estimator.x, estimator.x), np.float64)
+
+
+def approximate_degrees(estimator: KDEBase, batch: int = 1024) -> np.ndarray:
+    """Algorithm 4.3: p_i = KDE_X(x_i) - k(x_i, x_i).
+
+    The self kernel is the estimator kernel's *actual* per-point diagonal
+    (``Kernel.pairs(x, x)``), not a hardcoded 1.0 -- custom kernels with
+    k(u, u) != 1 previously got biased degrees.  Estimators exposing a
+    ``degrees()`` method (mesh-resident ``ShardedKDE``, the hashed
+    ``HashedKDE``) are dispatched to it instead of the host batch loop."""
+    if hasattr(estimator, "degrees"):
+        return np.maximum(np.asarray(estimator.degrees(), np.float64),
+                          1e-12)
+    return np.maximum(host_degree_loop(estimator, batch), 1e-12)
 
 
 class DegreeSampler:

@@ -82,12 +82,21 @@ def spectral_sparsify(x, kernel: Kernel, num_edges: int,
     program with a single device->host transfer of the edge list.  With
     ``mesh=`` the same program runs sharded (DESIGN.md §9): the level-1
     state is mesh-resident and each edge batch performs one psum.
+
+    With ``estimator="hash"`` BOTH the Algorithm 4.3 degree preprocessing
+    and the per-edge level-1 reads run on the sub-linear hashed estimator
+    (one shared bucket layout, DESIGN.md §10): total kernel evals drop
+    from O((n + t) B s) to O((n + t)(max_bucket + num_far)).  On the
+    ``mesh=`` path the hashed hybrid covers degrees only (the collective
+    draws stay on the §9 blocked engine).
     """
     n = int(x.shape[0])
     t = int(num_edges)
     nbr = NeighborSampler(x, kernel, mode="blocked", seed=seed + 2,
                           exact_blocks=exact_blocks,
-                          samples_per_block=samples_per_block, mesh=mesh)
+                          samples_per_block=samples_per_block, mesh=mesh,
+                          level1="hash" if estimator == "hash"
+                          and mesh is None else "blocked")
     # Degree preprocessing (Algorithm 4.3) against the sampler's own
     # level-1 structure whenever it implements the requested estimator --
     # one KDE build and one preprocessing sweep over x, not two.  The

@@ -1,0 +1,6 @@
+"""Device-resident hashed-KDE engine (KAP22/DEANN near/far decomposition).
+
+Layout mirrors ``kde_sampler``: ``kernel.py`` Pallas bucket kernels,
+``ref.py`` pure-jnp oracles + the ``HashState`` padded-bucket layout,
+``ops.py`` host layout build + jitted query/level-1 programs,
+``sharded.py`` the mesh-resident one-psum table (DESIGN.md §10)."""

@@ -1,0 +1,80 @@
+"""Pallas TPU kernel: weighted bucket-gather kernel evaluation.
+
+The hashed estimator's hot loop is "evaluate k(q_i, x_j) over each query's
+gathered (bucket member + FAR sample) rows and reduce with per-slot HT
+weights".  The gather itself is an XLA gather (dense (w, t, d) member
+coordinates); this kernel fuses the kernel-value math and the weighted
+reduction over one query tile, keeping the (bm, t, d) gathered rows in
+VMEM for a single pass.
+
+Two entry points over the same body:
+
+* ``weighted_kv_sum_pallas`` -- (m,) weighted row sums: the Definition 1.1
+  query estimate (NEAR + HT-FAR in one reduction).
+* ``weighted_kv_pallas``     -- (m, t) weighted kernel values: consumed by
+  the hashed level-1 block-sum scatter (DESIGN.md §10).
+
+The kernel-value math is ``ref.rowwise_kv`` itself (a static d-loop on the
+VPU -- per-query-row buckets have no matmul form), so interpret-mode runs
+reproduce the jnp oracle bitwise.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.kde_hash import ref as _ref
+
+
+def _weighted_kv_kernel(q_ref, w_ref, xr_ref, o_ref, *, kind, inv_bw, beta,
+                        reduce_sum):
+    kv = _ref.rowwise_kv(q_ref[...], xr_ref[...], kind, inv_bw, beta)
+    kv = kv * w_ref[...]
+    if reduce_sum:
+        o_ref[...] = jnp.sum(kv, axis=1)
+    else:
+        o_ref[...] = kv
+
+
+def _call(q, wgt, xr, kind, inv_bw, beta, bm, interpret, reduce_sum):
+    m, d = q.shape
+    t = xr.shape[1]
+    body = functools.partial(_weighted_kv_kernel, kind=kind, inv_bw=inv_bw,
+                             beta=beta, reduce_sum=reduce_sum)
+    if reduce_sum:
+        out_specs = pl.BlockSpec((bm,), lambda i: (i,))
+        out_shape = jax.ShapeDtypeStruct((m,), jnp.float32)
+    else:
+        out_specs = pl.BlockSpec((bm, t), lambda i: (i, 0))
+        out_shape = jax.ShapeDtypeStruct((m, t), jnp.float32)
+    return pl.pallas_call(
+        body,
+        grid=(m // bm,),
+        in_specs=[pl.BlockSpec((bm, d), lambda i: (i, 0)),
+                  pl.BlockSpec((bm, t), lambda i: (i, 0)),
+                  pl.BlockSpec((bm, t, d), lambda i: (i, 0, 0))],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(q, wgt, xr)
+
+
+def weighted_kv_sum_pallas(q: jnp.ndarray, wgt: jnp.ndarray, xr: jnp.ndarray,
+                           kind: str, inv_bw: float, beta: float = 1.0,
+                           bm: int = 32, interpret: bool = False):
+    """q (m, d), wgt (m, t), xr (m, t, d) -> (m,) weighted kernel-value
+    sums ``sum_j wgt_ij k(q_i, xr_ij)``; m must be a multiple of bm."""
+    return _call(q, wgt, xr, kind, inv_bw, beta, bm, interpret,
+                 reduce_sum=True)
+
+
+def weighted_kv_pallas(q: jnp.ndarray, wgt: jnp.ndarray, xr: jnp.ndarray,
+                       kind: str, inv_bw: float, beta: float = 1.0,
+                       bm: int = 32, interpret: bool = False):
+    """q (m, d), wgt (m, t), xr (m, t, d) -> (m, t) weighted kernel values
+    (the level-1 scatter input); m must be a multiple of bm."""
+    return _call(q, wgt, xr, kind, inv_bw, beta, bm, interpret,
+                 reduce_sum=False)

@@ -1,0 +1,199 @@
+"""Device-resident hashed-KDE engine: layout build + jitted programs.
+
+``build_hash_state`` runs ONCE on the host: hash every dataset row with a
+random-shifted grid (the KAP22/DEANN scheme of ``core.kde.hbe``), sort by
+packed key, and freeze the buckets into the static padded layout of
+``ref.HashState`` -- ``max_bucket`` slots per bucket, sentinel padding,
+global row indices.  After that every query is ONE jitted device program:
+
+* ``hashed_query``      -- (m,) NEAR-exact + HT-FAR row-sum estimates plus
+  the realized NEAR eval counts; O(max_bucket + num_far) kernel evals per
+  query instead of the dense backends' O(n) (Definition 1.1 / §3.1).
+* ``hashed_block_sums`` -- (w, B) §2-contract level-1 block-sum estimates
+  for a frontier of dataset indices (bucket membership is a dense
+  ``point_bucket`` gather; the FAR term is a stratified per-block draw so
+  no block is left at the floor); the ``level1="hash"`` read of the
+  depth-2 sampler (DESIGN.md §10).
+
+Both dispatch the weighted kernel-value pass to the Pallas bucket kernel
+on the TPU path and run the ``ref.py`` oracle math elsewhere; interpret
+mode matches the oracle bitwise.  ``TRACE_COUNTS`` is shared with
+``kde_sampler.ops`` so the no-retrace tests cover these programs too.
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.kde_hash import kernel as _k
+from repro.kernels.kde_hash import ref as _ref
+from repro.kernels.kde_sampler import ops as _sops
+from repro.kernels.kde_sampler.ref import BUILTIN_KINDS
+
+TRACE_COUNTS = _sops.TRACE_COUNTS
+
+_STATIC = frozenset((
+    "kind", "inv_bw", "beta", "pairwise", "cell_width", "num_far", "n",
+    "block_size", "num_blocks", "use_pallas", "interpret", "bm"))
+
+
+def _jit(fn):
+    names = tuple(p for p in inspect.signature(fn).parameters if p in _STATIC)
+    return jax.jit(fn, static_argnames=names)
+
+
+def default_cell_width(kernel) -> float:
+    """The ``GridHBE`` default: two bandwidths per grid cell, so NEAR
+    buckets cover the region where Table-1 kernels carry most mass."""
+    return 2.0 * float(kernel.bandwidth)
+
+
+def draw_grid(rng, d: int, num_hash_dims: int, cell_width: float):
+    """Draw the random-shifted grid (hash-dim subset + per-dim shift) with
+    the exact ``GridHBE(seed=...)`` RNG call order -- the ONE place this
+    discipline lives (``build_hash_state`` and the sharded table both call
+    it, so equal seeds always mean the identical grid)."""
+    dims = rng.choice(d, size=min(int(num_hash_dims), d),
+                      replace=False).astype(np.int32)
+    shift = rng.uniform(0.0, cell_width, size=len(dims)).astype(np.float32)
+    return dims, shift
+
+
+def grid_keys(xn: np.ndarray, dims, shift, cell_width: float) -> np.ndarray:
+    """(k,) uint32 packed grid keys of rows ``xn`` (float32 shift/floor
+    arithmetic bitwise-equal to the device-side ``ref.query_codes``)."""
+    codes = np.floor((xn[:, dims] + shift) / cell_width).astype(np.int32)
+    keys = np.zeros(len(xn), np.uint32)
+    for j in range(codes.shape[1]):
+        keys = keys * np.uint32(_ref.HASH_MULT) + codes[:, j].astype(np.uint32)
+    return keys
+
+
+def bucket_table(keys: np.ndarray, rows: np.ndarray, max_bucket: int, rng):
+    """Freeze the buckets of one key slice into the padded layout:
+    (sorted unique keys, (U, max_bucket) member table of GLOBAL row ids,
+    stored counts, concatenated stored row ids).  Oversized buckets store
+    a seeded subsample; overflow members stay FAR-eligible."""
+    order = np.argsort(keys, kind="stable")
+    sk = keys[order]
+    uniq, counts_full = np.unique(sk, return_counts=True)
+    starts = np.concatenate([[0], np.cumsum(counts_full)[:-1]])
+    mb = int(max_bucket)
+    members = np.zeros((max(len(uniq), 1), mb), np.int32)
+    counts = np.zeros(max(len(uniq), 1), np.int32)
+    counts[:len(uniq)] = np.minimum(counts_full, mb)
+    stored = [np.zeros(0, np.int64)]
+    for b in range(len(uniq)):
+        seg = rows[order[starts[b]:starts[b] + counts_full[b]]]
+        if counts_full[b] > mb:
+            seg = rng.choice(seg, size=mb, replace=False)
+        members[b, :len(seg)] = seg
+        stored.append(seg)
+    return uniq, members, counts, np.concatenate(stored)
+
+
+def build_hash_state(x, kernel, cell_width: float | None = None,
+                     num_hash_dims: int = 8, max_bucket: int = 256,
+                     seed: int = 0):
+    """Host-side layout build (once per dataset): returns
+    ``(HashState, cell_width)``.
+
+    The RNG call order (hash-dim choice, then shift, then per-bucket
+    overflow subsampling) matches ``GridHBE(seed=...)``, so a ``GridHBE``
+    built with the same seed/width hashes with the identical grid --
+    bucket membership agrees up to the packed-key width (uint32 here,
+    uint64 there; a collision would merely merge two cells, and the
+    HT-corrected estimator stays unbiased under ANY bucket assignment).
+    Buckets larger than ``max_bucket`` store a seeded subsample; overflow
+    members remain FAR-eligible.
+    """
+    xn = np.asarray(x, np.float32)
+    n, d = xn.shape
+    rng = np.random.default_rng(seed)
+    w = float(cell_width if cell_width is not None
+              else default_cell_width(kernel))
+    dims, shift = draw_grid(rng, d, num_hash_dims, w)
+    keys = grid_keys(xn, dims, shift, w)
+    uniq, members, counts, stored_rows = bucket_table(
+        keys, np.arange(n, dtype=np.int64), max_bucket, rng)
+    stored = np.zeros(n, bool)
+    stored[stored_rows] = True
+    point_bucket = np.searchsorted(uniq, keys).astype(np.int32)
+    state = _ref.HashState(
+        dims=jnp.asarray(dims),
+        shift=jnp.asarray(shift),
+        keys=jnp.asarray(uniq),
+        members=jnp.asarray(members),
+        counts=jnp.asarray(counts),
+        point_bucket=jnp.asarray(point_bucket),
+        self_stored=jnp.asarray(stored.astype(np.float32)))
+    return state, w
+
+
+def _weighted_pass(q, xr, wgt, *, kind, inv_bw, beta, pairwise, use_pallas,
+                   interpret, bm, reduce_sum):
+    """One weighted kernel-value pass: Pallas bucket kernel on the TPU
+    path (padded to a ``bm`` query multiple), the shared ``ref.rowwise_kv``
+    math elsewhere -- bitwise-identical results in interpret mode."""
+    if use_pallas and kind in BUILTIN_KINDS:
+        m = q.shape[0]
+        rem = (-m) % bm
+        if rem:
+            q = jnp.pad(q, ((0, rem), (0, 0)))
+            wgt = jnp.pad(wgt, ((0, rem), (0, 0)))
+            xr = jnp.pad(xr, ((0, rem), (0, 0), (0, 0)))
+        fn = (_k.weighted_kv_sum_pallas if reduce_sum
+              else _k.weighted_kv_pallas)
+        return fn(q, wgt, xr, kind, inv_bw, beta, bm=bm,
+                  interpret=interpret)[:m]
+    kv = _ref.rowwise_kv(q, xr, kind, inv_bw, beta, pairwise) * wgt
+    return jnp.sum(kv, axis=1) if reduce_sum else kv
+
+
+@_jit
+def hashed_query(x, y, state, key, *, kind, inv_bw, beta, pairwise,
+                 cell_width, num_far, n, use_pallas=False, interpret=False,
+                 bm=32):
+    """(m,) row-sum estimates + (m,) realized NEAR eval counts -- the
+    Definition 1.1 read at O(max_bucket + num_far) evals per query."""
+    TRACE_COUNTS["hashed_query"] += 1
+    _, xr, wgt, cnt = _ref.query_gather(x, y, state, key, cell_width,
+                                        num_far, n)
+    est = _weighted_pass(y, xr, wgt, kind=kind, inv_bw=inv_bw, beta=beta,
+                         pairwise=pairwise, use_pallas=use_pallas,
+                         interpret=interpret, bm=bm, reduce_sum=True)
+    return est, cnt
+
+
+def _hashed_block_sums(x, src, state, key, *, kind, inv_bw, beta, pairwise,
+                       num_far, block_size, num_blocks, n, use_pallas,
+                       interpret, bm):
+    """Traceable core of ``hashed_block_sums`` (called from inside the
+    fused sampler programs of ``kde_sampler.ops``)."""
+    q = x[src]
+    cols, xr, wgt, _ = _ref.frontier_gather(x, src, state, key, num_far,
+                                            block_size, num_blocks, n)
+    kv = _weighted_pass(q, xr, wgt, kind=kind, inv_bw=inv_bw, beta=beta,
+                        pairwise=pairwise, use_pallas=use_pallas,
+                        interpret=interpret, bm=bm, reduce_sum=False)
+    return _ref.scatter_block_sums(kv, cols, src, state, num_far,
+                                   block_size, num_blocks)
+
+
+@_jit
+def hashed_block_sums(x, src, state, key, *, kind, inv_bw, beta, pairwise,
+                      num_far, block_size, num_blocks, n, use_pallas=False,
+                      interpret=False, bm=32):
+    """(w, B) §2-contract level-1 estimates of a dataset frontier from
+    O(max_bucket + B num_far) evals per row: exact NEAR scatter +
+    ``num_far`` stratified FAR slots per block (the ``level1="hash"``
+    read; DESIGN.md §10)."""
+    TRACE_COUNTS["hashed_block_sums"] += 1
+    return _hashed_block_sums(x, src, state, key, kind=kind, inv_bw=inv_bw,
+                              beta=beta, pairwise=pairwise, num_far=num_far,
+                              block_size=block_size, num_blocks=num_blocks,
+                              n=n, use_pallas=use_pallas, interpret=interpret,
+                              bm=bm)

@@ -1,0 +1,214 @@
+"""Mesh-resident hashed-KDE table (DESIGN.md §10, sharded schedule).
+
+Each shard owns a contiguous run of dataset rows (the §9 layout: ``n``
+rows padded to ``P * shard_size`` with far-offset sentinel rows) and
+hashes ITS OWN rows into a local bucket table under the one global
+(dims, shift) grid -- a global grid cell's members are partitioned across
+shards, so the union of local NEAR sets is exactly the flat engine's NEAR
+set.  One query batch is:
+
+1. every shard hashes the replicated queries, looks the keys up in its
+   LOCAL sorted table, and evaluates its NEAR members exactly
+   (``O(max_bucket)`` rows) -- no collective;
+2. every shard draws ``num_far`` uniforms over its OWN ``shard_size`` row
+   slots (``fold_in(key, p)`` discipline; sentinel rows have kernel value
+   exactly 0) and applies the local HT weight ``shard_size/num_far`` --
+   no collective;
+3. ONE ``psum`` of the (estimate partial, NEAR-count partial) pair makes
+   the Definition 1.1 estimates replicated.
+
+Exactly one psum and zero ppermute per query batch (asserted via
+``kde_sampler.sharded.collective_counts``); no dataset row ever moves
+between shards.  Oracle: ``ref.sharded_hashed_query_ref`` (identical
+key discipline; ints bitwise, floats to f32 tolerance).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.compat import shard_map
+from repro.kernels.kde_hash import ops as _ops
+from repro.kernels.kde_hash import ref as _ref
+from repro.kernels.kde_rowsum.ops import _PAD_OFFSET
+from repro.kernels.kde_sampler.ref import static_pairwise
+from repro.kernels.kde_sampler.sharded import _flat_index
+
+TRACE_COUNTS = _ops.TRACE_COUNTS
+
+_PROGRAM_CACHE: dict = {}
+
+# Sorted-key padding: lookups of a real key can never land on a pad slot
+# (pad counts are 0 anyway, so even the astronomically unlikely real
+# 0xFFFFFFFF key only ever reads an empty bucket).
+_PAD_KEY = np.uint32(0xFFFFFFFF)
+
+
+@dataclasses.dataclass(frozen=True)
+class _TableSpec:
+    """Static configuration of a sharded hash table -- the only thing the
+    cached program closures capture (never device arrays)."""
+
+    mesh: Mesh
+    axes: tuple
+    num_shards: int
+    n: int
+    shard_size: int
+    num_far: int
+    cell_width: float
+    kind: str
+    inv_bw: float
+    beta: float
+    pairwise: object
+
+
+class ShardedHashTable:
+    """Per-shard bucket tables + the one-psum collective query program.
+
+    Construction hashes each shard's rows on the host (same grid as the
+    flat ``ops.build_hash_state``) and places the stacked ``(P, U, mb)``
+    tables sharded over the mesh; ``query`` is a jitted ``shard_map``
+    program cached at module level by static config (Section 3.1 query
+    semantics, one psum per batch).
+    """
+
+    def __init__(self, mesh: Mesh, x, kernel, *, cell_width: float | None
+                 = None, num_hash_dims: int = 8, max_bucket: int = 256,
+                 num_far_samples: int = 64,
+                 data_axes: Sequence[str] = ("data",), seed: int = 0):
+        axes = tuple(data_axes)
+        num_shards = 1
+        for a in axes:
+            num_shards *= int(mesh.shape[a])
+        xn = np.asarray(x, np.float32)
+        n, d = xn.shape
+        shard_size = -(-n // num_shards)
+        rng = np.random.default_rng(seed)
+        w = float(cell_width if cell_width is not None
+                  else _ops.default_cell_width(kernel))
+        dims, shift = _ops.draw_grid(rng, d, num_hash_dims, w)
+        keys = _ops.grid_keys(xn, dims, shift, w)
+        mb = int(max_bucket)
+        per_shard = []
+        for p in range(num_shards):
+            lo, hi = p * shard_size, min((p + 1) * shard_size, n)
+            uniq, members, counts, _ = _ops.bucket_table(
+                keys[lo:hi], np.arange(lo, hi, dtype=np.int64), mb, rng)
+            per_shard.append((uniq, members, counts))
+        u_pad = max(max(len(s[0]) for s in per_shard), 1)
+        keys_s = np.full((num_shards, u_pad), _PAD_KEY, np.uint32)
+        members_s = np.zeros((num_shards, u_pad, mb), np.int32)
+        counts_s = np.zeros((num_shards, u_pad), np.int32)
+        states = []
+        for p, (uniq, members, counts) in enumerate(per_shard):
+            keys_s[p, :len(uniq)] = uniq
+            members_s[p, :len(uniq)] = members[:len(uniq)]
+            counts_s[p, :len(uniq)] = counts
+            states.append(_ref.HashState(
+                dims=jnp.asarray(dims), shift=jnp.asarray(shift),
+                keys=jnp.asarray(keys_s[p]),
+                members=jnp.asarray(members_s[p]),
+                counts=jnp.asarray(counts_s[p]),
+                point_bucket=None, self_stored=None))
+        # single-device twins of the per-shard tables, for the ref oracle
+        self.shard_states = states
+        self.spec = _TableSpec(
+            mesh=mesh, axes=axes, num_shards=num_shards, n=n,
+            shard_size=shard_size, num_far=int(num_far_samples),
+            cell_width=w, kind=kernel.name,
+            inv_bw=1.0 / kernel.bandwidth,
+            beta=float(getattr(kernel, "beta", 1.0)),
+            pairwise=static_pairwise(kernel))
+        self.n = n
+        self.d = d
+        self.num_shards = num_shards
+        self.shard_size = shard_size
+        self.max_bucket = mb
+        self.num_far = int(num_far_samples)
+        n_pad = num_shards * shard_size
+        pad = n_pad - n
+        if pad:
+            sent = jnp.full((pad, d), _PAD_OFFSET, jnp.float32) \
+                + jnp.asarray(xn[-1:])
+            xp = jnp.concatenate([jnp.asarray(xn), sent], axis=0)
+        else:
+            xp = jnp.asarray(xn)
+        # every gather in the query program is shard-local (members and
+        # FAR draws only ever touch the executing shard's own rows), so
+        # the dataset lives sharded -- O(n d / P) per device; the
+        # unplaced twin is kept for the ref oracle only.
+        self.x_pad = xp
+        sh = NamedSharding(mesh, P(axes))
+        self.x_sh = jax.device_put(xp, sh)
+        self._keys = jax.device_put(jnp.asarray(keys_s), sh)
+        self._members = jax.device_put(jnp.asarray(members_s), sh)
+        self._counts = jax.device_put(jnp.asarray(counts_s), sh)
+        self._dims = jax.device_put(jnp.asarray(dims),
+                                    NamedSharding(mesh, P()))
+        self._shift = jax.device_put(jnp.asarray(shift),
+                                     NamedSharding(mesh, P()))
+
+    def _program(self):
+        sp = self.spec
+        if sp not in _PROGRAM_CACHE:
+            mesh, axes = sp.mesh, sp.axes
+
+            def body(keys_l, members_l, counts_l, dims, shift, x_l, y,
+                     key):
+                pidx = _flat_index(mesh, axes)
+                keys_l, members_l, counts_l = (keys_l[0], members_l[0],
+                                               counts_l[0])
+                qkey = _ref.pack_codes(
+                    _ref.query_codes(y, dims, shift, sp.cell_width))
+                b = jnp.clip(jnp.searchsorted(keys_l, qkey), 0,
+                             keys_l.shape[0] - 1).astype(jnp.int32)
+                hit = keys_l[b] == qkey
+                cnt = jnp.where(hit, counts_l[b], 0)
+                mem = members_l[b]
+                mb = mem.shape[1]
+                mvalid = (jnp.arange(mb, dtype=jnp.int32)[None, :]
+                          < cnt[:, None])
+                if sp.num_far == 0:        # static: NEAR-only estimate
+                    cols, wgt = mem, mvalid.astype(jnp.float32)
+                else:
+                    kk = jax.random.fold_in(key, pidx)
+                    fidx = pidx * sp.shard_size + jax.random.randint(
+                        kk, (y.shape[0], sp.num_far), 0, sp.shard_size)
+                    collide = _ref._far_collide(fidx, mem, mvalid)
+                    cols = jnp.concatenate([mem, fidx], axis=1)
+                    wgt = jnp.concatenate(
+                        [mvalid.astype(jnp.float32),
+                         (float(sp.shard_size) / sp.num_far)
+                         * (1.0 - collide.astype(jnp.float32))], axis=1)
+                # all referenced rows are the shard's own: gather from the
+                # LOCAL slice (member-pad slots point at global row 0 --
+                # clamped here and masked by their 0 weight)
+                cols_l = jnp.clip(cols - pidx * sp.shard_size, 0,
+                                  sp.shard_size - 1)
+                kv = _ref.rowwise_kv(y, x_l[cols_l], sp.kind, sp.inv_bw,
+                                     sp.beta, sp.pairwise)
+                part = jnp.sum(kv * wgt, axis=1)
+                return jax.lax.psum((part, cnt), axes)
+
+            def outer(*args):
+                TRACE_COUNTS["sharded_hashed_query"] += 1
+                return shard_map(body, mesh=mesh,
+                                 in_specs=(P(axes), P(axes), P(axes), P(),
+                                           P(), P(axes), P(), P()),
+                                 out_specs=(P(), P()),
+                                 check_vma=False)(*args)
+            _PROGRAM_CACHE[sp] = jax.jit(outer)
+        return _PROGRAM_CACHE[sp]
+
+    def query(self, y, key):
+        """(m,) replicated row-sum estimates + (m,) NEAR eval counts:
+        local NEAR lookup + local FAR partials, then exactly ONE psum
+        (Definition 1.1 over the sharded hashed table)."""
+        return self._program()(
+            self._keys, self._members, self._counts, self._dims,
+            self._shift, self.x_sh, jnp.asarray(y, jnp.float32), key)

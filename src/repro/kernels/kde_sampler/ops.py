@@ -47,10 +47,14 @@ from repro.kernels.kde_sampler import ref as _ref
 TRACE_COUNTS = collections.Counter()
 
 # Static (hashable) configuration forwarded to every jitted entry point.
+# ``level1`` selects the frontier read: "blocked" (the §2 depth-2 block
+# structure) or "hash" (the kde_hash padded-bucket estimator, whose
+# ``HashState`` arrays ride along as the ``hstate`` operand pytree and
+# whose FAR budget is the ``num_far`` static -- DESIGN.md §10).
 _STATIC = frozenset((
     "kind", "inv_bw", "beta", "pairwise", "block_size", "num_blocks",
     "n", "s", "exact", "use_pallas", "interpret", "bm", "rounds", "slack",
-    "batch", "record_path", "iters", "num_samples"))
+    "batch", "record_path", "iters", "num_samples", "level1", "num_far"))
 
 
 def _jit(fn):
@@ -150,17 +154,20 @@ def _masked_block_sums(x, x_sq, src, key, *, kind, inv_bw, beta, pairwise,
 
 
 @_jit
-def masked_block_sums(x, x_sq, src, key, *, kind, inv_bw, beta, pairwise,
-                      block_size, num_blocks, n, s, exact, use_pallas=False,
-                      interpret=False, bm=128):
+def masked_block_sums(x, x_sq, src, key, hstate=None, *, kind, inv_bw, beta,
+                      pairwise, block_size, num_blocks, n, s, exact,
+                      use_pallas=False, interpret=False, bm=128,
+                      level1="blocked", num_far=64):
     """Level-1 frontier read; dispatches to the Pallas masked-blocksum
-    kernel (no Gumbel state) on the exact+Pallas path."""
+    kernel (no Gumbel state) on the exact+Pallas path, or to the hashed
+    read when ``level1="hash"``."""
     TRACE_COUNTS["masked_block_sums"] += 1
-    return _masked_sums_any(x, x_sq, src, key, kind=kind, inv_bw=inv_bw,
-                            beta=beta, pairwise=pairwise,
+    return _masked_sums_any(x, x_sq, src, key, hstate, kind=kind,
+                            inv_bw=inv_bw, beta=beta, pairwise=pairwise,
                             block_size=block_size, num_blocks=num_blocks,
                             n=n, s=s, exact=exact, use_pallas=use_pallas,
-                            interpret=interpret, bm=bm)
+                            interpret=interpret, bm=bm, level1=level1,
+                            num_far=num_far)
 
 
 # --------------------------------------------------------------------- #
@@ -193,12 +200,23 @@ def _sample_core(x, x_sq, views, src, bs, key, *, kind, inv_bw, beta,
                                  beta, block_size, n, pairwise)
 
 
-def _fused_sample(x, x_sq, src, key, *, kind, inv_bw, beta, pairwise,
-                  block_size, num_blocks, n, s, exact, use_pallas, interpret,
-                  bm, views=None):
+def _fused_sample(x, x_sq, src, key, hstate=None, *, kind, inv_bw, beta,
+                  pairwise, block_size, num_blocks, n, s, exact, use_pallas,
+                  interpret, bm, level1="blocked", num_far=64, views=None):
     if views is None:
         views = _block_views(x, x_sq, block_size)
     k_l1, k_rest = jax.random.split(key)
+    if level1 == "hash":
+        bs = _masked_sums_any(x, x_sq, src, k_l1, hstate=hstate, kind=kind,
+                              inv_bw=inv_bw, beta=beta, pairwise=pairwise,
+                              block_size=block_size, num_blocks=num_blocks,
+                              n=n, s=s, exact=exact, use_pallas=use_pallas,
+                              interpret=interpret, bm=bm, level1=level1,
+                              num_far=num_far)
+        nb, prob = _sample_core(x, x_sq, views, src, bs, k_rest, kind=kind,
+                                inv_bw=inv_bw, beta=beta, pairwise=pairwise,
+                                block_size=block_size, n=n)
+        return nb, prob, bs
     if exact and use_pallas:
         # Fully fused level-1: block sums + Gumbel-max draw in one Pallas pass.
         w = src.shape[0]
@@ -228,15 +246,16 @@ def _fused_sample(x, x_sq, src, key, *, kind, inv_bw, beta, pairwise,
 
 
 @_jit
-def fused_sample(x, x_sq, src, key, *, kind, inv_bw, beta, pairwise,
-                 block_size, num_blocks, n, s, exact, use_pallas, interpret,
-                 bm):
+def fused_sample(x, x_sq, src, key, hstate=None, *, kind, inv_bw, beta,
+                 pairwise, block_size, num_blocks, n, s, exact, use_pallas,
+                 interpret, bm, level1="blocked", num_far=64):
     """One depth-2 sampling step: (neighbors, realized probs, level-1 sums)."""
     TRACE_COUNTS["fused_sample"] += 1
-    return _fused_sample(x, x_sq, src, key, kind=kind, inv_bw=inv_bw,
+    return _fused_sample(x, x_sq, src, key, hstate, kind=kind, inv_bw=inv_bw,
                          beta=beta, pairwise=pairwise, block_size=block_size,
                          num_blocks=num_blocks, n=n, s=s, exact=exact,
-                         use_pallas=use_pallas, interpret=interpret, bm=bm)
+                         use_pallas=use_pallas, interpret=interpret, bm=bm,
+                         level1=level1, num_far=num_far)
 
 
 @_jit
@@ -285,12 +304,21 @@ def prob_of_from_block_sums(x, x_sq, src, dst, bs, *, kind, inv_bw, beta,
 # --------------------------------------------------------------------- #
 # fused Algorithm 5.1 edge batches + batched LRA sketch rows
 # --------------------------------------------------------------------- #
-def _masked_sums_any(x, x_sq, src, key, *, kind, inv_bw, beta, pairwise,
-                     block_size, num_blocks, n, s, exact, use_pallas,
-                     interpret, bm):
+def _masked_sums_any(x, x_sq, src, key, hstate=None, *, kind, inv_bw, beta,
+                     pairwise, block_size, num_blocks, n, s, exact,
+                     use_pallas, interpret, bm, level1="blocked", num_far=64):
     """Masked level-1 sums for a frontier, dispatching to the Pallas
     masked-blocksum kernel on the exact+Pallas path (no Gumbel state --
-    probability evaluation needs sums only)."""
+    probability evaluation needs sums only), or to the hashed-KDE read
+    (``level1="hash"``: O(max_bucket + num_far) evals per row instead of
+    the blocked O(B s) / O(n), DESIGN.md §10)."""
+    if level1 == "hash":
+        from repro.kernels.kde_hash import ops as _hops
+        return _hops._hashed_block_sums(
+            x, src, hstate, key, kind=kind, inv_bw=inv_bw, beta=beta,
+            pairwise=pairwise, num_far=num_far, block_size=block_size,
+            num_blocks=num_blocks, n=n, use_pallas=use_pallas,
+            interpret=interpret, bm=bm)
     if exact and use_pallas:
         w = src.shape[0]
         q, own, xp, _ = _pallas_pad(x, src, bm, block_size)
@@ -303,9 +331,10 @@ def _masked_sums_any(x, x_sq, src, key, *, kind, inv_bw, beta, pairwise,
                               n=n, s=s, exact=exact)
 
 
-def _edge_batch_core(x, x_sq, views, cdf, degs, inv_total, inv_t, key, *,
-                     batch, kind, inv_bw, beta, pairwise, block_size,
-                     num_blocks, n, s, exact, use_pallas, interpret, bm):
+def _edge_batch_core(x, x_sq, views, cdf, degs, inv_total, inv_t, key,
+                     hstate=None, *, batch, kind, inv_bw, beta, pairwise,
+                     block_size, num_blocks, n, s, exact, use_pallas,
+                     interpret, bm, level1="blocked", num_far=64):
     """One Algorithm 5.1 edge batch, steps (a)-(d), as straight-line device
     code: u ~ degrees (inverse CDF over the device prefix array), v | u by
     the depth-2 engine, the reverse probability, and the importance weight
@@ -320,11 +349,12 @@ def _edge_batch_core(x, x_sq, views, cdf, degs, inv_total, inv_t, key, *,
     probability (from the same level-1 sums that drew v)."""
     k_u, k_fwd = jax.random.split(key)
     u = _ref.inverse_cdf_index(cdf, jax.random.uniform(k_u, (batch,)))
-    v, q_uv, _ = _fused_sample(x, x_sq, u, k_fwd, kind=kind, inv_bw=inv_bw,
-                               beta=beta, pairwise=pairwise,
+    v, q_uv, _ = _fused_sample(x, x_sq, u, k_fwd, hstate, kind=kind,
+                               inv_bw=inv_bw, beta=beta, pairwise=pairwise,
                                block_size=block_size, num_blocks=num_blocks,
                                n=n, s=s, exact=exact, use_pallas=use_pallas,
-                               interpret=interpret, bm=bm, views=views)
+                               interpret=interpret, bm=bm, level1=level1,
+                               num_far=num_far, views=views)
     kuv = _ref.kv_pairs(x[u], x[v], kind, inv_bw, beta, pairwise)
     q_vu = kuv / jnp.maximum(degs[v], _ref.BLOCK_SUM_FLOOR)
     # q_e = p_u q_uv + p_v q_vu with p_i = deg_i / sum(deg); the second
@@ -335,23 +365,27 @@ def _edge_batch_core(x, x_sq, views, cdf, degs, inv_total, inv_t, key, *,
 
 
 @_jit
-def fused_edge_batch(x, x_sq, cdf, degs, inv_total, inv_t, key, *, batch,
-                     kind, inv_bw, beta, pairwise, block_size, num_blocks, n,
-                     s, exact, use_pallas, interpret, bm):
+def fused_edge_batch(x, x_sq, cdf, degs, inv_total, inv_t, key, hstate=None,
+                     *, batch, kind, inv_bw, beta, pairwise, block_size,
+                     num_blocks, n, s, exact, use_pallas, interpret, bm,
+                     level1="blocked", num_far=64):
     """One fused Algorithm 5.1 edge batch: (u, v, weight, q_uv, q_vu)."""
     TRACE_COUNTS["fused_edge_batch"] += 1
     views = _block_views(x, x_sq, block_size)
     return _edge_batch_core(x, x_sq, views, cdf, degs, inv_total, inv_t, key,
-                            batch=batch, kind=kind, inv_bw=inv_bw, beta=beta,
-                            pairwise=pairwise, block_size=block_size,
-                            num_blocks=num_blocks, n=n, s=s, exact=exact,
-                            use_pallas=use_pallas, interpret=interpret, bm=bm)
+                            hstate, batch=batch, kind=kind, inv_bw=inv_bw,
+                            beta=beta, pairwise=pairwise,
+                            block_size=block_size, num_blocks=num_blocks,
+                            n=n, s=s, exact=exact, use_pallas=use_pallas,
+                            interpret=interpret, bm=bm, level1=level1,
+                            num_far=num_far)
 
 
 @_jit
-def edge_batch_scan(x, x_sq, cdf, degs, inv_total, inv_t, keys, *, batch,
-                    kind, inv_bw, beta, pairwise, block_size, num_blocks, n,
-                    s, exact, use_pallas, interpret, bm):
+def edge_batch_scan(x, x_sq, cdf, degs, inv_total, inv_t, keys, hstate=None,
+                    *, batch, kind, inv_bw, beta, pairwise, block_size,
+                    num_blocks, n, s, exact, use_pallas, interpret, bm,
+                    level1="blocked", num_far=64):
     """All T = len(keys) edge batches of the sparsifier in ONE program: a
     ``lax.scan`` over per-batch keys whose body is one fused edge batch.
     The whole Algorithm 5.1 sampling loop runs with a single dispatch and
@@ -361,10 +395,11 @@ def edge_batch_scan(x, x_sq, cdf, degs, inv_total, inv_t, keys, *, batch,
 
     def body(_, k):
         return None, _edge_batch_core(
-            x, x_sq, views, cdf, degs, inv_total, inv_t, k, batch=batch,
-            kind=kind, inv_bw=inv_bw, beta=beta, pairwise=pairwise,
-            block_size=block_size, num_blocks=num_blocks, n=n, s=s,
-            exact=exact, use_pallas=use_pallas, interpret=interpret, bm=bm)
+            x, x_sq, views, cdf, degs, inv_total, inv_t, k, hstate,
+            batch=batch, kind=kind, inv_bw=inv_bw, beta=beta,
+            pairwise=pairwise, block_size=block_size, num_blocks=num_blocks,
+            n=n, s=s, exact=exact, use_pallas=use_pallas,
+            interpret=interpret, bm=bm, level1=level1, num_far=num_far)
 
     _, out = jax.lax.scan(body, None, keys)
     return out
@@ -416,9 +451,10 @@ def fused_sample_exact(x, x_sq, src, bs, key, *, kind, inv_bw, beta, pairwise,
 
 
 @_jit
-def walk_scan(x, x_sq, starts, keys, *, kind, inv_bw, beta, pairwise,
-              block_size, num_blocks, n, s, exact, use_pallas, interpret, bm,
-              rounds, slack, record_path=True):
+def walk_scan(x, x_sq, starts, keys, hstate=None, *, kind, inv_bw, beta,
+              pairwise, block_size, num_blocks, n, s, exact, use_pallas,
+              interpret, bm, rounds, slack, record_path=True,
+              level1="blocked", num_far=64):
     """T-step random walk entirely on device: the frontier is scan carry,
     each step is one fused depth-2 sample (or rejection-exact step when
     ``rounds > 0``).  Returns (endpoints, (T, w) path); with
@@ -432,24 +468,27 @@ def walk_scan(x, x_sq, starts, keys, *, kind, inv_bw, beta, pairwise,
     def body(cur, k):
         if rounds > 0:
             k_l1, k_rs = jax.random.split(k)
-            bs = _masked_sums_any(x, x_sq, cur, k_l1, kind=kind,
+            bs = _masked_sums_any(x, x_sq, cur, k_l1, hstate, kind=kind,
                                   inv_bw=inv_bw, beta=beta,
                                   pairwise=pairwise, block_size=block_size,
                                   num_blocks=num_blocks, n=n, s=s,
                                   exact=exact, use_pallas=use_pallas,
-                                  interpret=interpret, bm=bm)
+                                  interpret=interpret, bm=bm, level1=level1,
+                                  num_far=num_far)
             nxt = _sample_exact_core(x, x_sq, views, cur, bs, k_rs, kind=kind,
                                      inv_bw=inv_bw, beta=beta,
                                      pairwise=pairwise, block_size=block_size,
                                      n=n, rounds=rounds, slack=slack)
         else:
-            nxt, _, _ = _fused_sample(x, x_sq, cur, k, kind=kind,
+            nxt, _, _ = _fused_sample(x, x_sq, cur, k, hstate, kind=kind,
                                       inv_bw=inv_bw, beta=beta,
                                       pairwise=pairwise,
                                       block_size=block_size,
                                       num_blocks=num_blocks, n=n, s=s,
                                       exact=exact, use_pallas=use_pallas,
-                                      interpret=interpret, bm=bm, views=views)
+                                      interpret=interpret, bm=bm,
+                                      level1=level1, num_far=num_far,
+                                      views=views)
         return nxt, (nxt if record_path else None)
 
     end, path = jax.lax.scan(body, starts, keys)
@@ -571,9 +610,10 @@ def signed_endpoint_stat(ends, signs, *, n):
 
 
 @_jit
-def triangle_edge_scan(x, x_sq, u, v, degs, keys, *, kind, inv_bw, beta,
-                       pairwise, block_size, num_blocks, n, s, exact,
-                       use_pallas, interpret, bm):
+def triangle_edge_scan(x, x_sq, u, v, degs, keys, hstate=None, *, kind,
+                       inv_bw, beta, pairwise, block_size, num_blocks, n, s,
+                       exact, use_pallas, interpret, bm, level1="blocked",
+                       num_far=64):
     """Theorem 6.17's per-edge inner loop as ONE program: degree-ordered
     orientation of the (u, v) pairs, ONE masked level-1 read of the
     oriented v frontier (keys[0], shared by every draw -- the §4 caching
@@ -589,10 +629,12 @@ def triangle_edge_scan(x, x_sq, u, v, degs, keys, *, kind, inv_bw, beta,
     uu = jnp.where(prec, u, v)
     vv = jnp.where(prec, v, u)
     kuv = _ref.kv_pairs(x[uu], x[vv], kind, inv_bw, beta, pairwise)
-    bs = _masked_sums_any(x, x_sq, vv, keys[0], kind=kind, inv_bw=inv_bw,
-                          beta=beta, pairwise=pairwise, block_size=block_size,
-                          num_blocks=num_blocks, n=n, s=s, exact=exact,
-                          use_pallas=use_pallas, interpret=interpret, bm=bm)
+    bs = _masked_sums_any(x, x_sq, vv, keys[0], hstate, kind=kind,
+                          inv_bw=inv_bw, beta=beta, pairwise=pairwise,
+                          block_size=block_size, num_blocks=num_blocks, n=n,
+                          s=s, exact=exact, use_pallas=use_pallas,
+                          interpret=interpret, bm=bm, level1=level1,
+                          num_far=num_far)
 
     def body(acc, k):
         w, _ = _sample_core(x, x_sq, views, vv, bs, k, kind=kind,

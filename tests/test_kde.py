@@ -69,6 +69,36 @@ def test_grid_hbe_laplacian():
     assert hbe.evals < 24 * 600  # sublinear per query
 
 
+def test_grid_hbe_far_degenerate_regression():
+    """One bucket holds >90% of the points and every FAR sample lands in
+    it: the seed estimator masked the FAR term to zero (estimate biased
+    low by the whole complement mass); the fix sweeps/resamples the
+    explicit complement, recovering the exact answer when the complement
+    fits in the sample budget."""
+    rng = np.random.default_rng(42)
+    d = 4
+    cluster = rng.normal(0, 0.01, (500, d)).astype(np.float32)
+    out = (rng.normal(0, 0.01, (12, d))
+           + np.array([0.3] + [0.0] * (d - 1))).astype(np.float32)
+    x = np.concatenate([cluster, out]).astype(np.float32)
+    ker = laplacian(bandwidth=4.0)
+    truth = float(ExactKDE(x, ker).query(jnp.asarray(x[:1]))[0])
+    # seed 8: the bucket holds all 500 cluster points (>96% of the data)
+    # and all 16 FAR samples collide with it -- the degenerate case.
+    hbe = GridHBE(x, ker, cell_width=0.2, num_far_samples=16,
+                  max_bucket=512, seed=8)
+    est = float(hbe.query(jnp.asarray(x[:1]))[0])
+    # complement (12 outliers) <= budget -> exact sweep: 500 NEAR + 16
+    # collided FAR + 12 complement evals, and the estimate is exact.
+    assert hbe.evals == 500 + 16 + 12
+    np.testing.assert_allclose(est, truth, rtol=1e-5)
+    # the dropped FAR mass is material: NEAR alone is >2% low
+    near = float(GridHBE(x, ker, cell_width=0.2, num_far_samples=0,
+                         max_bucket=512, seed=8).query(
+                             jnp.asarray(x[:1]))[0])
+    assert abs(near / truth - 1) > 0.02
+
+
 def test_multilevel_structure(data):
     """Alg 4.1: every dyadic segment estimator answers segment sums."""
     x, ker, _ = data
@@ -88,7 +118,8 @@ def test_factory():
     rng = np.random.default_rng(0)
     x = rng.normal(0, 1, (128, 4)).astype(np.float32)
     ker = gaussian(1.0)
-    for name in ("exact", "rs", "stratified", "exact_block", "grid_hbe"):
+    for name in ("exact", "rs", "stratified", "exact_block", "grid_hbe",
+                 "hash"):
         est = make_estimator(name, x, ker, seed=0)
         v = np.asarray(est.query(x[:4]))
         assert v.shape == (4,) and np.all(np.isfinite(v))

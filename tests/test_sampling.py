@@ -246,6 +246,36 @@ def test_neighbor_sampler_tree(graph):
     assert tv(emp, p) < 3.0 * np.sqrt(len(p) / 3000)
 
 
+def test_neighbor_sampler_tree_grid_hbe_factory(graph):
+    """Algorithm 4.11 dyadic descent over a MultiLevelKDE built from
+    GridHBE node estimators -- the paper's composition of the practical
+    hash-based structure with the tree sampler.  The descent's branch
+    probabilities are noisy (1 +- eps)^depth, so the realized law is only
+    approximately k(u, .)/deg(u); draws must still be valid (never the
+    source), carry positive probabilities, and track the target law."""
+    from repro.core.kde.hbe import GridHBE
+    x, ker, k = graph
+    tree = MultiLevelKDE(
+        x, ker,
+        lambda xs, seed: GridHBE(xs, ker, num_far_samples=48,
+                                 max_bucket=64, seed=seed),
+        leaf_size=100)
+    nb = NeighborSampler(x, ker, mode="tree", tree=tree, seed=0)
+    src = 5
+    row = k[src].copy()
+    row[src] = 0
+    p = row / row.sum()
+    m = 800
+    v, probs = nb.sample(np.full(m, src))
+    assert np.all(v != src) and np.all(v >= 0) and np.all(v < len(p))
+    assert np.all(probs > 0) and np.all(probs <= 1.0)
+    emp = np.bincount(v, minlength=len(p)) / m
+    # looser bound than the exact-node test: GridHBE node estimates add
+    # (1 +- eps)^depth distortion on top of sampling noise
+    assert tv(emp, p) < 4.5 * np.sqrt(len(p) / m), tv(emp, p)
+    assert tree.evals > 0 and nb.evals > tree.evals
+
+
 def test_edge_sampler_weight_proportional(graph):
     """Theorem 4.14: edges ~ k(u,v) / sum(w)."""
     x, ker, k = graph
