@@ -110,7 +110,7 @@ def run(quick: bool = False) -> None:
     keys = jax.random.split(jax.random.PRNGKey(1), length)
 
     def fused():
-        end, _ = eng.walk_scan(jnp.asarray(starts, jnp.int32), keys)
+        end, *_ = eng.walk_scan(jnp.asarray(starts, jnp.int32), keys)
         np.asarray(end)
 
     t_fused = _time(fused)

@@ -82,6 +82,7 @@ def noisy_power_method(ksub: jnp.ndarray, iters: int, num_samples: int,
 
     >>> lam, v, _ = noisy_power_method(ksub, 12, 32, jax.random.PRNGKey(0))
     """
+    from repro.ft import guards as _g
     from repro.kernels.kde_sampler import ops as _ops
     from repro.kernels.kde_sampler.sharded import sharded_noisy_power
 
@@ -91,11 +92,15 @@ def noisy_power_method(ksub: jnp.ndarray, iters: int, num_samples: int,
     v0 = v0 / jnp.linalg.norm(v0)
     keys = jax.random.split(k_iter, iters)
     if mesh is not None:
-        lam, v = sharded_noisy_power(mesh, ksub, v0, keys,
-                                     num_samples=num_samples)
+        lam, v, st = sharded_noisy_power(mesh, ksub, v0, keys,
+                                         num_samples=num_samples)
     else:
-        lam, v = _ops.noisy_power_scan(ksub, v0, keys,
-                                       num_samples=num_samples)
+        lam, v, st = _ops.noisy_power_scan(ksub, v0, keys,
+                                           num_samples=num_samples)
+    # stalled iterations (ZERO_MASS) keep the previous iterate -- benign;
+    # NaN/Inf anywhere in the scan is fatal under REPRO_CHECKS=1
+    _g.raise_on_status(st, context="noisy_power_method",
+                       allow=_g.ZERO_MASS)
     return float(lam), np.asarray(v, np.float64), iters * t * num_samples
 
 

@@ -208,4 +208,7 @@ def make_estimator(name: str, x, kernel: Kernel, seed: int = 0,
     if name == "hash":
         from repro.core.kde.hashed import HashedKDE
         return HashedKDE(x, kernel, seed=seed, **kw)
+    if name == "robust":
+        from repro.ft.guards import RobustEstimator
+        return RobustEstimator(x, kernel, seed=seed, **kw)
     raise ValueError(f"unknown estimator {name!r}")

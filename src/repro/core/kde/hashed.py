@@ -22,6 +22,7 @@ import numpy as np
 
 from repro.core.kde.base import KDEBase
 from repro.core.kernels_fn import Kernel
+from repro.ft import guards as _g
 
 
 class HashedKDE(KDEBase):
@@ -49,6 +50,11 @@ class HashedKDE(KDEBase):
         self.max_bucket = int(max_bucket)
         self._key = jax.random.PRNGKey(seed)
         self.engine = None
+        # guards (DESIGN.md §11): last_status is the most recent batch's
+        # word, status the or-fold over the estimator's lifetime
+        self.last_status = 0
+        self.status = 0
+        self.flag_counts: dict = {}
         if mesh is not None:
             from repro.kernels.kde_hash.sharded import ShardedHashTable
             self.engine = ShardedHashTable(
@@ -78,19 +84,32 @@ class HashedKDE(KDEBase):
         self._key, k = jax.random.split(self._key)
         return k
 
+    def _note(self, st) -> int:
+        s = int(np.uint32(jax.device_get(st)))
+        self.last_status = s
+        self.status |= s
+        _g.count_flags(self.flag_counts, s)
+        _g.raise_on_status(s, context="HashedKDE.query",
+                           allow=_g.BUCKET_OVERFLOW | _g.HT_HEAVY)
+        return s
+
     def query(self, y: jnp.ndarray) -> jnp.ndarray:
         """NEAR-exact + FAR-sampled row-sum estimates (Section 3.1): one
-        device program (one psum on the mesh path) per batch."""
+        device program (one psum on the mesh path) per batch.  The batch's
+        status word lands in ``last_status`` (or-folded into ``status``);
+        fatal flags raise under ``REPRO_CHECKS=1``."""
         y = jnp.asarray(y, jnp.float32)
         if self.engine is not None:
-            est, cnt = self.engine.query(y, self._split())
+            est, cnt, st = self.engine.query(y, self._split())
             self.evals += int(np.asarray(cnt).sum()) \
                 + y.shape[0] * self.engine.num_far * self.engine.num_shards
+            self._note(st)
             return est
-        est, cnt = self._ops.hashed_query(self.x, y, self.state,
-                                          self._split(), **self._cfg)
+        est, cnt, st = self._ops.hashed_query(self.x, y, self.state,
+                                              self._split(), **self._cfg)
         self.evals += int(np.asarray(cnt).sum()) \
             + y.shape[0] * self._cfg["num_far"]
+        self._note(st)
         return est
 
     def degrees(self, batch: int = 1024) -> np.ndarray:

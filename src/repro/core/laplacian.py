@@ -34,17 +34,23 @@ def cg_laplacian(g: SparseGraph, b: np.ndarray, iters: int = 200,
     step of Section 5.1.1), fused: one ``lax.while_loop`` program on
     device, segment-sum matvecs, best-iterate tracking for float32
     stability.  Costs no kernel evals (operates on the materialized
-    sparsifier); O(m) work per iteration.
+    sparsifier); O(m) work per iteration.  Non-finite flags in the
+    program's status word raise under ``REPRO_CHECKS=1``;
+    ``CG_NO_CONVERGE`` stays advisory because the returned residual
+    already tells callers how far the solve got.
 
     >>> sol, res = cg_laplacian(g, b, iters=300)
     """
+    from repro.ft import guards as _g
     from repro.kernels.kde_sampler import ops as _ops
 
     b = np.asarray(b, np.float64)
-    sol, res = _ops.laplacian_cg(
+    sol, res, st = _ops.laplacian_cg(
         jnp.asarray(g.src, jnp.int32), jnp.asarray(g.dst, jnp.int32),
         jnp.asarray(g.weight, jnp.float32), jnp.asarray(b, jnp.float32),
         jnp.float32(tol), n=int(g.n), iters=int(iters))
+    _g.raise_on_status(st, context="cg_laplacian",
+                       allow=_g.CG_NO_CONVERGE)
     return project_ones(np.asarray(sol, np.float64)), float(res)
 
 

@@ -31,9 +31,16 @@ one level-1 read.
 
 Theorem 4.12's exactness step (O(1/tau) rejection rounds) is implemented in
 ``sample_exact`` as a fixed-round vectorized accept/reject program.
+
+Every fused program also returns a ``repro.ft.guards`` status bitmask; the
+sampler or-folds them into ``self.status`` / ``self.flag_counts`` and, under
+``REPRO_CHECKS=1``, raises ``EstimationError`` on fatal flags.  Rejection
+fallbacks (Theorem 4.12's all-rounds-reject event) are counted in
+``exact_fallbacks`` and compared against the (1 - 1/c)^rounds prediction.
 """
 from __future__ import annotations
 
+from collections import Counter
 from typing import Optional, Tuple
 
 import jax
@@ -43,6 +50,12 @@ import numpy as np
 from repro.core.kde.base import ExactBlockKDE, StratifiedKDE
 from repro.core.kde.multilevel import MultiLevelKDE
 from repro.core.kernels_fn import Kernel
+from repro.ft import guards as _g
+
+# Flags a healthy pipeline may legitimately raise: truncated buckets and
+# heavy HT samples are accuracy (not validity) signals, and rejection
+# exhaustion has a documented fallback (Theorem 4.12).
+_BENIGN = _g.BUCKET_OVERFLOW | _g.HT_HEAVY | _g.REJECT_EXHAUSTED
 
 
 class NeighborSampler:
@@ -88,6 +101,12 @@ class NeighborSampler:
         self.level1 = level1
         self._rng = np.random.default_rng(seed)
         self._key = jax.random.PRNGKey(seed)
+        # or-fold of every program's status word + per-flag event counts
+        # (DESIGN.md §11); rejection-fallback accounting for Theorem 4.12.
+        self.status = 0
+        self.flag_counts: Counter = Counter()
+        self.exact_draws = 0
+        self.exact_fallbacks = 0
         self._engine = None
         self._hash = None
         self._hstate = None
@@ -206,6 +225,15 @@ class NeighborSampler:
         self._key, k = jax.random.split(self._key)
         return k
 
+    def _note(self, st, context: str) -> int:
+        """Fold one program's status word into the counters, then apply
+        the ``REPRO_CHECKS`` policy (fatal flags raise, benign ones pass)."""
+        s = int(np.uint32(jax.device_get(st)))
+        self.status |= s
+        _g.count_flags(self.flag_counts, s)
+        _g.raise_on_status(s, context=context, allow=_BENIGN)
+        return s
+
     @property
     def hash_estimator(self):
         """The shared hashed-KDE estimator behind ``level1="hash"`` --
@@ -256,23 +284,24 @@ class NeighborSampler:
         dig = self._digest(src32)
         if self._l1_cache is not None and self._l1_cache[0] == dig:
             if self._engine is not None:
-                nb, prob = self._engine.sample_from_block_sums(
+                nb, prob, st = self._engine.sample_from_block_sums(
                     src_dev, self._l1_cache[1], self._next_key())
             else:
-                nb, prob = self._ops.sample_from_block_sums(
+                nb, prob, st = self._ops.sample_from_block_sums(
                     self.x, self.x_sq, src_dev, self._l1_cache[1],
                     self._next_key(), **self._l2_cfg)
         else:
             if self._engine is not None:
-                nb, prob, bs = self._engine.fused_sample(src_dev,
-                                                         self._next_key())
+                nb, prob, bs, st = self._engine.fused_sample(
+                    src_dev, self._next_key())
             else:
-                nb, prob, bs = self._ops.fused_sample(
+                nb, prob, bs, st = self._ops.fused_sample(
                     self.x, self.x_sq, src_dev, self._next_key(),
                     hstate=self._hstate, **self._cfg)
             self._count(self._level1_evals(len(src)))
             self._l1_cache = (dig, bs)
         self._count(len(src) * self.block_size)
+        self._note(st, "NeighborSampler.sample")
         return np.asarray(nb), np.asarray(prob)
 
     def prob_of(self, src: np.ndarray, dst: np.ndarray) -> np.ndarray:
@@ -372,14 +401,20 @@ class NeighborSampler:
         src_dev = jnp.asarray(src32)
         bs = self._level1(src32, src_dev)
         if self._engine is not None:
-            cur = self._engine.sample_exact(src_dev, bs, self._next_key(),
-                                            rounds=rounds, slack=slack)
+            cur, st, fb = self._engine.sample_exact(
+                src_dev, bs, self._next_key(), rounds=rounds, slack=slack)
         else:
-            cur = self._ops.fused_sample_exact(
+            cur, st, fb = self._ops.fused_sample_exact(
                 self.x, self.x_sq, src_dev, bs, self._next_key(),
                 rounds=rounds, slack=slack, **self._l2_cfg)
         self._count((rounds + 1) * len(src) * self.block_size
                     + rounds * len(src))
+        self._note(st, "NeighborSampler.sample_exact")
+        self.exact_draws += len(src)
+        self.exact_fallbacks += int(jax.device_get(fb))
+        _g.warn_fallback_rate(self.exact_fallbacks, self.exact_draws,
+                              rounds, slack,
+                              context="NeighborSampler.sample_exact")
         return np.asarray(cur)
 
     def _sample_exact_host(self, src: np.ndarray, rounds: int,
@@ -438,7 +473,9 @@ class NeighborSampler:
         self._count(self._level1_evals(drawn)
                     + drawn * self.block_size + drawn)
         self._l1_cache = None  # frontier moved; cached sums are stale
-        return tuple(np.asarray(a).reshape(-1)[:t] for a in out)
+        *data, st = out
+        self._note(st, "NeighborSampler.edge_batches")
+        return tuple(np.asarray(a).reshape(-1)[:t] for a in data)
 
     # ------------------------------------------------------------------ #
     def triangle_batches(self, u: np.ndarray, v: np.ndarray,
@@ -459,17 +496,18 @@ class NeighborSampler:
         keys = jax.random.split(self._next_key() if key is None else key,
                                 int(num_draws) + 1)
         if self._engine is not None:
-            uu, vv, w_hat = self._engine.triangle_edge_scan(
+            uu, vv, w_hat, st = self._engine.triangle_edge_scan(
                 jnp.asarray(u, jnp.int32), jnp.asarray(v, jnp.int32),
                 jnp.asarray(degs_device), keys)
         else:
-            uu, vv, w_hat = self._ops.triangle_edge_scan(
+            uu, vv, w_hat, st = self._ops.triangle_edge_scan(
                 self.x, self.x_sq, jnp.asarray(u, jnp.int32),
                 jnp.asarray(v, jnp.int32), jnp.asarray(degs_device), keys,
                 hstate=self._hstate, **self._cfg)
         self._count(self._level1_evals(m) + m
                     + int(num_draws) * (m * self.block_size + m))
         self._l1_cache = None  # frontier moved; cached sums are stale
+        self._note(st, "NeighborSampler.triangle_batches")
         return np.asarray(uu), np.asarray(vv), np.asarray(w_hat)
 
     # ------------------------------------------------------------------ #
@@ -487,11 +525,11 @@ class NeighborSampler:
         keys = jax.random.split(self._next_key() if key is None else key,
                                 length)
         if self._engine is not None:
-            end, path = self._engine.walk_scan(
+            end, path, st, fb = self._engine.walk_scan(
                 starts_dev, keys, rounds=rounds if exact else 0,
                 slack=slack, record_path=bool(record_path))
         else:
-            end, path = self._ops.walk_scan(
+            end, path, st, fb = self._ops.walk_scan(
                 self.x, self.x_sq, starts_dev, keys,
                 hstate=self._hstate, rounds=rounds if exact else 0,
                 slack=slack, record_path=bool(record_path), **self._cfg)
@@ -501,6 +539,13 @@ class NeighborSampler:
             per_step += rounds * (w * self.block_size + w)
         self._count(length * per_step)
         self._l1_cache = None  # frontier moved; cached sums are stale
+        self._note(st, "NeighborSampler.walk")
+        if exact:
+            self.exact_draws += w * length
+            self.exact_fallbacks += int(jax.device_get(fb))
+            _g.warn_fallback_rate(self.exact_fallbacks, self.exact_draws,
+                                  rounds, slack,
+                                  context="NeighborSampler.walk")
         return np.asarray(end), (np.asarray(path) if record_path else None)
 
 
@@ -515,6 +560,11 @@ def shared_level1_estimator(nbr: NeighborSampler, estimator: str,
     standalone ``make_estimator`` over the sampler's device dataset."""
     from repro.core.kde.base import make_estimator
 
+    if estimator == "robust":
+        # the staged-fallback wrapper builds its own hash->stratified->
+        # exact chain; sharing nbr's level-1 would tie its degradation
+        # policy to the sampler's cache, so it gets a standalone build
+        return make_estimator("robust", nbr.x, nbr.kernel, seed=seed)
     if estimator == "hash":
         if nbr.level1 == "hash":
             return nbr.hash_estimator

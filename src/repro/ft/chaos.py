@@ -1,0 +1,265 @@
+"""Fault-injection harness for the estimation runtime (DESIGN.md §11).
+
+Each injector corrupts ONE well-defined thing (dataset rows, the kernel
+bandwidth, the frozen hash layout, the heartbeat stream) and each scenario
+drives a real pipeline over the corrupted input, asking one question: does
+the runtime *detect* the fault (status flag / ``EstimationError``) or
+*survive* it (finite, sane output)?  Silent garbage is the only failure.
+
+The scenarios run in CI under ``REPRO_CHECKS=1`` (``tests/test_chaos.py``),
+where fatal flags raise -- so "detected" usually means "raised
+``EstimationError`` with the right flag name in the message".
+
+>>> from repro.ft import chaos
+>>> report = chaos.run_scenario("nan_rows_hashed_query")
+>>> report["detected"] or report["survived"]
+True
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ft import guards
+
+# ------------------------------------------------------------- injectors
+
+
+def nan_rows(x: np.ndarray, rows, value: float = np.nan) -> np.ndarray:
+    """Overwrite whole dataset rows with NaN (or ``value=np.inf``)."""
+    out = np.array(x, np.float32, copy=True)
+    out[np.asarray(rows)] = np.float32(value)
+    return out
+
+
+def duplicate_points(x: np.ndarray, frac: float, rng) -> np.ndarray:
+    """Collapse a ``frac`` fraction of rows onto row 0 (mass pile-up)."""
+    out = np.array(x, np.float32, copy=True)
+    k = max(int(frac * len(out)), 1)
+    idx = rng.choice(len(out), size=k, replace=False)
+    out[idx] = out[0]
+    return out
+
+
+def tiny_bandwidth_kernel(make, bandwidth: float = 1e-30):
+    """A kernel whose bandwidth underflows every pairwise value to 0 --
+    the zero-mass degenerate limit.  (Exactly 0.0 is rejected eagerly by
+    the kernel constructors' ``1/h`` arithmetic, which is itself the
+    first line of defense; the runtime guards cover the *underflow*.)"""
+    return make(bandwidth)
+
+
+def corrupt_hash_state(state, rng, n: int, frac: float = 0.25):
+    """Flip a fraction of stored member indices out of ``[0, n)`` -- the
+    silent-corruption case: JAX gathers clamp out-of-range indices, so
+    without ``guards.STATE_CORRUPT`` the query would return plausible
+    numbers computed from the wrong rows."""
+    members = np.array(state.members, np.int32, copy=True)
+    flat = members.reshape(-1)
+    k = max(int(frac * flat.size), 1)
+    idx = rng.choice(flat.size, size=k, replace=False)
+    flat[idx] = np.int32(n + 1 + rng.integers(0, 7, size=k))
+    return state._replace(members=jnp.asarray(members))
+
+
+def adversarial_far_field(n: int, d: int, rng):
+    """Dataset + queries engineered so ONE far-field point carries nearly
+    all of the row mass: the bulk sits ~100 bandwidths away (kernel value
+    underflows to 0), one point sits a couple of grid cells from the
+    queries -- outside every NEAR bucket, close enough to dominate.  A
+    Horvitz-Thompson far sample that hits it IS the whole estimate
+    (``guards.HT_HEAVY``)."""
+    x = rng.standard_normal((n, d)).astype(np.float32) + 100.0
+    x[0] = 0.0
+    x[0, 0] = 2.0                               # the lone heavy point
+    y = rng.standard_normal((8, d)).astype(np.float32) * 1e-3
+    return x, y
+
+
+def silent_hosts(hosts: int, silent, timeout_s: float = 10.0,
+                 now0: float = 0.0):
+    """Watchdog scenario: ``silent`` hosts never heartbeat.  Returns the
+    decision dict after the timeout has elapsed for everyone."""
+    from repro.ft.watchdog import Watchdog
+
+    wd = Watchdog(hosts=hosts, heartbeat_timeout_s=timeout_s, now=now0)
+    silent = set(int(s) for s in silent)
+    for h in range(hosts):
+        if h not in silent:
+            wd.beat(h, 1.0, now=now0 + 2.0 * timeout_s)
+    return wd.decide(now=now0 + 2.5 * timeout_s)
+
+
+# ------------------------------------------------------------- scenarios
+# Every scenario returns {"detected": bool, "survived": bool, "detail": str}
+# -- detected = a guard fired (flag observed, or EstimationError raised
+# under REPRO_CHECKS); survived = the pipeline produced finite sane output.
+
+
+def _dataset(rng, n: int = 192, d: int = 3) -> np.ndarray:
+    return rng.standard_normal((n, d)).astype(np.float32)
+
+
+def _outcome(fn: Callable[[], tuple]) -> Dict:
+    """Run one scenario body (-> (status int, survived bool, detail));
+    an ``EstimationError`` counts as detection, any other exception is a
+    genuine harness failure and propagates."""
+    try:
+        status, survived, detail = fn()
+    except guards.EstimationError as e:
+        return {"detected": True, "survived": False, "detail": str(e)}
+    return {"detected": bool(status), "survived": bool(survived),
+            "detail": detail or guards.decode_status(status)}
+
+
+def _nan_rows_hashed_query(rng):
+    from repro.core.kde.hashed import HashedKDE
+    from repro.core.kernels_fn import gaussian
+
+    x = nan_rows(_dataset(rng), rows=[3, 17, 40])
+    est = HashedKDE(x, gaussian(1.0), seed=0, max_bucket=32,
+                    num_far_samples=16)
+    vals = np.asarray(est.query(jnp.asarray(x[:16])))
+    return est.status, np.all(np.isfinite(vals)), ""
+
+
+def _inf_rows_sampler(rng):
+    from repro.core.kernels_fn import gaussian
+    from repro.core.sampling.edge import NeighborSampler
+
+    x = nan_rows(_dataset(rng), rows=[5], value=np.inf)
+    nbr = NeighborSampler(x, gaussian(1.0), mode="blocked", block_size=32,
+                          seed=0)
+    nb, prob = nbr.sample(np.arange(16))
+    return nbr.status, np.all(np.isfinite(prob)), ""
+
+
+def _tiny_bandwidth_zero_mass(rng):
+    from repro.core.kernels_fn import gaussian
+    from repro.core.sampling.edge import NeighborSampler
+
+    ker = tiny_bandwidth_kernel(gaussian)     # every k(u, v) underflows
+    nbr = NeighborSampler(_dataset(rng), ker, mode="blocked",
+                          block_size=32, seed=0)
+    nb, prob = nbr.sample(np.arange(16))
+    return nbr.status, np.all(np.isfinite(prob)), ""
+
+
+def _duplicate_points_survive(rng):
+    from repro.core.kernels_fn import gaussian
+    from repro.core.sampling.edge import NeighborSampler
+
+    x = duplicate_points(_dataset(rng), frac=0.5, rng=rng)
+    nbr = NeighborSampler(x, gaussian(1.0), mode="blocked", block_size=32,
+                          seed=0)
+    nb, prob = nbr.sample(np.arange(16))
+    ok = (np.all(np.isfinite(prob)) and np.all(prob > 0)
+          and np.all(nb != np.arange(16)))
+    return int(nbr.status) & guards.FATAL, ok, ""
+
+
+def _corrupt_hash_state(rng):
+    from repro.core.kde.hashed import HashedKDE
+    from repro.core.kernels_fn import gaussian
+
+    x = _dataset(rng)
+    est = HashedKDE(x, gaussian(1.0), seed=0, max_bucket=32,
+                    num_far_samples=16)
+    est.state = corrupt_hash_state(est.state, rng, n=len(x))
+    vals = np.asarray(est.query(jnp.asarray(x[:16])))
+    return est.status & guards.STATE_CORRUPT, np.all(np.isfinite(vals)), ""
+
+
+def _adversarial_far_field(rng):
+    from repro.core.kde.hashed import HashedKDE
+    from repro.core.kernels_fn import gaussian
+
+    x, y = adversarial_far_field(512, 3, rng)
+    est = HashedKDE(x, gaussian(0.5), seed=0, max_bucket=16,
+                    num_far_samples=16)
+    seen = 0
+    for _ in range(64):                    # the heavy hit is probabilistic
+        np.asarray(est.query(jnp.asarray(y)))
+        seen |= est.status
+        if seen & guards.HT_HEAVY:
+            break
+    return seen & guards.HT_HEAVY, True, ""
+
+
+def _reject_exhaustion(rng):
+    from repro.core.kernels_fn import gaussian
+    from repro.core.sampling.edge import NeighborSampler
+
+    import warnings
+
+    # bandwidth 1.0 keeps every row's mass healthy (no ZERO_MASS); the
+    # injected fault is ONLY the zero-headroom accept test below
+    nbr = NeighborSampler(_dataset(rng, n=256), gaussian(1.0),
+                          mode="blocked", block_size=32,
+                          samples_per_block=2, seed=0)
+    # slack ~1 gives the accept test no headroom: all-rounds-reject events
+    # are near-certain, the documented fallback path must engage + count
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        cur = nbr.sample_exact(np.arange(64), rounds=2, slack=1.0 + 1e-6)
+    ok = (np.all(np.isfinite(cur)) and nbr.exact_fallbacks >= 0
+          and nbr.exact_draws == 64)
+    return nbr.status & guards.REJECT_EXHAUSTED, ok, \
+        f"fallbacks={nbr.exact_fallbacks}/{nbr.exact_draws}"
+
+
+def _robust_escalation(rng):
+    from repro.core.kernels_fn import gaussian
+
+    x = _dataset(rng)
+    est = guards.RobustEstimator(x, gaussian(1.0), seed=0,
+                                 stage_kw={"hash": {"max_bucket": 32,
+                                                    "num_far_samples": 16}})
+    # poison the first stage AFTER build: its queries go bad, the wrapper
+    # must escalate to stratified/exact and still return sane numbers
+    hash_stage = est._stage("hash")
+    hash_stage.state = corrupt_hash_state(hash_stage.state, rng, n=len(x),
+                                          frac=1.0)
+    vals = np.asarray(est.query(jnp.asarray(x[:16])))
+    recovered = np.all(np.isfinite(vals)) and np.all(vals > 0)
+    escalated = sum(est.escalations.values()) > 0 or est.retries > 0
+    return est.status, bool(recovered and escalated), \
+        f"escalations={est.escalations} retries={est.retries}"
+
+
+def _silent_host_watchdog(rng):
+    res = silent_hosts(hosts=4, silent=[2], timeout_s=10.0)
+    detected = 2 in res["dead"]
+    return int(detected), res["dead"] == [2], str(res)
+
+
+SCENARIOS: Dict[str, Callable] = {
+    "nan_rows_hashed_query": _nan_rows_hashed_query,
+    "inf_rows_sampler": _inf_rows_sampler,
+    "tiny_bandwidth_zero_mass": _tiny_bandwidth_zero_mass,
+    "duplicate_points_survive": _duplicate_points_survive,
+    "corrupt_hash_state": _corrupt_hash_state,
+    "adversarial_far_field": _adversarial_far_field,
+    "reject_exhaustion": _reject_exhaustion,
+    "robust_escalation": _robust_escalation,
+    "silent_host_watchdog": _silent_host_watchdog,
+}
+
+#: scenarios whose point is graceful SURVIVAL (no fatal flag expected);
+#: everything else must be DETECTED (flag set or EstimationError raised)
+SURVIVE_OK = frozenset((
+    "duplicate_points_survive", "reject_exhaustion", "robust_escalation"))
+
+
+def run_scenario(name: str, seed: int = 0) -> Dict:
+    """Run one registered scenario; returns the outcome dict."""
+    rng = np.random.default_rng(seed)
+    return _outcome(lambda: SCENARIOS[name](rng))
+
+
+def run_all(seed: int = 0) -> Dict[str, Dict]:
+    """Run every scenario (CI entry point used by ``tests/test_chaos.py``)."""
+    return {name: run_scenario(name, seed=seed) for name in SCENARIOS}

@@ -1,0 +1,341 @@
+"""Device-side status flags and the staged estimator fallback (DESIGN.md §11).
+
+The paper's guarantees (Definition 1.1's ``(eps, tau)`` contract, the
+Theorem 4.12 rejection sampler) assume the KDE oracle returns sane values.
+Every fused program therefore returns a compact ``uint32`` **status
+bitmask** next to its result -- cheap in-program reductions over values the
+program already computed, so the flags cost no extra kernel evaluations and
+(on the sharded engines) no extra collectives.
+
+Bit layout (documented in DESIGN.md §11)::
+
+    NONFINITE         1<<0  NaN/Inf in kernel evals / level-1 sums
+    ZERO_MASS         1<<1  a query row's blocks all sat at the 1e-12 floor
+    REJECT_EXHAUSTED  1<<2  a rejection draw used all rounds without accepting
+    BUCKET_OVERFLOW   1<<3  a hash bucket was truncated at max_bucket
+    HT_HEAVY          1<<4  a Horvitz-Thompson far-field weight blew up
+    STATE_CORRUPT     1<<5  hash-state member indices out of range
+    CG_NO_CONVERGE    1<<6  CG finished above its residual tolerance
+    NONFINITE_RESULT  1<<7  the program's *output* is NaN/Inf
+
+Flags are advisory by default; with ``REPRO_CHECKS=1`` every consumer turns
+them into hard ``EstimationError``s via :func:`raise_on_status`, and
+:func:`checked` wraps a program in ``jax.experimental.checkify`` so the
+float checks fire inside the trace itself.
+
+:class:`RobustEstimator` is the degradation policy on top of the flags: a
+Definition 1.1 estimator that retries flagged draws with re-keyed RNG and
+escalates hash -> stratified -> exact per query row, recording the cost in
+the ordinary ``.evals`` counters.
+"""
+from __future__ import annotations
+
+import functools
+import os
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NONFINITE = 1 << 0
+ZERO_MASS = 1 << 1
+REJECT_EXHAUSTED = 1 << 2
+BUCKET_OVERFLOW = 1 << 3
+HT_HEAVY = 1 << 4
+STATE_CORRUPT = 1 << 5
+CG_NO_CONVERGE = 1 << 6
+NONFINITE_RESULT = 1 << 7
+
+STATUS_NAMES = {
+    NONFINITE: "NONFINITE",
+    ZERO_MASS: "ZERO_MASS",
+    REJECT_EXHAUSTED: "REJECT_EXHAUSTED",
+    BUCKET_OVERFLOW: "BUCKET_OVERFLOW",
+    HT_HEAVY: "HT_HEAVY",
+    STATE_CORRUPT: "STATE_CORRUPT",
+    CG_NO_CONVERGE: "CG_NO_CONVERGE",
+    NONFINITE_RESULT: "NONFINITE_RESULT",
+}
+
+#: flags that a re-keyed retry can plausibly clear (transient sampling luck)
+RETRYABLE = REJECT_EXHAUSTED | HT_HEAVY
+#: flags that mean the estimate itself is garbage and must escalate
+FATAL = NONFINITE | ZERO_MASS | STATE_CORRUPT | NONFINITE_RESULT
+
+
+def decode_status(status) -> list:
+    """Human-readable flag names set in an integer/array status word."""
+    s = int(np.asarray(status))
+    return [name for bit, name in STATUS_NAMES.items() if s & bit]
+
+
+def checks_enabled() -> bool:
+    """True when ``REPRO_CHECKS=1`` -- flags become hard errors."""
+    return os.environ.get("REPRO_CHECKS", "0") not in ("", "0")
+
+
+def ht_bound() -> float:
+    """Static HT inverse-probability weight bound (``REPRO_HT_BOUND``)."""
+    return float(os.environ.get("REPRO_HT_BOUND", "4096"))
+
+
+def ht_frac() -> float:
+    """Fraction of |far estimate| one sample may contribute before the
+    draw is flagged ``HT_HEAVY`` (``REPRO_HT_FRAC``)."""
+    return float(os.environ.get("REPRO_HT_FRAC", "0.95"))
+
+
+class EstimationError(RuntimeError):
+    """A fused program raised a status flag under ``REPRO_CHECKS=1``."""
+
+
+def raise_on_status(status, context: str = "", allow: int = 0) -> int:
+    """Host-side check point: raise when checks are on and flags are set.
+
+    Returns the (python int) status word either way so callers can
+    accumulate it into their counters.  ``allow`` masks flags that the
+    caller handles itself (e.g. a sampler that counts rejection fallbacks).
+    """
+    s = int(np.asarray(status))
+    bad = s & ~allow
+    if bad and checks_enabled():
+        raise EstimationError(
+            f"{context or 'fused program'}: status flags "
+            f"{decode_status(bad)} (status=0x{s:x})")
+    return s
+
+
+def count_flags(counter: dict, status) -> dict:
+    """Accumulate per-flag event counts into ``counter`` (name -> int)."""
+    s = int(np.asarray(status))
+    for bit, name in STATUS_NAMES.items():
+        if s & bit:
+            counter[name] = counter.get(name, 0) + 1
+    return counter
+
+
+# --------------------------------------------------------------- jnp helpers
+# All helpers below are trace-safe reductions over values the calling
+# program already holds -- no new kernel evaluations, no new collectives.
+
+def flag_if(cond, flag: int):
+    """uint32 ``flag`` where ``cond`` (scalar bool) else 0."""
+    return jnp.where(cond, jnp.uint32(flag), jnp.uint32(0))
+
+
+def merge(*statuses):
+    """Bitwise-or an arbitrary number of uint32 status words."""
+    out = jnp.uint32(0)
+    for s in statuses:
+        out = out | jnp.asarray(s, jnp.uint32)
+    return out
+
+
+def nonfinite_status(*arrays, flag: int = NONFINITE):
+    """``flag`` if any element of any array is NaN/Inf."""
+    bad = False
+    for a in arrays:
+        bad = jnp.logical_or(bad, jnp.any(~jnp.isfinite(a)))
+    return flag_if(bad, flag)
+
+
+def sums_status(bs, floor: float):
+    """Status of a (m, B) level-1 block-sum read: NONFINITE for NaN/Inf,
+    ZERO_MASS when some row's blocks all sat at the clamping floor."""
+    bs = jnp.asarray(bs)
+    nf = jnp.any(~jnp.isfinite(bs))
+    zero = jnp.any(jnp.all(bs <= 2.0 * floor, axis=-1))
+    return merge(flag_if(nf, NONFINITE), flag_if(zero, ZERO_MASS))
+
+
+def totals_status(tot, num_blocks: int, floor: float):
+    """Status from replicated row *totals* (post-psum on the mesh path):
+    same contract as :func:`sums_status` without needing the blocks."""
+    tot = jnp.asarray(tot)
+    nf = jnp.any(~jnp.isfinite(tot))
+    zero = jnp.any(tot <= 2.0 * floor * num_blocks)
+    return merge(flag_if(nf, NONFINITE), flag_if(zero, ZERO_MASS))
+
+
+def result_status(*arrays):
+    """NONFINITE_RESULT if any program output element is NaN/Inf."""
+    return nonfinite_status(*arrays, flag=NONFINITE_RESULT)
+
+
+# ----------------------------------------------------------- checkify mode
+def checked(fn):
+    """Wrap a jittable program with ``jax.experimental.checkify`` float
+    checks: under the debug mode the NaN/Inf conditions the status bits
+    summarize become hard in-trace errors with source locations."""
+    from jax.experimental import checkify
+    cfn = checkify.checkify(fn, errors=checkify.float_checks)
+
+    @functools.wraps(fn)
+    def run(*args, **kw):
+        err, out = cfn(*args, **kw)
+        err.throw()
+        return out
+    return run
+
+
+# -------------------------------------------------------- staged fallback
+class RobustEstimator:
+    """Definition 1.1 estimator with staged degradation (DESIGN.md §11).
+
+    Wraps the ordinary ``make_estimator`` backends in the escalation chain
+    ``hash -> stratified -> exact`` (the hierarchy BIMW21 / SSX25 treat as
+    interchangeable oracles).  Per query batch it
+
+    1. runs the cheapest stage and reads its ``last_status`` word,
+    2. retries rows whose estimate is non-finite / non-positive (or whose
+       batch raised a retryable flag) once with re-keyed RNG -- the
+       randomized stages advance their PRNG key per call, so the retry is
+       a fresh draw for free,
+    3. escalates still-bad rows to the next stage; the final exact stage
+       is always accepted.
+
+    Every stage charges the shared ``.evals`` counter, so the cost of
+    degradation stays auditable in the Section 7 accounting.  The chain is
+    built lazily: a clean workload never pays for the exact oracle.
+    """
+
+    def __init__(self, x, kernel, seed: int = 0,
+                 stages=("hash", "stratified", "exact"), max_retries: int = 1,
+                 stage_kw: dict | None = None, **kw):
+        self.x = jnp.asarray(x, jnp.float32)
+        self.x_sq = jnp.sum(self.x * self.x, axis=-1)
+        self.kernel = kernel
+        self.n = int(self.x.shape[0])
+        self.d = int(self.x.shape[1])
+        self.stage_names = tuple(stages)
+        self.max_retries = int(max_retries)
+        self._seed = int(seed)
+        self._kw = dict(kw)
+        self._stage_kw = dict(stage_kw or {})
+        self._stages = {}
+        self.status = 0
+        self.flag_counts: dict = {}
+        self.retries = 0
+        self.escalations = {name: 0 for name in self.stage_names[1:]}
+
+    def _stage(self, name: str):
+        if name not in self._stages:
+            from repro.core.kde.base import make_estimator
+            kw = dict(self._kw)
+            kw.update(self._stage_kw.get(name, {}))
+            self._stages[name] = make_estimator(name, self.x, self.kernel,
+                                                seed=self._seed, **kw)
+        return self._stages[name]
+
+    @property
+    def evals(self) -> int:
+        """Total kernel evaluations across every stage touched so far."""
+        return sum(int(s.evals) for s in self._stages.values())
+
+    @evals.setter
+    def evals(self, value: int):
+        # consumers reset counters by assignment; push the reset down
+        for s in self._stages.values():
+            s.evals = 0
+        if int(value) != 0:
+            raise ValueError("RobustEstimator.evals can only be reset to 0")
+
+    @staticmethod
+    def _bad_rows(vals) -> np.ndarray:
+        v = np.asarray(vals, np.float64)
+        return ~np.isfinite(v) | (v <= 0.0)
+
+    def query(self, y: jnp.ndarray) -> jnp.ndarray:
+        """(m, d) -> (m,) row-sum estimates, degraded per row as needed.
+
+        A non-final stage that *raises* ``EstimationError`` (its own
+        ``REPRO_CHECKS`` policy firing) is treated like an all-bad batch
+        and escalated -- the wrapper IS the recovery path, so only a
+        failure of the final stage propagates."""
+        y = jnp.asarray(y, jnp.float32)
+        m = int(y.shape[0])
+        out = np.full((m,), np.nan, np.float64)
+        pending = np.arange(m)
+        for depth, name in enumerate(self.stage_names):
+            if pending.size == 0:
+                break
+            stage = self._stage(name)
+            if depth > 0:
+                self.escalations[name] += int(pending.size)
+            last = depth == len(self.stage_names) - 1
+            sub = y[jnp.asarray(pending)]
+            try:
+                vals = np.asarray(stage.query(sub), np.float64)
+            except EstimationError:
+                if last:
+                    raise
+                status = int(np.asarray(getattr(stage, "status", 0)))
+                self.status |= status
+                count_flags(self.flag_counts, status)
+                continue                    # escalate every pending row
+            status = int(np.asarray(getattr(stage, "last_status", 0)))
+            bad = self._bad_rows(vals)
+            if (status & FATAL) and not last:
+                # batch-level corruption: per-row values may LOOK sane
+                # (clamped gathers read the wrong rows), so no row from
+                # this batch is trustworthy -- escalate them all
+                bad = np.ones_like(bad)
+            retryable = ((status & RETRYABLE) or bad.any()) \
+                and not (status & FATAL)
+            if retryable and not last and self.max_retries > 0 \
+                    and hasattr(stage, "_split"):
+                redo = np.where(bad)[0] if bad.any() else np.arange(len(vals))
+                self.retries += int(redo.size)
+                try:
+                    vals[redo] = np.asarray(
+                        stage.query(y[jnp.asarray(pending[redo])]),
+                        np.float64)
+                    status |= int(np.asarray(getattr(stage,
+                                                     "last_status", 0)))
+                except EstimationError:
+                    pass                    # retry failed too -> escalate
+                bad = self._bad_rows(vals)
+            self.status |= status
+            count_flags(self.flag_counts, status)
+            if last:
+                bad = np.zeros_like(bad)
+            good = ~bad
+            out[pending[good]] = vals[good]
+            pending = pending[bad]
+        # the wrapper's own check point: flags a stage recovered from are
+        # history, so only an unrecovered (non-finite) OUTPUT is fatal
+        if checks_enabled() and not np.all(np.isfinite(out)):
+            raise EstimationError(
+                "RobustEstimator.query: non-finite output survived the "
+                f"final '{self.stage_names[-1]}' stage "
+                f"(accumulated flags {decode_status(self.status)})")
+        return jnp.asarray(out, jnp.float32)
+
+    def query1(self, y: jnp.ndarray) -> float:
+        """Single-point convenience wrapper around ``query``."""
+        return float(self.query(y[None, :])[0])
+
+    def degrees(self, batch: int = 1024) -> np.ndarray:
+        """Algorithm 4.3 degree sweep through the staged chain."""
+        from repro.core.sampling.vertex import host_degree_loop
+        return host_degree_loop(self, batch)
+
+
+def warn_fallback_rate(fallbacks: int, draws: int, rounds: int,
+                       slack: float, context: str = "sample_exact") -> None:
+    """Warn when rejection-fallback frequency exceeds the Theorem 4.12
+    prediction: accept prob >= 1/c per round -> all-reject rate
+    <= (1 - 1/c)^rounds."""
+    if draws <= 0 or fallbacks <= 0:
+        return
+    c = max(float(slack), 1.0 + 1e-9)
+    predicted = (1.0 - 1.0 / c) ** int(rounds)
+    rate = fallbacks / draws
+    if rate > max(2.0 * predicted, 1e-3):
+        warnings.warn(
+            f"{context}: rejection fallback rate {rate:.3g} exceeds the "
+            f"(1-1/c)^rounds prediction {predicted:.3g} "
+            f"(c={c:.3g}, rounds={rounds}) -- level-1 estimates are "
+            f"under-covering the true row mass", RuntimeWarning,
+            stacklevel=3)

@@ -24,8 +24,14 @@ class HostStats:
 class Watchdog:
     def __init__(self, hosts: int, alpha: float = 0.3,
                  straggler_factor: float = 1.5,
-                 heartbeat_timeout_s: float = 300.0):
-        self.stats: Dict[int, HostStats] = {h: HostStats() for h in range(hosts)}
+                 heartbeat_timeout_s: float = 300.0,
+                 now: Optional[float] = None):
+        # every host's clock starts at construction: a host that NEVER
+        # heartbeats is declared dead after heartbeat_timeout_s, instead
+        # of being skipped forever (``now=`` for deterministic tests)
+        start = now if now is not None else time.monotonic()
+        self.stats: Dict[int, HostStats] = {
+            h: HostStats(last_beat=start) for h in range(hosts)}
         self.alpha = alpha
         self.factor = straggler_factor
         self.timeout = heartbeat_timeout_s
@@ -50,10 +56,8 @@ class Watchdog:
         med = self.median_ewma()
         stragglers, dead = [], []
         for h, st in self.stats.items():
-            if st.steps == 0:
-                continue
             if now - st.last_beat > self.timeout:
                 dead.append(h)
-            elif med > 0 and st.ewma_s > self.factor * med:
+            elif st.steps > 0 and med > 0 and st.ewma_s > self.factor * med:
                 stragglers.append(h)
         return {"stragglers": stragglers, "dead": dead}

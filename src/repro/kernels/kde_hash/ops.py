@@ -28,10 +28,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.ft import guards as _g
 from repro.kernels.kde_hash import kernel as _k
 from repro.kernels.kde_hash import ref as _ref
 from repro.kernels.kde_sampler import ops as _sops
-from repro.kernels.kde_sampler.ref import BUILTIN_KINDS
+from repro.kernels.kde_sampler.ref import BLOCK_SUM_FLOOR, BUILTIN_KINDS
 
 TRACE_COUNTS = _sops.TRACE_COUNTS
 
@@ -75,8 +76,10 @@ def grid_keys(xn: np.ndarray, dims, shift, cell_width: float) -> np.ndarray:
 def bucket_table(keys: np.ndarray, rows: np.ndarray, max_bucket: int, rng):
     """Freeze the buckets of one key slice into the padded layout:
     (sorted unique keys, (U, max_bucket) member table of GLOBAL row ids,
-    stored counts, concatenated stored row ids).  Oversized buckets store
-    a seeded subsample; overflow members stay FAR-eligible."""
+    stored counts, concatenated stored row ids, per-bucket truncation
+    flags).  Oversized buckets store a seeded subsample; overflow members
+    stay FAR-eligible -- the flags let queries report that truncation
+    happened (``guards.BUCKET_OVERFLOW``)."""
     order = np.argsort(keys, kind="stable")
     sk = keys[order]
     uniq, counts_full = np.unique(sk, return_counts=True)
@@ -85,6 +88,8 @@ def bucket_table(keys: np.ndarray, rows: np.ndarray, max_bucket: int, rng):
     members = np.zeros((max(len(uniq), 1), mb), np.int32)
     counts = np.zeros(max(len(uniq), 1), np.int32)
     counts[:len(uniq)] = np.minimum(counts_full, mb)
+    truncated = np.zeros(max(len(uniq), 1), bool)
+    truncated[:len(uniq)] = counts_full > mb
     stored = [np.zeros(0, np.int64)]
     for b in range(len(uniq)):
         seg = rows[order[starts[b]:starts[b] + counts_full[b]]]
@@ -92,7 +97,7 @@ def bucket_table(keys: np.ndarray, rows: np.ndarray, max_bucket: int, rng):
             seg = rng.choice(seg, size=mb, replace=False)
         members[b, :len(seg)] = seg
         stored.append(seg)
-    return uniq, members, counts, np.concatenate(stored)
+    return uniq, members, counts, np.concatenate(stored), truncated
 
 
 def build_hash_state(x, kernel, cell_width: float | None = None,
@@ -117,7 +122,7 @@ def build_hash_state(x, kernel, cell_width: float | None = None,
               else default_cell_width(kernel))
     dims, shift = draw_grid(rng, d, num_hash_dims, w)
     keys = grid_keys(xn, dims, shift, w)
-    uniq, members, counts, stored_rows = bucket_table(
+    uniq, members, counts, stored_rows, truncated = bucket_table(
         keys, np.arange(n, dtype=np.int64), max_bucket, rng)
     stored = np.zeros(n, bool)
     stored[stored_rows] = True
@@ -129,7 +134,8 @@ def build_hash_state(x, kernel, cell_width: float | None = None,
         members=jnp.asarray(members),
         counts=jnp.asarray(counts),
         point_bucket=jnp.asarray(point_bucket),
-        self_stored=jnp.asarray(stored.astype(np.float32)))
+        self_stored=jnp.asarray(stored.astype(np.float32)),
+        truncated=jnp.asarray(truncated))
     return state, w
 
 
@@ -157,30 +163,61 @@ def _weighted_pass(q, xr, wgt, *, kind, inv_bw, beta, pairwise, use_pallas,
 def hashed_query(x, y, state, key, *, kind, inv_bw, beta, pairwise,
                  cell_width, num_far, n, use_pallas=False, interpret=False,
                  bm=32):
-    """(m,) row-sum estimates + (m,) realized NEAR eval counts -- the
-    Definition 1.1 read at O(max_bucket + num_far) evals per query."""
+    """(m,) row-sum estimates + (m,) realized NEAR eval counts + a status
+    bitmask -- the Definition 1.1 read at O(max_bucket + num_far) evals
+    per query.  The status flags bucket truncation, out-of-range member
+    indices (JAX gathers clamp, so corruption is otherwise silent), and a
+    Horvitz-Thompson FAR sample dominating the estimate (on the jnp path
+    per element against ``REPRO_HT_FRAC``; the Pallas kernel only sees the
+    reduced sum, so there the static weight ``n/num_far`` is checked
+    against ``REPRO_HT_BOUND``)."""
     TRACE_COUNTS["hashed_query"] += 1
-    _, xr, wgt, cnt = _ref.query_gather(x, y, state, key, cell_width,
-                                        num_far, n)
-    est = _weighted_pass(y, xr, wgt, kind=kind, inv_bw=inv_bw, beta=beta,
-                         pairwise=pairwise, use_pallas=use_pallas,
-                         interpret=interpret, bm=bm, reduce_sum=True)
-    return est, cnt
+    cols, xr, wgt, cnt, trunc = _ref.query_gather(x, y, state, key,
+                                                  cell_width, num_far, n)
+    corrupt = jnp.any((cols < 0) | (cols >= n))
+    if use_pallas and kind in BUILTIN_KINDS:
+        est = _weighted_pass(y, xr, wgt, kind=kind, inv_bw=inv_bw, beta=beta,
+                             pairwise=pairwise, use_pallas=use_pallas,
+                             interpret=interpret, bm=bm, reduce_sum=True)
+        heavy = jnp.asarray(num_far > 0
+                            and float(n) / num_far > _g.ht_bound())
+    else:
+        kv = _weighted_pass(y, xr, wgt, kind=kind, inv_bw=inv_bw, beta=beta,
+                            pairwise=pairwise, use_pallas=use_pallas,
+                            interpret=interpret, bm=bm, reduce_sum=False)
+        est = jnp.sum(kv, axis=1)
+        mb = state.members.shape[1]
+        far = kv[:, mb:]
+        heavy = (jnp.any(far > _g.ht_frac()
+                         * jnp.maximum(jnp.abs(est)[:, None], 1e-30))
+                 if num_far > 0 else jnp.asarray(False))
+    st = _g.merge(_g.flag_if(corrupt, _g.STATE_CORRUPT),
+                  _g.flag_if(jnp.any(trunc), _g.BUCKET_OVERFLOW),
+                  _g.flag_if(heavy, _g.HT_HEAVY),
+                  _g.result_status(est))
+    return est, cnt, st
 
 
 def _hashed_block_sums(x, src, state, key, *, kind, inv_bw, beta, pairwise,
                        num_far, block_size, num_blocks, n, use_pallas,
                        interpret, bm):
     """Traceable core of ``hashed_block_sums`` (called from inside the
-    fused sampler programs of ``kde_sampler.ops``)."""
+    fused sampler programs of ``kde_sampler.ops``).  Returns
+    ``(block sums, status)``."""
     q = x[src]
-    cols, xr, wgt, _ = _ref.frontier_gather(x, src, state, key, num_far,
-                                            block_size, num_blocks, n)
+    cols, xr, wgt, _, trunc = _ref.frontier_gather(x, src, state, key,
+                                                   num_far, block_size,
+                                                   num_blocks, n)
     kv = _weighted_pass(q, xr, wgt, kind=kind, inv_bw=inv_bw, beta=beta,
                         pairwise=pairwise, use_pallas=use_pallas,
                         interpret=interpret, bm=bm, reduce_sum=False)
-    return _ref.scatter_block_sums(kv, cols, src, state, num_far,
-                                   block_size, num_blocks)
+    bs = _ref.scatter_block_sums(kv, cols, src, state, num_far,
+                                 block_size, num_blocks)
+    st = _g.merge(_g.flag_if(jnp.any((cols < 0) | (cols >= n)),
+                             _g.STATE_CORRUPT),
+                  _g.flag_if(jnp.any(trunc), _g.BUCKET_OVERFLOW),
+                  _g.sums_status(bs, BLOCK_SUM_FLOOR))
+    return bs, st
 
 
 @_jit
@@ -190,7 +227,7 @@ def hashed_block_sums(x, src, state, key, *, kind, inv_bw, beta, pairwise,
     """(w, B) §2-contract level-1 estimates of a dataset frontier from
     O(max_bucket + B num_far) evals per row: exact NEAR scatter +
     ``num_far`` stratified FAR slots per block (the ``level1="hash"``
-    read; DESIGN.md §10)."""
+    read; DESIGN.md §10).  Returns ``(block sums, status bitmask)``."""
     TRACE_COUNTS["hashed_block_sums"] += 1
     return _hashed_block_sums(x, src, state, key, kind=kind, inv_bw=inv_bw,
                               beta=beta, pairwise=pairwise, num_far=num_far,

@@ -53,6 +53,10 @@ class HashState(NamedTuple):
     point_bucket: jnp.ndarray  # (n,)  int32  bucket id of each dataset row
     self_stored: jnp.ndarray   # (n,)  f32    1.0 iff the row is stored in
     #                                         its own bucket's slots
+    truncated: jnp.ndarray = None  # (U,) bool  bucket overflowed max_bucket
+    #                                (optional so older pickled/sharded
+    #                                layouts keep working; None reads as
+    #                                "no bucket truncated")
 
 
 def pack_codes(codes: jnp.ndarray) -> jnp.ndarray:
@@ -113,8 +117,9 @@ def query_gather(x, y, state: HashState, key, cell_width: float,
     device, find the bucket by one vectorized ``searchsorted`` over the
     sorted keys, and return the (w, max_bucket + num_far) evaluation rows
     ``xr``, their summation weights ``wgt`` (1 for valid NEAR slots,
-    ``n/num_far`` for non-colliding FAR samples) and the realized NEAR
-    counts (Definition 1.1 eval accounting)."""
+    ``n/num_far`` for non-colliding FAR samples), the realized NEAR
+    counts (Definition 1.1 eval accounting), and the per-row
+    bucket-truncation flag (False everywhere for legacy states)."""
     qkey = pack_codes(query_codes(y, state.dims, state.shift, cell_width))
     b = jnp.clip(jnp.searchsorted(state.keys, qkey), 0,
                  state.keys.shape[0] - 1).astype(jnp.int32)
@@ -123,15 +128,17 @@ def query_gather(x, y, state: HashState, key, cell_width: float,
     mem = state.members[b]
     mb = mem.shape[1]
     mvalid = jnp.arange(mb, dtype=jnp.int32)[None, :] < cnt[:, None]
+    trunc = (hit & state.truncated[b] if state.truncated is not None
+             else jnp.zeros(hit.shape, bool))
     if num_far == 0:                       # static: NEAR-only estimate
-        return mem, x[mem], mvalid.astype(jnp.float32), cnt
+        return mem, x[mem], mvalid.astype(jnp.float32), cnt, trunc
     fidx = jax.random.randint(key, (y.shape[0], num_far), 0, n)
     collide = _far_collide(fidx, mem, mvalid)
     cols = jnp.concatenate([mem, fidx], axis=1)
     wgt = jnp.concatenate(
         [mvalid.astype(jnp.float32),
          (float(n) / num_far) * (1.0 - collide.astype(jnp.float32))], axis=1)
-    return cols, x[cols], wgt, cnt
+    return cols, x[cols], wgt, cnt, trunc
 
 
 def frontier_gather(x, src, state: HashState, key, num_far: int,
@@ -145,13 +152,16 @@ def frontier_gather(x, src, state: HashState, key, num_far: int,
     importance weights heavy-tailed).  The HT weight is the constant
     ``block_size/num_far`` (slot-uniform inclusion; out-of-range tail
     slots and collisions with stored NEAR members or the query itself are
-    masked to weight 0, which the constant weight keeps unbiased)."""
+    masked to weight 0, which the constant weight keeps unbiased).  The
+    fifth output is the per-row bucket-truncation flag."""
     w = src.shape[0]
     b = state.point_bucket[src]
     cnt = state.counts[b]
     mem = state.members[b]
     mb = mem.shape[1]
     mvalid = jnp.arange(mb, dtype=jnp.int32)[None, :] < cnt[:, None]
+    trunc = (state.truncated[b] if state.truncated is not None
+             else jnp.zeros(b.shape, bool))
     base = jnp.arange(num_blocks, dtype=jnp.int32) * block_size
     off = jax.random.randint(key, (w, num_blocks, num_far), 0, block_size)
     fidx = (base[None, :, None] + off).reshape(w, num_blocks * num_far)
@@ -163,7 +173,7 @@ def frontier_gather(x, src, state: HashState, key, num_far: int,
         [mvalid.astype(jnp.float32),
          (float(block_size) / num_far)
          * (1.0 - dead.astype(jnp.float32))], axis=1)
-    return cols, x[cols], wgt, cnt
+    return cols, x[cols], wgt, cnt, trunc
 
 
 # --------------------------------------------------------------------- #
@@ -176,7 +186,8 @@ def hashed_query_ref(x, y, state: HashState, key, kind: str, inv_bw: float,
     realized NEAR eval counts.  One weighted kernel-value pass over the
     concatenated (member, far-sample) rows -- the identical summation
     order the Pallas kernel uses, so interpret-mode runs match bitwise."""
-    _, xr, wgt, cnt = query_gather(x, y, state, key, cell_width, num_far, n)
+    _, xr, wgt, cnt, _ = query_gather(x, y, state, key, cell_width, num_far,
+                                      n)
     kv = rowwise_kv(y, xr, kind, inv_bw, beta, pairwise)
     return jnp.sum(kv * wgt, axis=1), cnt
 
@@ -195,8 +206,8 @@ def hashed_block_sums_ref(x, src, state: HashState, key, kind: str,
     already excluded it), and every block is floored at 1e-12 exactly
     like ``ops.masked_block_sums``."""
     q = x[src]
-    cols, xr, wgt, _ = frontier_gather(x, src, state, key, num_far,
-                                       block_size, num_blocks, n)
+    cols, xr, wgt, _, _ = frontier_gather(x, src, state, key, num_far,
+                                          block_size, num_blocks, n)
     kv = rowwise_kv(q, xr, kind, inv_bw, beta, pairwise) * wgt
     return scatter_block_sums(kv, cols, src, state, num_far, block_size,
                               num_blocks)

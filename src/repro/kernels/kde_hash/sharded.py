@@ -33,6 +33,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
+from repro.ft import guards as _g
 from repro.kernels.kde_hash import ops as _ops
 from repro.kernels.kde_hash import ref as _ref
 from repro.kernels.kde_rowsum.ops import _PAD_OFFSET
@@ -95,10 +96,12 @@ class ShardedHashTable:
         keys = _ops.grid_keys(xn, dims, shift, w)
         mb = int(max_bucket)
         per_shard = []
+        any_trunc = False
         for p in range(num_shards):
             lo, hi = p * shard_size, min((p + 1) * shard_size, n)
-            uniq, members, counts, _ = _ops.bucket_table(
+            uniq, members, counts, _, trunc = _ops.bucket_table(
                 keys[lo:hi], np.arange(lo, hi, dtype=np.int64), mb, rng)
+            any_trunc = any_trunc or bool(trunc.any())
             per_shard.append((uniq, members, counts))
         u_pad = max(max(len(s[0]) for s in per_shard), 1)
         keys_s = np.full((num_shards, u_pad), _PAD_KEY, np.uint32)
@@ -130,6 +133,11 @@ class ShardedHashTable:
         self.shard_size = shard_size
         self.max_bucket = mb
         self.num_far = int(num_far_samples)
+        # Table-level overflow bit, frozen at build time: shard-local
+        # per-query truncation hits would need a second collective to
+        # replicate, so the sharded path reports the coarser "some bucket
+        # somewhere was truncated" flag instead (one-psum budget intact).
+        self._truncated = any_trunc
         n_pad = num_shards * shard_size
         pad = n_pad - n
         if pad:
@@ -206,9 +214,21 @@ class ShardedHashTable:
         return _PROGRAM_CACHE[sp]
 
     def query(self, y, key):
-        """(m,) replicated row-sum estimates + (m,) NEAR eval counts:
-        local NEAR lookup + local FAR partials, then exactly ONE psum
-        (Definition 1.1 over the sharded hashed table)."""
-        return self._program()(
+        """(m,) replicated row-sum estimates + (m,) NEAR eval counts + a
+        status bitmask: local NEAR lookup + local FAR partials, then
+        exactly ONE psum (Definition 1.1 over the sharded hashed table).
+        The status is computed from replicated/static values only --
+        build-time bucket overflow, the static per-shard HT weight bound,
+        and non-finite estimates -- so the collective schedule is
+        untouched."""
+        est, cnt = self._program()(
             self._keys, self._members, self._counts, self._dims,
             self._shift, self.x_sh, jnp.asarray(y, jnp.float32), key)
+        sp = self.spec
+        heavy = (sp.num_far > 0
+                 and float(sp.shard_size) / sp.num_far > _g.ht_bound())
+        st = _g.merge(
+            _g.flag_if(jnp.asarray(self._truncated), _g.BUCKET_OVERFLOW),
+            _g.flag_if(jnp.asarray(heavy), _g.HT_HEAVY),
+            _g.result_status(est))
+        return est, cnt, st

@@ -28,6 +28,13 @@ Public entry points (all jitted; static config is passed by keyword):
 * ``kernel_rows``             -- exact batched kernel rows for the FKV /
   CP17 low-rank pipeline (Section 5.2).
 
+Every sampling / application program additionally returns a ``uint32``
+status bitmask (``repro.ft.guards``): cheap in-program reductions over
+values the program already computed -- NaN/Inf sums, zero-mass rows at the
+``BLOCK_SUM_FLOOR``, rejection exhaustion, CG non-convergence.  Flags are
+advisory; consumers escalate via ``guards.raise_on_status`` under
+``REPRO_CHECKS=1`` (DESIGN.md §11).
+
 ``TRACE_COUNTS`` increments only while a function is being traced --
 tests use it to certify that repeated calls hit the compiled path.
 """
@@ -40,6 +47,7 @@ import inspect
 import jax
 import jax.numpy as jnp
 
+from repro.ft import guards as _g
 from repro.kernels.kde_rowsum.ops import _PAD_OFFSET, _pad_rows
 from repro.kernels.kde_sampler import kernel as _k
 from repro.kernels.kde_sampler import ref as _ref
@@ -162,12 +170,13 @@ def masked_block_sums(x, x_sq, src, key, hstate=None, *, kind, inv_bw, beta,
     kernel (no Gumbel state) on the exact+Pallas path, or to the hashed
     read when ``level1="hash"``."""
     TRACE_COUNTS["masked_block_sums"] += 1
-    return _masked_sums_any(x, x_sq, src, key, hstate, kind=kind,
-                            inv_bw=inv_bw, beta=beta, pairwise=pairwise,
-                            block_size=block_size, num_blocks=num_blocks,
-                            n=n, s=s, exact=exact, use_pallas=use_pallas,
-                            interpret=interpret, bm=bm, level1=level1,
-                            num_far=num_far)
+    bs, _ = _masked_sums_any(x, x_sq, src, key, hstate, kind=kind,
+                             inv_bw=inv_bw, beta=beta, pairwise=pairwise,
+                             block_size=block_size, num_blocks=num_blocks,
+                             n=n, s=s, exact=exact, use_pallas=use_pallas,
+                             interpret=interpret, bm=bm, level1=level1,
+                             num_far=num_far)
+    return bs
 
 
 # --------------------------------------------------------------------- #
@@ -207,16 +216,17 @@ def _fused_sample(x, x_sq, src, key, hstate=None, *, kind, inv_bw, beta,
         views = _block_views(x, x_sq, block_size)
     k_l1, k_rest = jax.random.split(key)
     if level1 == "hash":
-        bs = _masked_sums_any(x, x_sq, src, k_l1, hstate=hstate, kind=kind,
-                              inv_bw=inv_bw, beta=beta, pairwise=pairwise,
-                              block_size=block_size, num_blocks=num_blocks,
-                              n=n, s=s, exact=exact, use_pallas=use_pallas,
-                              interpret=interpret, bm=bm, level1=level1,
-                              num_far=num_far)
+        bs, st = _masked_sums_any(x, x_sq, src, k_l1, hstate=hstate,
+                                  kind=kind, inv_bw=inv_bw, beta=beta,
+                                  pairwise=pairwise, block_size=block_size,
+                                  num_blocks=num_blocks, n=n, s=s,
+                                  exact=exact, use_pallas=use_pallas,
+                                  interpret=interpret, bm=bm, level1=level1,
+                                  num_far=num_far)
         nb, prob = _sample_core(x, x_sq, views, src, bs, k_rest, kind=kind,
                                 inv_bw=inv_bw, beta=beta, pairwise=pairwise,
                                 block_size=block_size, n=n)
-        return nb, prob, bs
+        return nb, prob, bs, _g.merge(st, _g.result_status(prob))
     if exact and use_pallas:
         # Fully fused level-1: block sums + Gumbel-max draw in one Pallas pass.
         w = src.shape[0]
@@ -234,7 +244,10 @@ def _fused_sample(x, x_sq, src, key, hstate=None, *, kind, inv_bw, beta,
                                       block_size=block_size, n=n)
         nb, pin = _level2_draw(kv, live, cols_c,
                                jax.random.uniform(k_in, (w,)))
-        return nb, pb * pin, bs
+        prob = pb * pin
+        st = _g.merge(_g.sums_status(bs, _ref.BLOCK_SUM_FLOOR),
+                      _g.result_status(prob))
+        return nb, prob, bs, st
     bs = _masked_block_sums(x, x_sq, src, k_l1, kind=kind, inv_bw=inv_bw,
                             beta=beta, pairwise=pairwise,
                             block_size=block_size, num_blocks=num_blocks,
@@ -242,14 +255,17 @@ def _fused_sample(x, x_sq, src, key, hstate=None, *, kind, inv_bw, beta,
     nb, prob = _sample_core(x, x_sq, views, src, bs, k_rest, kind=kind,
                             inv_bw=inv_bw, beta=beta, pairwise=pairwise,
                             block_size=block_size, n=n)
-    return nb, prob, bs
+    st = _g.merge(_g.sums_status(bs, _ref.BLOCK_SUM_FLOOR),
+                  _g.result_status(prob))
+    return nb, prob, bs, st
 
 
 @_jit
 def fused_sample(x, x_sq, src, key, hstate=None, *, kind, inv_bw, beta,
                  pairwise, block_size, num_blocks, n, s, exact, use_pallas,
                  interpret, bm, level1="blocked", num_far=64):
-    """One depth-2 sampling step: (neighbors, realized probs, level-1 sums)."""
+    """One depth-2 sampling step: (neighbors, realized probs, level-1 sums,
+    status bitmask)."""
     TRACE_COUNTS["fused_sample"] += 1
     return _fused_sample(x, x_sq, src, key, hstate, kind=kind, inv_bw=inv_bw,
                          beta=beta, pairwise=pairwise, block_size=block_size,
@@ -261,12 +277,16 @@ def fused_sample(x, x_sq, src, key, hstate=None, *, kind, inv_bw, beta,
 @_jit
 def sample_from_block_sums(x, x_sq, src, bs, key, *, kind, inv_bw, beta,
                            pairwise, block_size, n):
-    """Depth-2 step reusing cached level-1 sums (no dataset re-sweep)."""
+    """Depth-2 step reusing cached level-1 sums (no dataset re-sweep).
+    Returns (neighbors, realized probs, status bitmask)."""
     TRACE_COUNTS["sample_from_block_sums"] += 1
     views = _block_views(x, x_sq, block_size)
-    return _sample_core(x, x_sq, views, src, bs, key, kind=kind,
-                        inv_bw=inv_bw, beta=beta, pairwise=pairwise,
-                        block_size=block_size, n=n)
+    nb, prob = _sample_core(x, x_sq, views, src, bs, key, kind=kind,
+                            inv_bw=inv_bw, beta=beta, pairwise=pairwise,
+                            block_size=block_size, n=n)
+    st = _g.merge(_g.sums_status(bs, _ref.BLOCK_SUM_FLOOR),
+                  _g.result_status(prob))
+    return nb, prob, st
 
 
 def _prob_core(x, x_sq, views, src, dst, bs, *, kind, inv_bw, beta, pairwise,
@@ -311,7 +331,8 @@ def _masked_sums_any(x, x_sq, src, key, hstate=None, *, kind, inv_bw, beta,
     masked-blocksum kernel on the exact+Pallas path (no Gumbel state --
     probability evaluation needs sums only), or to the hashed-KDE read
     (``level1="hash"``: O(max_bucket + num_far) evals per row instead of
-    the blocked O(B s) / O(n), DESIGN.md §10)."""
+    the blocked O(B s) / O(n), DESIGN.md §10).  Returns ``(bs, status)``;
+    on the blocked paths the status covers NaN/Inf and zero-mass rows."""
     if level1 == "hash":
         from repro.kernels.kde_hash import ops as _hops
         return _hops._hashed_block_sums(
@@ -324,11 +345,13 @@ def _masked_sums_any(x, x_sq, src, key, hstate=None, *, kind, inv_bw, beta,
         q, own, xp, _ = _pallas_pad(x, src, bm, block_size)
         bs = _k.masked_blocksum_pallas(q, xp, own, kind, inv_bw, beta, bm=bm,
                                        bn=block_size, interpret=interpret)
-        return bs[:w]
-    return _masked_block_sums(x, x_sq, src, key, kind=kind, inv_bw=inv_bw,
-                              beta=beta, pairwise=pairwise,
-                              block_size=block_size, num_blocks=num_blocks,
-                              n=n, s=s, exact=exact)
+        bs = bs[:w]
+        return bs, _g.sums_status(bs, _ref.BLOCK_SUM_FLOOR)
+    bs = _masked_block_sums(x, x_sq, src, key, kind=kind, inv_bw=inv_bw,
+                            beta=beta, pairwise=pairwise,
+                            block_size=block_size, num_blocks=num_blocks,
+                            n=n, s=s, exact=exact)
+    return bs, _g.sums_status(bs, _ref.BLOCK_SUM_FLOOR)
 
 
 def _edge_batch_core(x, x_sq, views, cdf, degs, inv_total, inv_t, key,
@@ -349,19 +372,21 @@ def _edge_batch_core(x, x_sq, views, cdf, degs, inv_total, inv_t, key,
     probability (from the same level-1 sums that drew v)."""
     k_u, k_fwd = jax.random.split(key)
     u = _ref.inverse_cdf_index(cdf, jax.random.uniform(k_u, (batch,)))
-    v, q_uv, _ = _fused_sample(x, x_sq, u, k_fwd, hstate, kind=kind,
-                               inv_bw=inv_bw, beta=beta, pairwise=pairwise,
-                               block_size=block_size, num_blocks=num_blocks,
-                               n=n, s=s, exact=exact, use_pallas=use_pallas,
-                               interpret=interpret, bm=bm, level1=level1,
-                               num_far=num_far, views=views)
+    v, q_uv, _, st = _fused_sample(x, x_sq, u, k_fwd, hstate, kind=kind,
+                                   inv_bw=inv_bw, beta=beta,
+                                   pairwise=pairwise, block_size=block_size,
+                                   num_blocks=num_blocks, n=n, s=s,
+                                   exact=exact, use_pallas=use_pallas,
+                                   interpret=interpret, bm=bm, level1=level1,
+                                   num_far=num_far, views=views)
     kuv = _ref.kv_pairs(x[u], x[v], kind, inv_bw, beta, pairwise)
     q_vu = kuv / jnp.maximum(degs[v], _ref.BLOCK_SUM_FLOOR)
     # q_e = p_u q_uv + p_v q_vu with p_i = deg_i / sum(deg); the second
     # term telescopes to k(u,v) / sum(deg).
     q_edge = inv_total * (degs[u] * q_uv + kuv)
     wgt = kuv * inv_t / jnp.maximum(q_edge, 1e-30)
-    return u, v, wgt, q_uv, q_vu
+    st = _g.merge(st, _g.result_status(wgt, q_vu))
+    return u, v, wgt, q_uv, q_vu, st
 
 
 @_jit
@@ -369,7 +394,8 @@ def fused_edge_batch(x, x_sq, cdf, degs, inv_total, inv_t, key, hstate=None,
                      *, batch, kind, inv_bw, beta, pairwise, block_size,
                      num_blocks, n, s, exact, use_pallas, interpret, bm,
                      level1="blocked", num_far=64):
-    """One fused Algorithm 5.1 edge batch: (u, v, weight, q_uv, q_vu)."""
+    """One fused Algorithm 5.1 edge batch: (u, v, weight, q_uv, q_vu,
+    status)."""
     TRACE_COUNTS["fused_edge_batch"] += 1
     views = _block_views(x, x_sq, block_size)
     return _edge_batch_core(x, x_sq, views, cdf, degs, inv_total, inv_t, key,
@@ -389,20 +415,23 @@ def edge_batch_scan(x, x_sq, cdf, degs, inv_total, inv_t, keys, hstate=None,
     """All T = len(keys) edge batches of the sparsifier in ONE program: a
     ``lax.scan`` over per-batch keys whose body is one fused edge batch.
     The whole Algorithm 5.1 sampling loop runs with a single dispatch and
-    a single device->host transfer of the (T, batch) edge lists."""
+    a single device->host transfer of the (T, batch) edge lists.  The
+    per-batch status words are or-folded into one scalar carried through
+    the scan -- the last output is the run's merged status."""
     TRACE_COUNTS["edge_batch_scan"] += 1
     views = _block_views(x, x_sq, block_size)
 
-    def body(_, k):
-        return None, _edge_batch_core(
+    def body(st, k):
+        u, v, wgt, q_uv, q_vu, st_b = _edge_batch_core(
             x, x_sq, views, cdf, degs, inv_total, inv_t, k, hstate,
             batch=batch, kind=kind, inv_bw=inv_bw, beta=beta,
             pairwise=pairwise, block_size=block_size, num_blocks=num_blocks,
             n=n, s=s, exact=exact, use_pallas=use_pallas,
             interpret=interpret, bm=bm, level1=level1, num_far=num_far)
+        return st | st_b, (u, v, wgt, q_uv, q_vu)
 
-    _, out = jax.lax.scan(body, None, keys)
-    return out
+    status, out = jax.lax.scan(body, jnp.uint32(0), keys)
+    return out + (status,)
 
 
 @_jit
@@ -433,7 +462,9 @@ def _sample_exact_core(x, x_sq, views, src, bs, key, *, kind, inv_bw, beta,
         acc = (~accepted) & (u < jnp.minimum(ratio, 1.0))
         cur = jnp.where(acc, cand, cur)
         accepted |= acc
-    return cur
+    fallbacks = jnp.sum(~accepted).astype(jnp.int32)
+    st = _g.flag_if(fallbacks > 0, _g.REJECT_EXHAUSTED)
+    return cur, st, fallbacks
 
 
 @_jit
@@ -441,13 +472,17 @@ def fused_sample_exact(x, x_sq, src, bs, key, *, kind, inv_bw, beta, pairwise,
                        block_size, n, rounds, slack):
     """Theorem 4.12 rejection rounds in one program.  The cached level-1
     sums ``bs`` are shared across every proposal round AND the degree
-    estimate -- the seed re-swept the dataset once per round."""
+    estimate -- the seed re-swept the dataset once per round.  Returns
+    (neighbors, status, fallback count): draws whose rounds all rejected
+    keep the round-0 proposal (biased) and are counted, not hidden."""
     TRACE_COUNTS["fused_sample_exact"] += 1
     views = _block_views(x, x_sq, block_size)
-    return _sample_exact_core(x, x_sq, views, src, bs, key, kind=kind,
-                              inv_bw=inv_bw, beta=beta, pairwise=pairwise,
-                              block_size=block_size, n=n, rounds=rounds,
-                              slack=slack)
+    cur, st, fallbacks = _sample_exact_core(
+        x, x_sq, views, src, bs, key, kind=kind, inv_bw=inv_bw, beta=beta,
+        pairwise=pairwise, block_size=block_size, n=n, rounds=rounds,
+        slack=slack)
+    st = _g.merge(st, _g.sums_status(bs, _ref.BLOCK_SUM_FLOOR))
+    return cur, st, fallbacks
 
 
 @_jit
@@ -461,38 +496,46 @@ def walk_scan(x, x_sq, starts, keys, hstate=None, *, kind, inv_bw, beta,
     ``record_path=False`` the path is never materialized (the scan emits no
     per-step output, so long walks cost O(w) device memory, not O(T w))
     and None is returned in its place.  The key stream is identical either
-    way, so endpoints match bitwise."""
+    way, so endpoints match bitwise.  Returns (endpoints, path, status,
+    rejection-fallback count) -- status and fallbacks are or/sum-folded
+    across the T steps inside the scan carry."""
     TRACE_COUNTS["walk_scan"] += 1
     views = _block_views(x, x_sq, block_size)  # hoisted out of the step body
 
-    def body(cur, k):
+    def body(carry, k):
+        cur, st, fb = carry
         if rounds > 0:
             k_l1, k_rs = jax.random.split(k)
-            bs = _masked_sums_any(x, x_sq, cur, k_l1, hstate, kind=kind,
-                                  inv_bw=inv_bw, beta=beta,
-                                  pairwise=pairwise, block_size=block_size,
-                                  num_blocks=num_blocks, n=n, s=s,
-                                  exact=exact, use_pallas=use_pallas,
-                                  interpret=interpret, bm=bm, level1=level1,
-                                  num_far=num_far)
-            nxt = _sample_exact_core(x, x_sq, views, cur, bs, k_rs, kind=kind,
-                                     inv_bw=inv_bw, beta=beta,
-                                     pairwise=pairwise, block_size=block_size,
-                                     n=n, rounds=rounds, slack=slack)
+            bs, st1 = _masked_sums_any(x, x_sq, cur, k_l1, hstate, kind=kind,
+                                       inv_bw=inv_bw, beta=beta,
+                                       pairwise=pairwise,
+                                       block_size=block_size,
+                                       num_blocks=num_blocks, n=n, s=s,
+                                       exact=exact, use_pallas=use_pallas,
+                                       interpret=interpret, bm=bm,
+                                       level1=level1, num_far=num_far)
+            nxt, st2, fb_k = _sample_exact_core(
+                x, x_sq, views, cur, bs, k_rs, kind=kind, inv_bw=inv_bw,
+                beta=beta, pairwise=pairwise, block_size=block_size, n=n,
+                rounds=rounds, slack=slack)
+            st = st | st1 | st2
+            fb = fb + fb_k
         else:
-            nxt, _, _ = _fused_sample(x, x_sq, cur, k, hstate, kind=kind,
-                                      inv_bw=inv_bw, beta=beta,
-                                      pairwise=pairwise,
-                                      block_size=block_size,
-                                      num_blocks=num_blocks, n=n, s=s,
-                                      exact=exact, use_pallas=use_pallas,
-                                      interpret=interpret, bm=bm,
-                                      level1=level1, num_far=num_far,
-                                      views=views)
-        return nxt, (nxt if record_path else None)
+            nxt, _, _, st_k = _fused_sample(x, x_sq, cur, k, hstate,
+                                           kind=kind, inv_bw=inv_bw,
+                                           beta=beta, pairwise=pairwise,
+                                           block_size=block_size,
+                                           num_blocks=num_blocks, n=n, s=s,
+                                           exact=exact, use_pallas=use_pallas,
+                                           interpret=interpret, bm=bm,
+                                           level1=level1, num_far=num_far,
+                                           views=views)
+            st = st | st_k
+        return (nxt, st, fb), (nxt if record_path else None)
 
-    end, path = jax.lax.scan(body, starts, keys)
-    return end, path
+    (end, status, fallbacks), path = jax.lax.scan(
+        body, (starts, jnp.uint32(0), jnp.int32(0)), keys)
+    return end, path, status, fallbacks
 
 
 # --------------------------------------------------------------------- #
@@ -506,12 +549,15 @@ def noisy_power_scan(ksub, v0, keys, *, num_samples):
     by inverse CDF, forms the unbiased matvec estimate
     ``sum_j sign(v_j) z / S * ksub[:, j]``, and renormalizes -- all under
     ``lax.scan`` with no host round-trips.  Returns (Rayleigh quotient
-    from one exact final matvec, final unit vector).  Oracle:
-    ``ref.noisy_power_ref`` (identical key stream, unrolled)."""
+    from one exact final matvec, final unit vector, status bitmask --
+    iterations whose sampled matvec collapsed or went non-finite are
+    flagged, not silently skipped).  Oracle: ``ref.noisy_power_ref``
+    (identical key stream, unrolled)."""
     TRACE_COUNTS["noisy_power_scan"] += 1
     t = ksub.shape[0]
 
-    def body(v, k):
+    def body(carry, k):
+        v, st = carry
         absv = jnp.abs(v)
         z = jnp.sum(absv)
         cdf = jnp.cumsum(absv)
@@ -521,12 +567,13 @@ def noisy_power_scan(ksub, v0, keys, *, num_samples):
         contrib = jnp.sign(v[idx]) * z / num_samples
         w = ksub[:, idx] @ contrib
         nw = jnp.linalg.norm(w)
-        return jnp.where((nw > 0.0) & (z > 0.0),
-                         w / jnp.maximum(nw, 1e-30), v), None
+        ok = (nw > 0.0) & (z > 0.0)
+        st = st | _g.flag_if(~ok, _g.ZERO_MASS) | _g.nonfinite_status(w)
+        return (jnp.where(ok, w / jnp.maximum(nw, 1e-30), v), st), None
 
-    v, _ = jax.lax.scan(body, v0, keys)
+    (v, st), _ = jax.lax.scan(body, (v0, jnp.uint32(0)), keys)
     lam = v @ (ksub @ v)
-    return lam, v
+    return lam, v, _g.merge(st, _g.result_status(lam, v))
 
 
 @_jit
@@ -550,7 +597,8 @@ def laplacian_cg(src, dst, w, b, tol, *, n, iters):
     non-finite residual, or 32 consecutive iterations without improving
     the best residual (the f32 plateau; without this exit a sub-f32
     ``tol`` would burn the full ``iters`` budget after convergence).
-    Returns (best iterate, projected to 1^perp, and its residual norm)."""
+    Returns (best iterate, projected to 1^perp, its residual norm, and a
+    status bitmask flagging non-convergence / non-finite output)."""
     TRACE_COUNTS["laplacian_cg"] += 1
     deg = jnp.zeros((n,), w.dtype).at[src].add(w).at[dst].add(w)
     dinv = 1.0 / jnp.maximum(deg, 1e-30)
@@ -595,7 +643,10 @@ def laplacian_cg(src, dst, w, b, tol, *, n, iters):
 
     init = (0, x0, r0, z0, rz0, x0, jnp.linalg.norm(r0), 0, False)
     out = jax.lax.while_loop(cond, body, init)
-    return proj(out[5]), out[6]
+    sol, res = proj(out[5]), out[6]
+    st = _g.merge(_g.flag_if(res >= tol * bnorm, _g.CG_NO_CONVERGE),
+                  _g.result_status(sol, res))
+    return sol, res, st
 
 
 @_jit
@@ -621,20 +672,20 @@ def triangle_edge_scan(x, x_sq, u, v, degs, keys, hstate=None, *, kind,
     where each step draws w ~ k(v, .)/deg(v), masks by the ordering
     ``v < w`` and ``w != u``, and accumulates k(u,v) k(u,w); the final
     reweighting by deg(v)/num_draws also happens in-program.  Returns
-    (oriented u, oriented v, per-edge weight estimates W_e).  Oracle:
-    ``ref.triangle_batch_ref``."""
+    (oriented u, oriented v, per-edge weight estimates W_e, status).
+    Oracle: ``ref.triangle_batch_ref``."""
     TRACE_COUNTS["triangle_edge_scan"] += 1
     views = _block_views(x, x_sq, block_size)
     prec = _ref.degree_precedes(degs, u, v)
     uu = jnp.where(prec, u, v)
     vv = jnp.where(prec, v, u)
     kuv = _ref.kv_pairs(x[uu], x[vv], kind, inv_bw, beta, pairwise)
-    bs = _masked_sums_any(x, x_sq, vv, keys[0], hstate, kind=kind,
-                          inv_bw=inv_bw, beta=beta, pairwise=pairwise,
-                          block_size=block_size, num_blocks=num_blocks, n=n,
-                          s=s, exact=exact, use_pallas=use_pallas,
-                          interpret=interpret, bm=bm, level1=level1,
-                          num_far=num_far)
+    bs, st = _masked_sums_any(x, x_sq, vv, keys[0], hstate, kind=kind,
+                              inv_bw=inv_bw, beta=beta, pairwise=pairwise,
+                              block_size=block_size, num_blocks=num_blocks,
+                              n=n, s=s, exact=exact, use_pallas=use_pallas,
+                              interpret=interpret, bm=bm, level1=level1,
+                              num_far=num_far)
 
     def body(acc, k):
         w, _ = _sample_core(x, x_sq, views, vv, bs, k, kind=kind,
@@ -646,4 +697,5 @@ def triangle_edge_scan(x, x_sq, u, v, degs, keys, hstate=None, *, kind,
 
     acc, _ = jax.lax.scan(body, jnp.zeros_like(kuv), keys[1:])
     num_draws = keys.shape[0] - 1
-    return uu, vv, acc * degs[vv] / num_draws
+    w_hat = acc * degs[vv] / num_draws
+    return uu, vv, w_hat, _g.merge(st, _g.result_status(w_hat))

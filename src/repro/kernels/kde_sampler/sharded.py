@@ -50,6 +50,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
+from repro.ft import guards as _g
 from repro.kernels.kde_rowsum.ops import _PAD_OFFSET
 from repro.kernels.kde_sampler import ops as _ops
 from repro.kernels.kde_sampler import ref as _ref
@@ -183,8 +184,10 @@ class _EngineSpec:
 
     def _local_draw(self, src, q, qsq, sums_l, key, x_l, xsq_l, pidx):
         """One two-stage collective draw (the §9 schedule: exactly one
-        psum).  Returns (nb, prob, T) replicated, T = global degree
-        estimate sum_p t_p."""
+        psum).  Returns (nb, prob, T, status) replicated, T = global
+        degree estimate sum_p t_p.  The status word is computed from the
+        post-psum replicated values only (totals, probabilities), so the
+        flags add ZERO collectives and are identical on every shard."""
         w = src.shape[0]
         bl, bs = self.blocks_per_shard, self.block_size
         k_shard, k_blk, k_in = jax.random.split(key, 3)
@@ -218,20 +221,27 @@ class _EngineSpec:
         nb = jnp.take_along_axis(nb_all, owner[:, None], axis=1)[:, 0]
         prob = jnp.take_along_axis(q_all, owner[:, None], axis=1)[:, 0] \
             / jnp.maximum(tot, 1e-30)
-        return nb, prob, tot
+        num_real = -(-self.n // self.block_size)
+        st = _g.merge(_g.totals_status(tot, num_real, _ref.BLOCK_SUM_FLOOR),
+                      _g.result_status(prob))
+        return nb, prob, tot, st
 
     def _local_sample_exact(self, src, q, qsq, sums_l, key, x_l, xsq_l,
                             x_rep, pidx, rounds, slack):
         """Theorem 4.12 rejection rounds on the sharded draw -- the same
         accept/reject math as ``ops._sample_exact_core`` with the global
-        degree estimate coming from each draw's psum'd totals."""
+        degree estimate coming from each draw's psum'd totals.  Returns
+        (cur, status, fallback count); the acceptance mask is computed
+        from replicated values, so the counters need no collective."""
         keys = jax.random.split(key, 2 * rounds + 1)
-        cur, _, zs = self._local_draw(src, q, qsq, sums_l, keys[0], x_l,
-                                      xsq_l, pidx)
+        cur, _, zs, st = self._local_draw(src, q, qsq, sums_l, keys[0], x_l,
+                                          xsq_l, pidx)
         accepted = jnp.zeros(src.shape[0], bool)
         for r in range(rounds):
-            cand, qd, _ = self._local_draw(src, q, qsq, sums_l,
-                                           keys[2 * r + 1], x_l, xsq_l, pidx)
+            cand, qd, _, st_r = self._local_draw(src, q, qsq, sums_l,
+                                                 keys[2 * r + 1], x_l, xsq_l,
+                                                 pidx)
+            st = st | st_r
             kuv = _ref.kv_pairs(q, x_rep[cand], self.kind, self.inv_bw,
                                 self.beta, self.pairwise)
             ratio = kuv / jnp.maximum(slack * qd * zs, 1e-30)
@@ -239,7 +249,9 @@ class _EngineSpec:
             acc = (~accepted) & (u < jnp.minimum(ratio, 1.0))
             cur = jnp.where(acc, cand, cur)
             accepted |= acc
-        return cur
+        fallbacks = jnp.sum(~accepted).astype(jnp.int32)
+        st = st | _g.flag_if(fallbacks > 0, _g.REJECT_EXHAUSTED)
+        return cur, st, fallbacks
 
 
 class ShardedBlocks:
@@ -350,9 +362,10 @@ class ShardedBlocks:
         return fn(*self._sharded_args(), jnp.asarray(src, jnp.int32), key)
 
     def fused_sample(self, src, key):
-        """One depth-2 collective draw: (nb, prob, global level-1 sums) --
-        the sharded twin of ``ops.fused_sample`` (and the §4 cache
-        producer)."""
+        """One depth-2 collective draw: (nb, prob, global level-1 sums,
+        status) -- the sharded twin of ``ops.fused_sample`` (and the §4
+        cache producer).  The status is post-psum replicated, so the §9
+        one-psum schedule is unchanged."""
         sp = self.spec
 
         def factory():
@@ -364,31 +377,32 @@ class ShardedBlocks:
                 sums_l = sp._local_sums(q, (src // sp.block_size)
                                         .astype(jnp.int32), x_l, xsq_l,
                                         k_l1, pidx)
-                nb, prob, _ = sp._local_draw(src, q, qsq, sums_l, k_rest,
-                                             x_l, xsq_l, pidx)
-                return nb, prob, sums_l
+                nb, prob, _, st = sp._local_draw(src, q, qsq, sums_l,
+                                                 k_rest, x_l, xsq_l, pidx)
+                return nb, prob, sums_l, st
             return self._build("sharded_fused_sample", body,
                                self._specs4() + (P(), P()),
-                               (P(), P(), P(None, self.axes)))
+                               (P(), P(), P(None, self.axes), P()))
         fn = self._program("fused_sample", factory)
         return fn(*self._sharded_args(), jnp.asarray(src, jnp.int32), key)
 
     def sample_from_block_sums(self, src, sums, key):
         """Depth-2 collective draw reusing cached global level-1 sums
-        (the §4 caching contract: no dataset re-sweep)."""
+        (the §4 caching contract: no dataset re-sweep).  Returns
+        (nb, prob, status)."""
         sp = self.spec
 
         def factory():
             def body(x_l, xsq_l, x_rep, xsq_rep, src, sums_l, key):
                 pidx = _flat_index(sp.mesh, sp.axes)
-                nb, prob, _ = sp._local_draw(
+                nb, prob, _, st = sp._local_draw(
                     src, x_rep[src], xsq_rep[src], sums_l, key, x_l, xsq_l,
                     pidx)
-                return nb, prob
+                return nb, prob, st
             return self._build("sharded_sample_from_block_sums", body,
                                self._specs4() + (P(), P(None, self.axes),
                                                  P()),
-                               (P(), P()))
+                               (P(), P(), P()))
         fn = self._program("sample_cached", factory)
         return fn(*self._sharded_args(), jnp.asarray(src, jnp.int32), sums,
                   key)
@@ -406,7 +420,8 @@ class ShardedBlocks:
             block_size=sp.block_size, n=sp.n)
 
     def sample_exact(self, src, sums, key, *, rounds: int, slack: float):
-        """Theorem 4.12 rejection-exact draw from cached global sums."""
+        """Theorem 4.12 rejection-exact draw from cached global sums.
+        Returns (cur, status, fallback count)."""
         sp = self.spec
 
         def factory():
@@ -418,7 +433,7 @@ class ShardedBlocks:
             return self._build("sharded_sample_exact", body,
                                self._specs4() + (P(), P(None, self.axes),
                                                  P()),
-                               P())
+                               (P(), P(), P()))
         fn = self._program(("sample_exact", rounds, float(slack)), factory)
         return fn(*self._sharded_args(), jnp.asarray(src, jnp.int32), sums,
                   key)
@@ -427,14 +442,17 @@ class ShardedBlocks:
                   record_path: bool = False):
         """T walk steps under ``lax.scan`` inside one shard_map program:
         the frontier is replicated scan carry, every step one two-stage
-        draw (exactly one psum per step)."""
+        draw (exactly one psum per step).  Returns (end, path, status,
+        fallbacks): the per-step status words and rejection-fallback
+        counts fold into the carry (replicated, zero extra collectives)."""
         sp = self.spec
 
         def factory():
             def body(x_l, xsq_l, x_rep, xsq_rep, starts, keys):
                 pidx = _flat_index(sp.mesh, sp.axes)
 
-                def step(cur, k):
+                def step(carry, k):
+                    cur, st, fb = carry
                     k_l1, k_rs = jax.random.split(k)
                     q = x_rep[cur]
                     qsq = xsq_rep[cur]
@@ -442,21 +460,24 @@ class ShardedBlocks:
                         q, (cur // sp.block_size).astype(jnp.int32), x_l,
                         xsq_l, k_l1, pidx)
                     if rounds > 0:
-                        nxt = sp._local_sample_exact(
+                        nxt, st_k, fb_k = sp._local_sample_exact(
                             cur, q, qsq, sums_l, k_rs, x_l, xsq_l, x_rep,
                             pidx, rounds, slack)
+                        fb = fb + fb_k
                     else:
-                        nxt, _, _ = sp._local_draw(cur, q, qsq, sums_l,
-                                                   k_rs, x_l, xsq_l, pidx)
-                    return nxt, (nxt if record_path else None)
+                        nxt, _, _, st_k = sp._local_draw(
+                            cur, q, qsq, sums_l, k_rs, x_l, xsq_l, pidx)
+                    return (nxt, st | st_k, fb), \
+                        (nxt if record_path else None)
 
-                end, path = jax.lax.scan(step, starts, keys)
-                return end, path
+                (end, st, fb), path = jax.lax.scan(
+                    step, (starts, jnp.uint32(0), jnp.int32(0)), keys)
+                return end, path, st, fb
 
             out_path = P() if record_path else None
             return self._build("sharded_walk_scan", body,
                                self._specs4() + (P(), P()),
-                               (P(), out_path))
+                               (P(), out_path, P(), P()))
         fn = self._program(("walk_scan", rounds, float(slack),
                             bool(record_path)), factory)
         return fn(*self._sharded_args(), jnp.asarray(starts, jnp.int32),
@@ -467,7 +488,8 @@ class ShardedBlocks:
         """All Algorithm 5.1 edge batches as one scanned collective
         program -- u by replicated inverse CDF over the device degree
         prefix, v | u by the two-stage draw (one psum per batch), the
-        collapsed reverse probability and reweighting replicated."""
+        collapsed reverse probability and reweighting replicated.  The
+        last output is the or-folded status word of every batch."""
         sp = self.spec
 
         def factory():
@@ -475,7 +497,7 @@ class ShardedBlocks:
                      inv_t, keys):
                 pidx = _flat_index(sp.mesh, sp.axes)
 
-                def step(_, k):
+                def step(st, k):
                     k_u, k_fwd = jax.random.split(k)
                     u = _ref.inverse_cdf_index(
                         cdf, jax.random.uniform(k_u, (batch,)))
@@ -485,20 +507,22 @@ class ShardedBlocks:
                     sums_l = sp._local_sums(q, (u // sp.block_size)
                                             .astype(jnp.int32), x_l,
                                             xsq_l, k_l1, pidx)
-                    v, q_uv, _ = sp._local_draw(u, q, qsq, sums_l, k_rest,
-                                                x_l, xsq_l, pidx)
+                    v, q_uv, _, st_b = sp._local_draw(u, q, qsq, sums_l,
+                                                      k_rest, x_l, xsq_l,
+                                                      pidx)
                     kuv = _ref.kv_pairs(q, x_rep[v], sp.kind, sp.inv_bw,
                                         sp.beta, sp.pairwise)
                     q_vu = kuv / jnp.maximum(degs[v], _ref.BLOCK_SUM_FLOOR)
                     q_edge = inv_total * (degs[u] * q_uv + kuv)
                     wgt = kuv * inv_t / jnp.maximum(q_edge, 1e-30)
-                    return None, (u, v, wgt, q_uv, q_vu)
+                    st = st | st_b | _g.result_status(wgt, q_vu)
+                    return st, (u, v, wgt, q_uv, q_vu)
 
-                _, out = jax.lax.scan(step, None, keys)
-                return out
+                st, out = jax.lax.scan(step, jnp.uint32(0), keys)
+                return out + (st,)
             return self._build("sharded_edge_batch_scan", body,
                                self._specs4() + (P(), P(), P(), P(), P()),
-                               (P(), P(), P(), P(), P()))
+                               (P(), P(), P(), P(), P(), P()))
         fn = self._program(("edge_batch_scan", int(batch)), factory)
         return fn(*self._sharded_args(), jnp.asarray(cdf),
                   jnp.asarray(degs), jnp.float32(inv_total),
@@ -526,20 +550,24 @@ class ShardedBlocks:
                                         .astype(jnp.int32), x_l, xsq_l,
                                         keys[0], pidx)
 
-                def step(acc, k):
-                    w, _, _ = sp._local_draw(vv, q, qsq, sums_l, k, x_l,
-                                             xsq_l, pidx)
+                def step(carry, k):
+                    acc, st = carry
+                    w, _, _, st_k = sp._local_draw(vv, q, qsq, sums_l, k,
+                                                   x_l, xsq_l, pidx)
                     valid = _ref.degree_precedes(degs, vv, w) & (w != uu)
                     kuw = _ref.kv_pairs(x_rep[uu], x_rep[w], sp.kind,
                                         sp.inv_bw, sp.beta, sp.pairwise)
-                    return acc + jnp.where(valid, kuv * kuw, 0.0), None
+                    return (acc + jnp.where(valid, kuv * kuw, 0.0),
+                            st | st_k), None
 
-                acc, _ = jax.lax.scan(step, jnp.zeros_like(kuv), keys[1:])
+                (acc, st), _ = jax.lax.scan(
+                    step, (jnp.zeros_like(kuv), jnp.uint32(0)), keys[1:])
                 num_draws = keys.shape[0] - 1
-                return uu, vv, acc * degs[vv] / num_draws
+                w_hat = acc * degs[vv] / num_draws
+                return uu, vv, w_hat, _g.merge(st, _g.result_status(w_hat))
             return self._build("sharded_triangle_edge_scan", body,
                                self._specs4() + (P(), P(), P(), P()),
-                               (P(), P(), P()))
+                               (P(), P(), P(), P()))
         fn = self._program("triangle_edge_scan", factory)
         return fn(*self._sharded_args(), jnp.asarray(u, jnp.int32),
                   jnp.asarray(v, jnp.int32), jnp.asarray(degs), keys)
@@ -720,7 +748,8 @@ def _noisy_power_program(mesh: Mesh, axes, num_samples: int, cols_per: int):
         off = pidx * cols_per
         t = v0.shape[0]
 
-        def step(v, k):
+        def step(carry, k):
+            v, st = carry
             absv = jnp.abs(v)
             z = jnp.sum(absv)
             cdf = jnp.cumsum(absv)
@@ -733,23 +762,24 @@ def _noisy_power_program(mesh: Mesh, axes, num_samples: int, cols_per: int):
             w_p = ksub_l[:, lidx] @ contrib
             w = jax.lax.psum(w_p, axes)
             nw = jnp.linalg.norm(w)
-            return jnp.where((nw > 0.0) & (z > 0.0),
-                             w / jnp.maximum(nw, 1e-30), v), None
+            ok = (nw > 0.0) & (z > 0.0)
+            st = st | _g.flag_if(~ok, _g.ZERO_MASS) | _g.nonfinite_status(w)
+            return (jnp.where(ok, w / jnp.maximum(nw, 1e-30), v), st), None
 
-        v, _ = jax.lax.scan(step, v0, keys)
+        (v, st), _ = jax.lax.scan(step, (v0, jnp.uint32(0)), keys)
         # pad v to the column-padded width so the last shard's slice is
         # never clamped out of alignment
         vp = jnp.pad(v, (0, t_pad - t))
         av = jax.lax.psum(
             ksub_l @ jax.lax.dynamic_slice(vp, (off,), (cols_per,)), axes)
         lam = v @ av
-        return lam, v
+        return lam, v, _g.merge(st, _g.result_status(lam, v))
 
     def outer(ksub_sh, v0, keys):
         TRACE_COUNTS["sharded_noisy_power_scan"] += 1
         return shard_map(body, mesh=mesh,
                          in_specs=(P(None, axes), P(), P()),
-                         out_specs=(P(), P()),
+                         out_specs=(P(), P(), P()),
                          check_vma=False)(ksub_sh, v0, keys)
     return jax.jit(outer)
 
@@ -761,7 +791,9 @@ def sharded_noisy_power(mesh: Mesh, ksub, v0, keys, *, num_samples: int,
     sampled matvec is a local masked gather + partial matvec + ONE psum
     per iteration (the §9 collective budget).  Same math and key stream
     as ``ops.noisy_power_scan`` (per-shard partial sums reorder the float
-    accumulation, so floats agree to f32 tolerance, not bitwise)."""
+    accumulation, so floats agree to f32 tolerance, not bitwise).
+    Returns ``(lam, v, status)``; the status word folds the stalled-
+    iterate (zero mass) and non-finite flags across all iterations."""
     axes = tuple(data_axes)
     num = 1
     for a in axes:
@@ -773,5 +805,5 @@ def sharded_noisy_power(mesh: Mesh, ksub, v0, keys, *, num_samples: int,
         ksub = jnp.pad(ksub, ((0, 0), (0, t_pad - t)))
     ksub_sh = jax.device_put(ksub, NamedSharding(mesh, P(None, axes)))
     fn = _noisy_power_program(mesh, axes, int(num_samples), t_pad // num)
-    lam, v = fn(ksub_sh, jnp.asarray(v0, jnp.float32), keys)
-    return lam, v
+    lam, v, st = fn(ksub_sh, jnp.asarray(v0, jnp.float32), keys)
+    return lam, v, st

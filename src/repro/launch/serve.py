@@ -5,6 +5,11 @@ Example (CPU, reduced config):
   python -m repro.launch.serve --arch yi_6b --reduced --batch 4 \
       --prompt-len 64 --gen 16
   python -m repro.launch.serve --arch yi_6b --reduced --attention kde
+
+With ``--attention kde --robust`` every decode step's logits are screened
+for NaN/Inf; a flagged step is recomputed with the dense xla attention
+from the pre-step cache (per-request graceful degradation, DESIGN.md §11)
+and counted in the final report.
 """
 from __future__ import annotations
 
@@ -35,6 +40,9 @@ def main(argv=None) -> int:
     ap.add_argument("--kde-top-p", type=int, default=4)
     ap.add_argument("--kde-bk", type=int, default=32)
     ap.add_argument("--kde-stride", type=int, default=4)
+    ap.add_argument("--robust", action="store_true",
+                    help="screen decode logits; recompute flagged steps "
+                         "with dense xla attention from the pre-step cache")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -62,12 +70,28 @@ def main(argv=None) -> int:
     kde_cfg = {"top_p": args.kde_top_p, "bk": args.kde_bk,
                "stride": args.kde_stride} if args.attention == "kde" else None
     step = jax.jit(make_decode_step(cfg, impl=args.attention, kde_cfg=kde_cfg))
+    # staged fallback (DESIGN.md §11): a dense twin of the decode step,
+    # built lazily so the happy path never compiles it.  Cache pytrees are
+    # immutable, so holding the pre-step reference is free.
+    robust = bool(args.robust) and args.attention != "xla"
+    dense_step = None
+    fallbacks = 0
+
+    def guarded(cache_in, cur, pos):
+        nonlocal dense_step, fallbacks
+        nxt, logits, cache_out = step(params, cache_in, cur, jnp.int32(pos))
+        if robust and not bool(jnp.all(jnp.isfinite(logits))):
+            if dense_step is None:
+                dense_step = jax.jit(make_decode_step(cfg, impl="xla"))
+            fallbacks += 1
+            nxt, logits, cache_out = dense_step(params, cache_in, cur,
+                                                jnp.int32(pos))
+        return nxt, logits, cache_out
 
     tokens = batch["tokens"]
     t0 = time.time()
     for pos in range(split["tokens"]):
-        nxt, logits, cache = step(params, cache, tokens[:, pos:pos + 1],
-                                  jnp.int32(pos))
+        nxt, logits, cache = guarded(cache, tokens[:, pos:pos + 1], pos)
     prefill_t = time.time() - t0
 
     # ---- decode
@@ -76,7 +100,7 @@ def main(argv=None) -> int:
     cur = nxt[:, None]
     for i in range(args.gen - 1):
         pos = split["tokens"] + i
-        nxt, logits, cache = step(params, cache, cur, jnp.int32(pos))
+        nxt, logits, cache = guarded(cache, cur, pos)
         cur = nxt[:, None]
         out.append(np.asarray(nxt))
     decode_t = time.time() - t0
@@ -85,6 +109,9 @@ def main(argv=None) -> int:
           f"batch={args.batch} prompt={split['tokens']} gen={args.gen}")
     print(f"[serve] prefill {prefill_t:.2f}s, decode {decode_t:.2f}s "
           f"({args.gen * args.batch / max(decode_t, 1e-9):.1f} tok/s)")
+    if robust:
+        print(f"[serve] robust: {fallbacks} step(s) recomputed with dense "
+              f"attention")
     print(f"[serve] sample generations: {gen[:2].tolist()}")
     return 0
 

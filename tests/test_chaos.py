@@ -1,0 +1,165 @@
+"""Fault-injection (chaos) suite -- DESIGN.md §11.
+
+Drives ``repro.ft.chaos`` scenarios against the real pipelines.  The CI
+chaos step runs this file with ``REPRO_CHECKS=1`` (fatal flags raise) on a
+host platform faked to 8 devices; every scenario must either DETECT its
+fault (status flag observed or ``EstimationError`` raised) or SURVIVE it
+with sane output.  Silent garbage fails the suite.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ft import chaos, guards
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.mark.parametrize("name", sorted(chaos.SCENARIOS))
+def test_scenario(name):
+    report = chaos.run_scenario(name, seed=0)
+    if name in chaos.SURVIVE_OK:
+        assert report["survived"], (name, report)
+    else:
+        assert report["detected"], (name, report)
+
+
+def test_detection_scenarios_raise_under_checks(monkeypatch):
+    """With REPRO_CHECKS=1 the fatal-fault scenarios must escalate from
+    advisory flags to hard EstimationErrors (the chaos CI contract)."""
+    monkeypatch.setenv("REPRO_CHECKS", "1")
+    for name in ("nan_rows_hashed_query", "corrupt_hash_state"):
+        report = chaos.run_scenario(name, seed=0)
+        assert report["detected"], (name, report)
+
+
+def test_survival_scenarios_survive_under_checks(monkeypatch):
+    """Graceful-degradation scenarios must keep working when flags are
+    promoted to errors: recovery happens BELOW the check point."""
+    monkeypatch.setenv("REPRO_CHECKS", "1")
+    for name in sorted(chaos.SURVIVE_OK):
+        report = chaos.run_scenario(name, seed=0)
+        assert report["survived"], (name, report)
+
+
+def test_status_flags_decode_round_trip():
+    st = guards.NONFINITE | guards.BUCKET_OVERFLOW | guards.CG_NO_CONVERGE
+    names = guards.decode_status(st)
+    assert names == ["NONFINITE", "BUCKET_OVERFLOW", "CG_NO_CONVERGE"]
+    assert guards.decode_status(0) == []
+
+
+def test_raise_on_status_policy(monkeypatch):
+    monkeypatch.setenv("REPRO_CHECKS", "1")
+    with pytest.raises(guards.EstimationError, match="ZERO_MASS"):
+        guards.raise_on_status(guards.ZERO_MASS, context="unit")
+    # allowed flags never raise; the word is still returned for counters
+    s = guards.raise_on_status(guards.REJECT_EXHAUSTED,
+                               allow=guards.REJECT_EXHAUSTED)
+    assert s == guards.REJECT_EXHAUSTED
+    monkeypatch.setenv("REPRO_CHECKS", "0")
+    assert guards.raise_on_status(guards.NONFINITE) == guards.NONFINITE
+
+
+def test_checked_wrapper_flags_inf():
+    """guards.checked turns in-trace float faults into hard errors."""
+    def div(a, b):
+        return a / b
+
+    run = guards.checked(div)
+    ok = run(jnp.float32(1.0), jnp.float32(2.0))
+    assert float(ok) == 0.5
+    with pytest.raises(Exception):
+        run(jnp.float32(1.0), jnp.float32(0.0))
+
+
+def test_robust_estimator_clean_path_never_escalates():
+    """On healthy data the staged chain stops at its first stage."""
+    from repro.core.kernels_fn import gaussian
+
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal((160, 3)).astype(np.float32)
+    est = guards.RobustEstimator(
+        x, gaussian(1.0), seed=0,
+        stage_kw={"hash": {"max_bucket": 64, "num_far_samples": 32}})
+    vals = np.asarray(est.query(jnp.asarray(x[:24])))
+    assert np.all(np.isfinite(vals)) and np.all(vals > 0)
+    assert sum(est.escalations.values()) == 0
+    assert set(est._stages) == {"hash"}, "later stages must stay unbuilt"
+    assert est.evals > 0
+    est.evals = 0
+    assert est.evals == 0
+
+
+def test_robust_estimator_factory_and_fallback_counters():
+    from repro.core.kde.base import make_estimator
+    from repro.core.kernels_fn import gaussian
+
+    rng = np.random.default_rng(2)
+    x = rng.standard_normal((96, 3)).astype(np.float32)
+    est = make_estimator("robust", x, gaussian(1.0), seed=0)
+    assert isinstance(est, guards.RobustEstimator)
+    degs = est.degrees(batch=48)
+    truth = np.asarray(gaussian(1.0).matrix(jnp.asarray(x)).sum(1)) - 1.0
+    rel = np.abs(degs / np.maximum(truth, 1e-9) - 1)
+    assert rel.mean() < 0.35, rel.mean()
+
+
+def test_fallback_rate_warning(recwarn):
+    guards.warn_fallback_rate(0, 100, rounds=8, slack=2.0)
+    assert not [w for w in recwarn.list
+                if issubclass(w.category, RuntimeWarning)]
+    with pytest.warns(RuntimeWarning, match="fallback rate"):
+        guards.warn_fallback_rate(60, 100, rounds=8, slack=2.0)
+
+
+def test_serve_robust_dense_fallback_smoke():
+    """--robust recomputes a poisoned decode step with dense attention
+    (unit-level: the guarded-step policy, not the full CLI)."""
+    calls = {"dense": 0}
+
+    def kde_step(params, cache, cur, pos):
+        return cur[:, 0], jnp.full((2, 4), jnp.nan), cache
+
+    def dense_step(params, cache, cur, pos):
+        calls["dense"] += 1
+        return cur[:, 0], jnp.zeros((2, 4)), cache
+
+    # mirror of launch.serve's guarded() policy
+    cur = jnp.zeros((2, 1), jnp.int32)
+    nxt, logits, _ = kde_step(None, {}, cur, 0)
+    if not bool(jnp.all(jnp.isfinite(logits))):
+        nxt, logits, _ = dense_step(None, {}, cur, 0)
+    assert calls["dense"] == 1
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_serve_cli_has_robust_flag(capsys):
+    from repro.launch import serve
+
+    with pytest.raises(SystemExit):
+        serve.main(["--help"])
+    assert "--robust" in capsys.readouterr().out
+
+
+def test_edge_batches_status_surfaced():
+    """The sampler's status counters accumulate across fused programs and
+    stay clean on a healthy pipeline."""
+    from repro.core.kernels_fn import gaussian
+    from repro.core.sampling.edge import NeighborSampler
+
+    rng = np.random.default_rng(3)
+    x = rng.standard_normal((200, 3)).astype(np.float32)
+    ker = gaussian(1.0)
+    nbr = NeighborSampler(x, ker, mode="blocked", block_size=32, seed=0)
+    k = np.asarray(ker.matrix(jnp.asarray(x)), np.float64)
+    np.fill_diagonal(k, 0.0)
+    degs = k.sum(1).astype(np.float32)
+    cdf = (np.cumsum(degs) / degs.sum()).astype(np.float32)
+    u, v, w, q_uv, q_vu = nbr.edge_batches(
+        jnp.asarray(cdf), jnp.asarray(degs), float(degs.sum()), 256,
+        batch=128)
+    assert len(u) == 256 and np.all(np.isfinite(w))
+    assert nbr.status & guards.FATAL == 0, guards.decode_status(nbr.status)
+    assert isinstance(nbr.flag_counts, dict)

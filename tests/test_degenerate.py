@@ -1,0 +1,128 @@
+"""Degenerate-input behavior across every Definition 1.1 estimator.
+
+The contract (DESIGN.md §11): on degenerate but representable inputs --
+n=1 datasets, all-identical points, bandwidth under/overflow, all-zero
+rows -- every estimator either returns finite values or, under
+``REPRO_CHECKS=1``, raises ``EstimationError``.  NaN without a flag is the
+one forbidden outcome.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.kde.base import make_estimator
+from repro.core.kernels_fn import gaussian
+from repro.ft import guards
+
+jax.config.update("jax_platform_name", "cpu")
+
+ESTIMATORS = ("exact", "rs", "stratified", "exact_block", "hash", "robust")
+
+
+def _query(name, x, kernel, y):
+    est = make_estimator(name, x, kernel, seed=0)
+    return est, np.asarray(est.query(jnp.asarray(y)))
+
+
+def _finite_or_flagged(est, vals) -> bool:
+    if np.all(np.isfinite(vals)):
+        return True
+    return bool(int(np.asarray(getattr(est, "status", 0))))
+
+
+@pytest.mark.parametrize("name", ESTIMATORS)
+def test_single_point_dataset(name):
+    x = np.zeros((1, 3), np.float32)
+    est, vals = _query(name, x, gaussian(1.0), x)
+    assert vals.shape == (1,)
+    assert _finite_or_flagged(est, vals), vals
+
+
+@pytest.mark.parametrize("name", ESTIMATORS)
+def test_identical_points(name):
+    x = np.ones((64, 3), np.float32) * 0.5
+    est, vals = _query(name, x, gaussian(1.0), x[:8])
+    assert _finite_or_flagged(est, vals), vals
+    if np.all(np.isfinite(vals)):
+        # every pair at distance 0: the row sum is at most n
+        assert np.all(vals <= 64.0 + 1e-3)
+
+
+@pytest.mark.parametrize("name", ESTIMATORS)
+def test_bandwidth_underflow(name):
+    """h -> 0 (1e-15: small enough that every off-diagonal kernel value
+    underflows to exactly 0, large enough that 1/h^2 stays f32-finite).
+    Finite (possibly zero/floored) estimates, or a flag."""
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((64, 3)).astype(np.float32)
+    est, vals = _query(name, x, gaussian(1e-15), x[:8])
+    assert _finite_or_flagged(est, vals), vals
+
+
+@pytest.mark.parametrize("name", ESTIMATORS)
+def test_bandwidth_overflow(name):
+    """h -> inf: every kernel value tends to 1; row sums tend to n."""
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((64, 3)).astype(np.float32)
+    est, vals = _query(name, x, gaussian(1e20), x[:8])
+    assert _finite_or_flagged(est, vals), vals
+    if np.all(np.isfinite(vals)):
+        assert np.all(vals <= 64.0 * 1.01 + 1.0)
+
+
+@pytest.mark.parametrize("name", ESTIMATORS)
+def test_all_zero_rows(name):
+    x = np.zeros((32, 4), np.float32)
+    est, vals = _query(name, x, gaussian(2.0), x[:4])
+    assert _finite_or_flagged(est, vals), vals
+
+
+def test_zero_bandwidth_rejected_eagerly():
+    """Exactly 0.0 bandwidth dies in the kernel constructor (1/h), not as
+    silent NaN downstream -- the first line of defense."""
+    with pytest.raises(ZeroDivisionError):
+        gaussian(0.0)
+
+
+@pytest.mark.parametrize("name", ("stratified", "hash"))
+def test_degenerate_raises_or_flags_under_checks(name, monkeypatch):
+    """With REPRO_CHECKS=1 the zero-mass degenerate limit must either be
+    flagged fatal (raise) or produce clean finite output -- never flagged
+    AND silently returned."""
+    monkeypatch.setenv("REPRO_CHECKS", "1")
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal((64, 3)).astype(np.float32)
+    try:
+        est, vals = _query(name, x, gaussian(1e-15), x[:8])
+    except guards.EstimationError:
+        return                                  # flagged fatal: fine
+    assert np.all(np.isfinite(vals)), vals
+
+
+def test_sampler_degenerate_zero_mass_flagged():
+    """The blocked sampler over an underflowed kernel must raise the
+    ZERO_MASS flag rather than silently drawing from the floor."""
+    from repro.core.sampling.edge import NeighborSampler
+
+    rng = np.random.default_rng(2)
+    x = rng.standard_normal((128, 3)).astype(np.float32)
+    nbr = NeighborSampler(x, gaussian(1e-15), mode="blocked",
+                          block_size=32, seed=0)
+    nb, prob = nbr.sample(np.arange(8))
+    assert nbr.status & guards.ZERO_MASS, \
+        guards.decode_status(nbr.status)
+    assert np.all(nb >= 0) and np.all(nb < 128)
+
+
+def test_sampler_single_block_frontier():
+    """w=1 frontiers and n < block_size datasets stay in contract."""
+    from repro.core.sampling.edge import NeighborSampler
+
+    rng = np.random.default_rng(3)
+    x = rng.standard_normal((10, 2)).astype(np.float32)
+    nbr = NeighborSampler(x, gaussian(1.0), mode="blocked", block_size=16,
+                          seed=0)
+    nb, prob = nbr.sample(np.array([0]))
+    assert nb.shape == (1,) and 0 <= int(nb[0]) < 10 and int(nb[0]) != 0
+    assert np.isfinite(prob[0]) and prob[0] > 0

@@ -172,7 +172,8 @@ src = jnp.asarray(rng.integers(0, n, 64), jnp.int32)
 for exact in (True, False):
     eng = ShardedBlocks(mesh, x, ker, block_size=bsz, exact=exact,
                         samples_per_block=8)
-    nb, prob, sums = eng.fused_sample(src, key)
+    nb, prob, sums, st = eng.fused_sample(src, key)
+    assert int(np.asarray(st)) == 0, st
     rnb, rprob, rsums = sref.sharded_fused_sample_ref(
         eng.x_rep, eng.x_sq_rep, src, key, "gaussian", 1.0, 1.0, bsz,
         eng.blocks_per_shard, eng.num_shards, n, exact=exact, s=8)
@@ -182,7 +183,8 @@ for exact in (True, False):
     np.testing.assert_array_equal(np.asarray(sums), np.asarray(rsums))
 eng = ShardedBlocks(mesh, x, ker, block_size=bsz, exact=True)
 keys = jax.random.split(jax.random.PRNGKey(7), 5)
-end, _ = eng.walk_scan(src, keys)
+end, _, wst, wfb = eng.walk_scan(src, keys)
+assert int(np.asarray(wst)) == 0 and int(np.asarray(wfb)) == 0
 rend = sref.sharded_walk_ref(eng.x_rep, eng.x_sq_rep, src, keys, "gaussian",
                              1.0, 1.0, bsz, eng.blocks_per_shard,
                              eng.num_shards, n, exact=True)

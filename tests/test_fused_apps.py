@@ -49,8 +49,9 @@ def test_noisy_power_scan_matches_ref_oracle(cloud):
     v0 = jax.random.normal(key, (t,), jnp.float32)
     v0 = v0 / jnp.linalg.norm(v0)
     keys = jax.random.split(jax.random.PRNGKey(6), 10)
-    lam, v = sops.noisy_power_scan(ksub, v0, keys, num_samples=48)
+    lam, v, st = sops.noisy_power_scan(ksub, v0, keys, num_samples=48)
     lam_r, v_r = sref.noisy_power_ref(ksub, v0, keys, 48)
+    assert int(st) == 0, "healthy run must come back with a clean status"
     np.testing.assert_allclose(np.asarray(v), np.asarray(v_r), rtol=2e-5,
                                atol=2e-6)
     np.testing.assert_allclose(float(lam), float(lam_r), rtol=2e-5)
@@ -166,9 +167,11 @@ def test_triangle_scan_matches_ref_oracle(cloud):
     cfg = dict(kind="gaussian", inv_bw=1.0 / 2.0, beta=1.0, pairwise=None,
                block_size=bs, num_blocks=nb, n=n, s=8, exact=True,
                use_pallas=False, interpret=False, bm=128)
-    uu, vv, w_hat = sops.triangle_edge_scan(xd, x_sq, u, v, deg, keys, **cfg)
+    uu, vv, w_hat, st = sops.triangle_edge_scan(xd, x_sq, u, v, deg, keys,
+                                                **cfg)
     ru, rv, rw = sref.triangle_batch_ref(xd, x_sq, u, v, deg, keys,
                                          "gaussian", 1.0 / 2.0, 1.0, bs, n)
+    assert int(st) == 0
     np.testing.assert_array_equal(np.asarray(uu), np.asarray(ru))
     np.testing.assert_array_equal(np.asarray(vv), np.asarray(rv))
     np.testing.assert_allclose(np.asarray(w_hat), np.asarray(rw), rtol=2e-4,

@@ -56,11 +56,13 @@ def test_hashed_query_matches_oracle_bitwise(data):
     want, want_cnt = href.hashed_query_ref(xd, y, state, key, ker.name,
                                            1.0 / ker.bandwidth, 1.0, cw,
                                            64, 700)
-    got, cnt = hops.hashed_query(xd, y, state, key,
-                                 **_cfg(ker, cw, 64, 700))
-    got_p, cnt_p = hops.hashed_query(xd, y, state, key,
-                                     **_cfg(ker, cw, 64, 700,
-                                            use_pallas=True, interpret=True))
+    got, cnt, st = hops.hashed_query(xd, y, state, key,
+                                     **_cfg(ker, cw, 64, 700))
+    got_p, cnt_p, st_p = hops.hashed_query(xd, y, state, key,
+                                           **_cfg(ker, cw, 64, 700,
+                                                  use_pallas=True,
+                                                  interpret=True))
+    assert int(st) == 0 and int(st_p) == 0
     assert np.array_equal(np.asarray(got), np.asarray(want))
     assert np.array_equal(np.asarray(got_p), np.asarray(want))
     assert np.array_equal(np.asarray(cnt), np.asarray(want_cnt))
@@ -150,9 +152,10 @@ def test_hashed_block_sums_oracle_and_contract(data):
     want = href.hashed_block_sums_ref(xd, src, state, key, ker.name,
                                       1.0 / ker.bandwidth, 1.0, 2, bs_blk,
                                       nb, n)
-    got = hops.hashed_block_sums(xd, src, state, key, **kw)
-    got_p = hops.hashed_block_sums(xd, src, state, key, use_pallas=True,
-                                   interpret=True, **kw)
+    got, st = hops.hashed_block_sums(xd, src, state, key, **kw)
+    got_p, st_p = hops.hashed_block_sums(xd, src, state, key,
+                                         use_pallas=True, interpret=True,
+                                         **kw)
     assert np.array_equal(np.asarray(got), np.asarray(want))
     assert np.array_equal(np.asarray(got_p), np.asarray(want))
     # unbiasedness against the exact §2 read (same masking, same floor)
@@ -164,7 +167,7 @@ def test_hashed_block_sums_oracle_and_contract(data):
     reps = 150
     for i in range(reps):
         acc += np.asarray(hops.hashed_block_sums(
-            xd, src, state, jax.random.PRNGKey(100 + i), **kw))
+            xd, src, state, jax.random.PRNGKey(100 + i), **kw)[0])
     acc /= reps
     rel = np.abs(acc.sum(1) / exact.sum(1) - 1)
     assert rel.mean() < 0.1, rel.mean()
@@ -318,7 +321,8 @@ cc = collective_counts(lambda yy, kk: tab._program()(
     tab._keys, tab._members, tab._counts, tab._dims, tab._shift,
     tab.x_sh, yy, kk), y, key)
 assert cc["psum_total"] == 1 and cc["ppermute_total"] == 0, cc
-est, cnt = tab.query(y, key)
+est, cnt, st = tab.query(y, key)
+assert int(np.asarray(st)) == 0, st
 ref_est, ref_cnt = href.sharded_hashed_query_ref(
     tab.x_pad, y, tab.shard_states, key, ker.name, 1.0 / ker.bandwidth,
     1.0, tab.spec.cell_width, tab.num_far, n, tab.shard_size)
@@ -328,9 +332,9 @@ np.testing.assert_allclose(np.asarray(est), np.asarray(ref_est),
 # NEAR-only: sharded union of local buckets == flat bucket layout
 tab0 = ShardedHashTable(mesh, x, ker, seed=3, num_far_samples=0,
                         max_bucket=512)
-est0, cnt0 = tab0.query(y, key)
+est0, cnt0, _ = tab0.query(y, key)
 state, cw = hops.build_hash_state(x, ker, seed=3, max_bucket=512)
-estf, cntf = hops.hashed_query(
+estf, cntf, _ = hops.hashed_query(
     jnp.asarray(x), y, state, key, kind=ker.name,
     inv_bw=1.0 / ker.bandwidth, beta=1.0, pairwise=None, cell_width=cw,
     num_far=0, n=n)

@@ -161,6 +161,21 @@ def test_watchdog():
     assert 3 in d["dead"]
 
 
+def test_watchdog_flags_host_that_never_heartbeats():
+    """Regression: decide() used to skip hosts with steps == 0, so a host
+    that died before its FIRST heartbeat was never declared dead.  The
+    clock now starts at construction for every host."""
+    wd = Watchdog(hosts=3, heartbeat_timeout_s=10, now=0.0)
+    wd.beat(0, 1.0, now=12.0)
+    wd.beat(1, 1.0, now=12.0)
+    # host 2 never beats; inside the window nobody is dead yet
+    assert wd.decide(now=9.0)["dead"] == []
+    d = wd.decide(now=15.0)
+    assert d["dead"] == [2], d
+    # silent hosts never enter the straggler EWMA median
+    assert d["stragglers"] == []
+
+
 def test_gradient_compression_error_feedback():
     """int8 compression: biased per step, but error feedback keeps the
     accumulated gradient sum accurate."""
