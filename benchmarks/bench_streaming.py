@@ -1,0 +1,142 @@
+"""Streaming engine benchmark: patch-on-read updates vs full rebuilds
+(DESIGN.md §12).
+
+Both paths apply the SAME mutation sequence -- batches of ~1% of the rows
+(a third each insert / delete / update) -- and after every batch bring the
+kernel-graph state current and answer one degree draw + one neighbor draw
+at the new epoch:
+
+* **streaming** = ``DynamicDataset`` + dataset-attached ``NeighborSampler``
+  / ``DegreeSampler``: O(m) journal appends, then ONE coalesced patch
+  folded into the first query (``patch_block_sums`` O(w·m) +
+  ``degree_delta`` O(n·m) + prefix-CDF re-accumulation);
+* **rebuild** = the frozen engines' only option before PR 7: reconstruct
+  the level-1 block structure and recompute all n degrees (O(n²) exact
+  evals) over the compacted live rows after every batch.
+
+Measured at n = 16384 (quick: n = 4096), exact level-1 on both sides so
+the work compared is identical math.  Writes ``BENCH_streaming.json``;
+the PR-7 acceptance floor is ≥5x update throughput at n = 16384.
+
+derived = "rows_per_sec=<new>;rebuild_rows_per_sec=<old>;speedup=<x>"
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.dataset import DynamicDataset
+from repro.core.kernels_fn import gaussian
+from repro.core.sampling.edge import NeighborSampler
+from repro.core.sampling.vertex import DegreeSampler
+
+_JSON_PATH = Path(__file__).resolve().parent.parent / "BENCH_streaming.json"
+
+
+def _mutation_plan(rng, n, d, m, batches):
+    """Pre-generate the identical mutation sequence for both paths.
+    Deletes stay clear of the frontier rows [0, 64) and of each other."""
+    mi = md = m // 3
+    mu = m - mi - md
+    dead_pool = rng.permutation(np.arange(64, n))[: md * batches]
+    plan = []
+    for b in range(batches):
+        plan.append(dict(
+            ins=rng.normal(0, 0.5, (mi, d)).astype(np.float32),
+            dele=np.sort(dead_pool[b * md:(b + 1) * md]),
+            upd_rows=rng.normal(0, 0.5, (mu, d)).astype(np.float32)))
+    return plan
+
+
+def _apply(ds, batch, rng):
+    ds.insert_rows(batch["ins"])
+    ds.delete_rows(batch["dele"])
+    live = ds.live_slots()
+    upd = rng.choice(live[live >= 64], size=len(batch["upd_rows"]),
+                     replace=False)
+    ds.update_rows(upd, batch["upd_rows"])
+
+
+def run(quick: bool = False) -> None:
+    """Benchmark entry point (called by ``benchmarks.run``)."""
+    n = 4096 if quick else 16384
+    d = 8
+    m = max(n // 100, 3)          # ≤1% of rows mutated per batch
+    batches = 3 if quick else 4
+    rng = np.random.default_rng(0)
+    x = rng.normal(0, 0.5, (n, d)).astype(np.float32)
+    ker = gaussian(2.0)
+    bs = max(int(np.sqrt(n)), 16)
+    src = np.arange(64)
+    cap = n + batches * m + 64
+
+    # ---- streaming path: one dataset, consumers patch at their next query
+    ds = DynamicDataset(x, capacity=cap, journal_limit=4 * batches)
+    nbr = NeighborSampler(ds.x_pad, ker, dataset=ds, exact_blocks=True,
+                          block_size=bs, seed=0)
+    deg = DegreeSampler(nbr.blocks, seed=1, dataset=ds)
+    deg.sample(8)                 # build the initial CDF outside the clock
+    nbr.sample(src)
+    plan = _mutation_plan(rng, n, d, m, batches + 1)
+    warmup, plan = plan[0], plan[1:]
+    mrng = np.random.default_rng(7)
+
+    def stream_batch(batch):
+        _apply(ds, batch, mrng)
+        deg.sample(8)             # folds the coalesced degree/CDF patch in
+        nbr.sample(src)           # folds the level-1 patch in
+
+    stream_batch(warmup)          # compile the patch programs off-clock
+    t0 = time.perf_counter()
+    for batch in plan:
+        stream_batch(batch)
+    t_stream = time.perf_counter() - t0
+    assert deg.rebuilds == 0, "journal gap hit -- benchmark mis-sized"
+
+    # ---- rebuild baseline: frozen engines reconstructed after every batch
+    ds2 = DynamicDataset(x, capacity=cap, journal_limit=4 * batches)
+    mrng = np.random.default_rng(7)
+
+    def rebuild_batch(batch):
+        _apply(ds2, batch, mrng)
+        x_live, _ = ds2.live_x()
+        nbr2 = NeighborSampler(x_live, ker, exact_blocks=True,
+                               block_size=bs, seed=0)
+        deg2 = DegreeSampler(nbr2.blocks, seed=1)
+        deg2.sample(8)
+        nbr2.sample(src)
+
+    rebuild_batch(warmup)
+    t0 = time.perf_counter()
+    for batch in plan:
+        rebuild_batch(batch)
+    t_rebuild = time.perf_counter() - t0
+
+    rows = m * batches
+    new_rps = rows / t_stream
+    old_rps = rows / t_rebuild
+    speedup = new_rps / old_rps
+    emit(f"streaming_update_n{n}_m{m}", t_stream * 1e6 / batches,
+         f"rows_per_sec={new_rps:.0f};rebuild_rows_per_sec={old_rps:.0f};"
+         f"speedup={speedup:.1f}")
+
+    payload = {
+        "n": n, "d": d, "mutated_rows_per_batch": m, "batches": batches,
+        "mutate_frac": m / n, "block_size": bs,
+        "streaming_rows_per_sec": new_rps,
+        "rebuild_rows_per_sec": old_rps,
+        "streaming_sec_per_batch": t_stream / batches,
+        "rebuild_sec_per_batch": t_rebuild / batches,
+        "speedup": speedup,
+    }
+    _JSON_PATH.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"# wrote {_JSON_PATH.name}: {speedup:.1f}x update throughput "
+          f"over full rebuilds at n={n}, {100 * m / n:.1f}% rows/batch")
+
+
+if __name__ == "__main__":
+    run(quick=True)

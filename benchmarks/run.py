@@ -22,6 +22,7 @@ BENCHES = {
     "distributed": "benchmarks.bench_distributed", # sharded engine (§9)
     "eigen_spectrum": "benchmarks.bench_eigen_spectrum",  # Thms 5.22 / 5.17
     "attention": "benchmarks.bench_attention",     # framework integration
+    "streaming": "benchmarks.bench_streaming",     # dynamic datasets (§12)
 }
 
 

@@ -122,6 +122,15 @@ class ShardedKDE:
         self._key, k = jax.random.split(self._key)
         return k
 
+    def patch_rows(self, slots, rows) -> None:
+        """Streaming mutation passthrough (DESIGN.md §12): scatter the
+        mutated rows into the engine's sharded + replicated dataset copies
+        (zero collectives -- each shard patches only its own rows) and
+        refresh the replicated views consumers hold."""
+        self.engine.patch_rows(slots, rows)
+        self.x = self.engine.x_rep[: self.n]
+        self.x_sq = self.engine.x_sq_rep[: self.n]
+
     def _query_evals(self, m: int) -> int:
         if self.exact:
             return m * self.n

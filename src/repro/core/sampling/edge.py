@@ -91,9 +91,17 @@ class NeighborSampler:
                  seed: int = 0, use_pallas: Optional[bool] = None,
                  interpret: Optional[bool] = None, mesh=None,
                  data_axes=("data",), level1: str = "blocked",
-                 hash_opts: Optional[dict] = None):
+                 hash_opts: Optional[dict] = None, dataset=None):
         from repro.kernels.kde_sampler import ops as _ops
         self._ops = _ops
+        # streaming attach (DESIGN.md §12): engines build over the padded
+        # capacity; every public entry epoch-checks and patches/rebuilds
+        self._dataset = dataset
+        self._ds_epoch = int(dataset.epoch) if dataset is not None else 0
+        if dataset is not None:
+            if mode != "blocked":
+                raise ValueError("dataset= needs the blocked engine")
+            x = dataset.x_pad
         self.x = jnp.asarray(x, jnp.float32)
         self.kernel = kernel
         self.n = int(x.shape[0])
@@ -125,6 +133,12 @@ class NeighborSampler:
                                  "(kde_hash.sharded), not draws")
         if mode == "blocked":
             bs = block_size or max(int(np.sqrt(self.n)), 16)
+            # kept for the streaming rebuild path (journal gap / capacity
+            # growth re-runs this construction over the new padded array)
+            self._mesh0 = mesh
+            self._axes0 = data_axes
+            self._spb0 = samples_per_block
+            self._seed0 = seed
             if mesh is not None:
                 # Mesh construction path (DESIGN.md §9): the level-1 block
                 # structure lives sharded inside a ShardedKDE; draws are
@@ -176,6 +190,7 @@ class NeighborSampler:
                                        seed=seed + 7919,
                                        use_pallas=bool(use_pallas),
                                        interpret=bool(interpret),
+                                       dataset=dataset,
                                        **hopts)
                 self._hstate = self._hash.state
             from repro.kernels.kde_sampler.ref import static_pairwise
@@ -193,7 +208,10 @@ class NeighborSampler:
             self._l2_cfg = {k: self._cfg[k] for k in
                             ("kind", "inv_bw", "beta", "pairwise",
                              "block_size", "n")}
-            self._l1_cache: Optional[Tuple[bytes, jnp.ndarray]] = None
+            # (digest, block sums, frontier indices) -- the indices let the
+            # streaming sync decide patch-vs-drop when the dataset mutates
+            self._l1_cache: Optional[
+                Tuple[bytes, jnp.ndarray, np.ndarray]] = None
         elif mode == "tree":
             assert tree is not None, "tree mode needs a MultiLevelKDE"
             self.x_sq = jnp.sum(self.x * self.x, axis=-1)
@@ -234,6 +252,103 @@ class NeighborSampler:
         _g.raise_on_status(s, context=context, allow=_BENIGN)
         return s
 
+    # ------------------------------------------------------------------ #
+    # streaming contract (DESIGN.md §12)
+    def _rebuild(self) -> None:
+        """Full level-1 rebuild over the dataset's current padded array --
+        the journal-gap / capacity-growth path of the streaming contract.
+        Block size is kept; the block count follows the new capacity."""
+        ds = self._dataset
+        self.x = jnp.asarray(ds.x_pad, jnp.float32)
+        self.n = int(self.x.shape[0])
+        bs = self.block_size
+        if self._engine is not None:
+            from repro.core.kde.distributed import ShardedKDE
+            self._blocks = ShardedKDE(
+                self._mesh0, self.x, self.kernel, block_size=bs,
+                samples_per_block=self._spb0, exact=self.exact_blocks,
+                data_axes=self._axes0, seed=self._seed0)
+            self._engine = self._blocks.engine
+        elif self.exact_blocks:
+            self._blocks = ExactBlockKDE(self.x, self.kernel, block_size=bs)
+        else:
+            self._blocks = StratifiedKDE(
+                self.x, self.kernel, block_size=bs,
+                samples_per_block=self._spb0, seed=self._seed0)
+        self.x = self._blocks.x
+        self.x_sq = self._blocks.x_sq
+        self.num_blocks = self._blocks.num_blocks
+        self._cfg.update(n=self.n, num_blocks=self.num_blocks)
+        self._l2_cfg["n"] = self.n
+        self._l1_cache = None
+
+    def _sync(self) -> None:
+        """Epoch check at every public entry: refresh the dataset views,
+        patch the cached level-1 read by the coalesced mutation delta
+        (O(w m) evals; dropped instead when a cached frontier row itself
+        mutated), patch the sharded engine's device copies (zero
+        collectives), and let a hashed level-1 run its own patch-or-
+        rebuild.  A journal gap falls back to ``_rebuild``."""
+        ds = self._dataset
+        if ds is None or self._ds_epoch == int(ds.epoch):
+            return
+        from repro.core.dataset import coalesce_mutations
+        batches = ds.mutations_since(self._ds_epoch)
+        if batches is None:
+            self._rebuild()
+            if self._hash is not None:
+                self._hash._sync()
+                self._hstate = self._hash.state
+            self._ds_epoch = int(ds.epoch)
+            return
+        slots, old_x, new_x, _, _ = coalesce_mutations(batches)
+        if self._engine is not None:
+            # mesh path: one zero-collective scatter program patches the
+            # sharded + replicated dataset copies; the cached level-1 sums
+            # live in flat layout only, so the sharded cache is dropped
+            self._blocks.patch_rows(jnp.asarray(slots),
+                                    jnp.asarray(new_x, jnp.float32))
+            self.x = self._blocks.x
+            self.x_sq = self._blocks.x_sq
+            self._l1_cache = None
+        else:
+            # jnp arrays rebind on mutation -- refresh every shared view
+            self.x = ds.x_pad
+            self.x_sq = ds.x_sq_pad
+            self._blocks.x = self.x
+            self._blocks.x_sq = self.x_sq
+            if self._l1_cache is not None:
+                dig, bs, src32 = self._l1_cache
+                if np.intersect1d(src32,
+                                  np.asarray(slots, np.int64)).size:
+                    self._l1_cache = None   # frontier row itself mutated
+                else:
+                    bs = self._ops.patch_block_sums(
+                        bs, self.x, jnp.asarray(src32),
+                        jnp.asarray(slots), jnp.asarray(old_x, jnp.float32),
+                        jnp.asarray(new_x, jnp.float32),
+                        kind=self._cfg["kind"], inv_bw=self._cfg["inv_bw"],
+                        beta=self._cfg["beta"],
+                        pairwise=self._cfg["pairwise"],
+                        block_size=self.block_size)
+                    self._count(2 * len(src32) * len(slots))
+                    self._l1_cache = (dig, bs, src32)
+        if self._hash is not None:
+            self._hash._sync()
+            self._hstate = self._hash.state
+        self._ds_epoch = int(ds.epoch)
+
+    def _check_frontier(self, src32: np.ndarray, context: str) -> None:
+        """Liveness gate for caller-supplied frontiers: referencing a
+        deleted slot folds ``EPOCH_STALE`` into the status word (an
+        ``EstimationError`` under ``REPRO_CHECKS=1`` -- the flag is not in
+        ``_BENIGN``)."""
+        ds = self._dataset
+        if ds is None:
+            return
+        if not bool(np.all(ds.is_live(np.asarray(src32)))):
+            self._note(_g.EPOCH_STALE, context)
+
     @property
     def hash_estimator(self):
         """The shared hashed-KDE estimator behind ``level1="hash"`` --
@@ -271,7 +386,7 @@ class NeighborSampler:
                                              hstate=self._hstate,
                                              **self._cfg)
         self._count(self._level1_evals(len(src32)))
-        self._l1_cache = (dig, bs)
+        self._l1_cache = (dig, bs, src32)
         return bs
 
     def sample(self, src: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
@@ -279,6 +394,8 @@ class NeighborSampler:
         src = np.asarray(src)
         if self.mode == "tree":
             return self._sample_tree(src)
+        self._sync()
+        self._check_frontier(src, "NeighborSampler.sample")
         src32 = np.ascontiguousarray(src, np.int32)
         src_dev = jnp.asarray(src32)
         dig = self._digest(src32)
@@ -299,7 +416,7 @@ class NeighborSampler:
                     self.x, self.x_sq, src_dev, self._next_key(),
                     hstate=self._hstate, **self._cfg)
             self._count(self._level1_evals(len(src)))
-            self._l1_cache = (dig, bs)
+            self._l1_cache = (dig, bs, src32)
         self._count(len(src) * self.block_size)
         self._note(st, "NeighborSampler.sample")
         return np.asarray(nb), np.asarray(prob)
@@ -309,6 +426,9 @@ class NeighborSampler:
         src, dst = np.asarray(src), np.asarray(dst)
         if self.mode == "tree":
             return self._prob_of_tree(src, dst)
+        self._sync()
+        self._check_frontier(np.concatenate([src, dst]),
+                             "NeighborSampler.prob_of")
         src32 = np.ascontiguousarray(src, np.int32)
         src_dev = jnp.asarray(src32)
         bs = self._level1(src32, src_dev)
@@ -397,6 +517,8 @@ class NeighborSampler:
         src = np.asarray(src)
         if self.mode == "tree":
             return self._sample_exact_host(src, rounds, slack)
+        self._sync()
+        self._check_frontier(src, "NeighborSampler.sample_exact")
         src32 = np.ascontiguousarray(src, np.int32)
         src_dev = jnp.asarray(src32)
         bs = self._level1(src32, src_dev)
@@ -453,6 +575,7 @@ class NeighborSampler:
         partial batch are discarded, which leaves the estimator unbiased
         (edges are iid)."""
         assert self.mode == "blocked", "fused edge batches need blocked mode"
+        self._sync()
         t = int(t)
         num_batches = max((t + batch - 1) // batch, 1)
         keys = jax.random.split(self._next_key() if key is None else key,
@@ -492,6 +615,9 @@ class NeighborSampler:
         num_draws*m*(bs + 1)`` kernel evals for stratified reads
         (``m*(n + 1) + ...`` exact)."""
         assert self.mode == "blocked", "fused triangle batches need blocked mode"
+        self._sync()
+        self._check_frontier(np.concatenate([np.asarray(u), np.asarray(v)]),
+                             "NeighborSampler.triangle_batches")
         m = len(np.asarray(u))
         keys = jax.random.split(self._next_key() if key is None else key,
                                 int(num_draws) + 1)
@@ -521,6 +647,8 @@ class NeighborSampler:
         never stacked on device and None is returned in its place --
         endpoints are bitwise identical either way (same key stream)."""
         assert self.mode == "blocked", "device walks need blocked mode"
+        self._sync()
+        self._check_frontier(np.asarray(starts), "NeighborSampler.walk")
         starts_dev = jnp.asarray(starts, jnp.int32)
         keys = jax.random.split(self._next_key() if key is None else key,
                                 length)

@@ -32,7 +32,26 @@ class RowNormSampler:
     """
 
     def __init__(self, x, kernel: Kernel, estimator: str = "exact",
-                 seed: int = 0, mesh=None, data_axes=("data",), **est_kw):
+                 seed: int = 0, mesh=None, data_axes=("data",),
+                 dataset=None, **est_kw):
+        # streaming attach (DESIGN.md §12): flat dense estimators only --
+        # the row-norm structure lives over the SCALED padded array, which
+        # is recomputed row-wise (cX) at every sync
+        if dataset is not None:
+            if mesh is not None:
+                raise ValueError("RowNormSampler(dataset=) is single-"
+                                 "device; drop mesh= or the dataset")
+            if estimator not in ("exact", "exact_block", "stratified"):
+                raise ValueError(
+                    f"streaming row norms need a dense estimator "
+                    f"(exact/exact_block/stratified), got {estimator!r}")
+            x = dataset.x_pad
+        self._dataset = dataset
+        self._ds_epoch = int(dataset.epoch) if dataset is not None else 0
+        self._est_name = estimator
+        self._est_kw = dict(est_kw)
+        self._seed = seed
+        self.rebuilds = 0
         self.x = jnp.asarray(x, jnp.float32)   # shared device dataset
         self.x_sq = jnp.sum(self.x * self.x, axis=-1)
         self.kernel = kernel
@@ -62,15 +81,7 @@ class RowNormSampler:
                                        **est_kw)
         n = int(xs.shape[0])
         self.n = n
-        # KDE on cX returns sum_j k(cx_i, cx_j) = sum_j k(x_i, x_j)^2, the
-        # squared row norm *including* the diagonal (k(x,x)^2 = 1) -- which is
-        # exactly ||K_i,*||_2^2; no self-subtraction here.
-        probs = np.zeros(n, np.float64)
-        batch = 1024
-        for lo in range(0, n, batch):
-            hi = min(lo + batch, n)
-            probs[lo:hi] = np.asarray(self._est.query(xs[lo:hi]))
-        self.row_norms_sq = np.maximum(probs, 1e-12)
+        self.row_norms_sq = self._init_probs(xs)
         self._cdf = PrefixCDF(self.row_norms_sq, seed=seed)
         self.total = self._cdf.total          # ~= ||K||_F^2
         self._row_evals = 0
@@ -80,6 +91,78 @@ class RowNormSampler:
                              beta=getattr(kernel, "beta", 1.0),
                              pairwise=static_pairwise(kernel))
 
+    def _init_probs(self, xs: jnp.ndarray) -> np.ndarray:
+        """n KDE queries against cX -> squared row norms.  KDE on cX
+        returns sum_j k(cx_i, cx_j) = sum_j k(x_i, x_j)^2, the squared row
+        norm *including* the diagonal (k(x,x)^2 = 1) -- exactly
+        ||K_i,*||_2^2; no self-subtraction.  With a streaming dataset only
+        LIVE rows are queried (scaled sentinels stay query-safe as data
+        columns but not as queries); dead slots get weight exactly 0."""
+        probs = np.zeros(self.n, np.float64)
+        batch = 1024
+        if self._dataset is None:
+            for lo in range(0, self.n, batch):
+                hi = min(lo + batch, self.n)
+                probs[lo:hi] = np.asarray(self._est.query(xs[lo:hi]))
+            return np.maximum(probs, 1e-12)
+        ls = np.asarray(self._dataset.live_slots())
+        for lo in range(0, len(ls), batch):
+            sel = ls[lo:lo + batch]
+            probs[sel] = np.asarray(self._est.query(xs[jnp.asarray(sel)]))
+        probs[ls] = np.maximum(probs[ls], 1e-12)
+        return probs
+
+    # ------------------------------------------------------------------ #
+    # streaming contract (DESIGN.md §12)
+    def _sync(self) -> None:
+        """Epoch check at every public entry: rescale the coalesced
+        mutation rows by the squaring constant, patch the squared row
+        norms through the same ``degree_delta`` program as the degree
+        path (plus the diagonal the row norms keep), and re-accumulate
+        the prefix CDF; journal gaps rebuild the estimator over the
+        freshly scaled padded array."""
+        ds = self._dataset
+        if ds is None or self._ds_epoch == int(ds.epoch):
+            return
+        from repro.core.dataset import coalesce_mutations
+        self.x = jnp.asarray(ds.x_pad, jnp.float32)
+        self.x_sq = ds.x_sq_pad
+        xs = squared_kernel_dataset(self.kernel, self.x)
+        xs_sq = jnp.sum(xs * xs, axis=-1)
+        batches = ds.mutations_since(self._ds_epoch)
+        if batches is None:
+            self.n = int(xs.shape[0])
+            self._est = make_estimator(self._est_name, xs, self.kernel,
+                                       seed=self._seed, **self._est_kw)
+            self.row_norms_sq = self._init_probs(xs)
+            self.rebuilds += 1
+        else:
+            self._est.x = xs               # dense views rebind on mutation
+            self._est.x_sq = xs_sq
+            slots, old_x, new_x, old_live, new_live = \
+                coalesce_mutations(batches)
+            c = float(self.kernel.squaring_constant)
+            from repro.kernels.kde_sampler import ops as _ops
+            d = np.asarray(_ops.degree_delta(
+                jnp.asarray(self.row_norms_sq, jnp.float32), xs, xs_sq,
+                jnp.asarray(slots),
+                jnp.asarray(old_x, jnp.float32) * c,
+                jnp.asarray(new_x, jnp.float32) * c,
+                jnp.asarray(old_live), jnp.asarray(new_live),
+                **self._row_cfg), np.float64)
+            # degree_delta recomputes mutated rows as row sum MINUS the
+            # self kernel; row norms keep the diagonal (k(x,x)^2 = 1)
+            sl = np.asarray(slots)
+            d[sl] += np.asarray(new_live, np.float64)
+            self._est.evals += 2 * len(sl) * self.n
+            live = np.zeros(self.n, bool)
+            live[np.asarray(ds.live_slots())] = True
+            self.row_norms_sq = np.where(live, np.maximum(d, 1e-12), 0.0)
+        self._cdf = PrefixCDF(self.row_norms_sq,
+                              seed=self._seed + int(ds.epoch))
+        self.total = self._cdf.total
+        self._ds_epoch = int(ds.epoch)
+
     @property
     def evals(self) -> int:
         """Kernel evaluations spent on preprocessing + row reads."""
@@ -87,10 +170,12 @@ class RowNormSampler:
 
     def sample(self, size: int) -> np.ndarray:
         """Draw ``size`` iid row indices i ~ ||K_i,*||^2 (Section 5.2)."""
+        self._sync()
         return self._cdf.sample(size)
 
     def prob(self, idx) -> np.ndarray:
         """Probability this sampler assigns to row idx."""
+        self._sync()
         return self._cdf.prob(idx)
 
     # ------------------------------------------------------------------ #
@@ -99,6 +184,7 @@ class RowNormSampler:
         """Exact kernel rows K_{idx,*} as one jitted device program (the
         mesh path computes them shard-local against the sharded dataset)."""
         from repro.kernels.kde_sampler import ops as sampler_ops
+        self._sync()
         sel = jnp.asarray(np.ascontiguousarray(idx, np.int32))
         self._row_evals += len(idx) * self.n
         if self._rows_engine is not None:

@@ -100,6 +100,40 @@ def host_degree_loop(estimator: KDEBase, batch: int = 1024) -> np.ndarray:
         estimator.kernel.pairs(estimator.x, estimator.x), np.float64)
 
 
+def streaming_degrees(estimator: KDEBase, dataset,
+                      batch: int = 1024) -> np.ndarray:
+    """Algorithm 4.3 over a mutable padded dataset (DESIGN.md §12): only
+    LIVE rows are queried (a sentinel query against a sentinel data row
+    evaluates ``inf - inf``), dead slots get weight exactly 0 -- the
+    inverse CDF then never draws them -- and the 1e-12 positivity clamp of
+    ``approximate_degrees`` applies to live entries only.  Estimators
+    attached to the same dataset answer through their own streaming-aware
+    ``degrees()``."""
+    from repro.kernels.kde_sampler.ref import BUILTIN_KINDS
+    if getattr(estimator, "_dataset", None) is dataset \
+            and hasattr(estimator, "degrees"):
+        out = np.asarray(estimator.degrees(), np.float64)
+    else:
+        sync = getattr(estimator, "_sync", None)
+        if sync is not None:
+            sync()
+        ls = np.asarray(dataset.live_slots())
+        out = np.zeros(estimator.n, np.float64)
+        x = estimator.x
+        for lo in range(0, len(ls), batch):
+            sel = jnp.asarray(ls[lo:lo + batch])
+            out[ls[lo:lo + batch]] = np.asarray(estimator.query(x[sel]))
+        if estimator.kernel.name in BUILTIN_KINDS:
+            out[ls] -= 1.0
+        else:
+            lv = jnp.asarray(ls)
+            out[ls] -= np.asarray(estimator.kernel.pairs(x[lv], x[lv]),
+                                  np.float64)
+    live = np.zeros(len(out), bool)
+    live[np.asarray(dataset.live_slots())] = True
+    return np.where(live, np.maximum(out, 1e-12), 0.0)
+
+
 def approximate_degrees(estimator: KDEBase, batch: int = 1024) -> np.ndarray:
     """Algorithm 4.3: p_i = KDE_X(x_i) - k(x_i, x_i).
 
@@ -123,33 +157,128 @@ class DegreeSampler:
     instead of a host batch loop; the prefix CDF then accumulates in
     float64 on the host exactly as on the single-device path."""
 
-    def __init__(self, estimator: KDEBase, seed: int = 0, mesh=None):
+    def __init__(self, estimator: KDEBase, seed: int = 0, mesh=None,
+                 dataset=None):
         if mesh is not None and not hasattr(estimator, "degrees"):
             raise ValueError("DegreeSampler(mesh=...) needs a mesh-resident"
                              " estimator (core.kde.distributed.ShardedKDE)")
-        self.degrees = approximate_degrees(estimator)
+        self._estimator = estimator
+        self._seed = seed
+        self._dataset = dataset
+        self._ds_epoch = int(dataset.epoch) if dataset is not None else 0
+        self.rebuilds = 0
+        if dataset is not None:
+            self.degrees = streaming_degrees(estimator, dataset)
+        else:
+            self.degrees = approximate_degrees(estimator)
         self._cdf = PrefixCDF(self.degrees, seed=seed)
         self.total = self._cdf.total
+
+    # ------------------------------------------------------------------ #
+    # streaming contract (DESIGN.md §12)
+    def _rebuild_estimator(self) -> None:
+        """Journal-gap path: estimators attached to the same dataset
+        rebuild themselves; plain dense estimators are reconstructed over
+        the dataset's current padded array (same class, same layout
+        knobs).  Sub-sampling estimators (``rs`` / ``grid_hbe``) have no
+        live-mass-preserving rebuild and are rejected."""
+        est = self._estimator
+        ds = self._dataset
+        if getattr(est, "_dataset", None) is ds and hasattr(est, "_sync"):
+            est._sync()
+            return
+        from repro.core.kde.base import (ExactBlockKDE, ExactKDE,
+                                         StratifiedKDE)
+        if isinstance(est, StratifiedKDE):
+            self._estimator = StratifiedKDE(
+                ds.x_pad, est.kernel, block_size=est.block_size,
+                samples_per_block=est.samples_per_block, seed=self._seed)
+        elif isinstance(est, ExactBlockKDE):
+            self._estimator = ExactBlockKDE(ds.x_pad, est.kernel,
+                                            block_size=est.block_size)
+        elif isinstance(est, ExactKDE):
+            self._estimator = ExactKDE(ds.x_pad, est.kernel)
+        else:
+            raise ValueError(
+                f"{type(est).__name__} has no streaming rebuild; attach "
+                "the dataset to the estimator (HashedKDE(dataset=...)) or "
+                "use a dense estimator")
+
+    def _sync(self) -> None:
+        """Epoch check at every public entry: patch the degree vector by
+        the coalesced mutation delta (``ops.degree_delta``, O(n m) evals
+        for an m-row batch) and re-accumulate the float64 prefix CDF
+        (O(n)); journal gaps recompute degrees from scratch.  Mutated
+        slots get exact recomputes, so repeated patching does not drift
+        beyond the estimator's own error on untouched rows."""
+        ds = self._dataset
+        if ds is None or self._ds_epoch == int(ds.epoch):
+            return
+        from repro.core.dataset import coalesce_mutations
+        est = self._estimator
+        batches = ds.mutations_since(self._ds_epoch)
+        if batches is None:
+            self._rebuild_estimator()
+            self.degrees = streaming_degrees(self._estimator, ds)
+            self.rebuilds += 1
+        else:
+            slots, old_x, new_x, old_live, new_live = \
+                coalesce_mutations(batches)
+            if hasattr(est, "patch_rows"):     # mesh adapter: idempotent
+                est.patch_rows(jnp.asarray(slots),
+                               jnp.asarray(new_x, jnp.float32))
+                x, x_sq = est.x, est.x_sq
+            elif getattr(est, "_dataset", None) is ds:
+                est._sync()                    # self-syncing (HashedKDE)
+                x, x_sq = ds.x_pad, ds.x_sq_pad
+            else:                              # dense: refresh stale views
+                est.x = ds.x_pad
+                est.x_sq = ds.x_sq_pad
+                x, x_sq = est.x, est.x_sq
+            from repro.kernels.kde_sampler import ops as _ops
+            from repro.kernels.kde_sampler.ref import static_pairwise
+            k = est.kernel
+            d = np.asarray(_ops.degree_delta(
+                jnp.asarray(self.degrees, jnp.float32), x, x_sq,
+                jnp.asarray(slots), jnp.asarray(old_x, jnp.float32),
+                jnp.asarray(new_x, jnp.float32),
+                jnp.asarray(old_live), jnp.asarray(new_live),
+                kind=k.name, inv_bw=1.0 / k.bandwidth,
+                beta=getattr(k, "beta", 1.0),
+                pairwise=static_pairwise(k)), np.float64)
+            est.evals += 2 * len(np.asarray(slots)) * len(d)
+            live = np.zeros(len(d), bool)
+            live[np.asarray(ds.live_slots())] = True
+            self.degrees = np.where(live, np.maximum(d, 1e-12), 0.0)
+        # seed varies by epoch so rebuilds do not replay the draw stream
+        self._cdf = PrefixCDF(self.degrees,
+                              seed=self._seed + int(ds.epoch))
+        self.total = self._cdf.total
+        self._ds_epoch = int(ds.epoch)
 
     def sample(self, size: int) -> np.ndarray:
         """Draw ``size`` vertices u ~ deg(u) / sum deg (Algorithm 4.6).
 
         >>> u = DegreeSampler(est).sample(1024)
         """
+        self._sync()
         return self._cdf.sample(size)
 
     def prob(self, idx) -> np.ndarray:
         """Probability this sampler assigns to vertex idx (p_i / sum p_j)."""
+        self._sync()
         return self._cdf.prob(idx)
 
     @property
     def cdf_device(self) -> jnp.ndarray:
         """Normalized float32 prefix array for the fused edge-batch op."""
+        self._sync()
         return self._cdf.cdf_device
 
     @property
     def degrees_device(self) -> jnp.ndarray:
         """Raw float32 degree array for the fused edge-batch op."""
+        self._sync()
         return self._cdf.weights_device
 
 

@@ -6,6 +6,12 @@ vectorized over the frontier; in blocked mode the whole T-step walk is one
 compiled ``lax.scan`` program -- the frontier stays on device between steps
 (DESIGN.md §3), with one transfer in (starts) and one out (endpoints/path).
 Tree mode falls back to the host step loop.
+
+Streaming-safe by construction (DESIGN.md §12): every step goes through
+the ``NeighborSampler``, which epoch-checks its attached ``DynamicDataset``
+and patches its level-1 state before the first draw -- walks launched
+after a mutation batch run entirely at the new epoch, and a stale
+``starts`` frontier raises ``EPOCH_STALE`` under ``REPRO_CHECKS=1``.
 """
 from __future__ import annotations
 

@@ -236,6 +236,61 @@ def _silent_host_watchdog(rng):
     return int(detected), res["dead"] == [2], str(res)
 
 
+def _overflow_insert_storm(rng):
+    """Streaming fault (DESIGN.md §12): an insert storm aimed at ONE grid
+    cell.  New rows whose cell is absent from the frozen bucket layout
+    land in the overflow region; a storm of them must saturate it and
+    surface ``OVERFLOW_SATURATED`` (an ``EstimationError`` under
+    ``REPRO_CHECKS=1``, an automatic compaction otherwise) -- never a
+    silently-dropped row."""
+    from repro.core.dataset import DynamicDataset
+    from repro.core.kde.hashed import HashedKDE
+    from repro.core.kernels_fn import gaussian
+
+    x = _dataset(rng)
+    ds = DynamicDataset(x, capacity=1024)
+    est = HashedKDE(x, gaussian(1.0), seed=0, max_bucket=8,
+                    num_far_samples=16, dataset=ds, overflow_cap=16)
+    target = x[0] + np.float32(50.0)     # one far-away (= unhashed) cell
+    seen, vals = 0, np.zeros(1)
+    for _ in range(8):                   # 8 * 8 rows >> overflow_cap
+        ds.insert_rows(np.tile(target, (8, 1))
+                       + rng.normal(scale=1e-3, size=(8, 3)).astype(
+                           np.float32))
+        vals = np.asarray(est.query(jnp.asarray(x[:4])))
+        seen |= est.status
+        if seen & guards.OVERFLOW_SATURATED:
+            break
+    return (seen & guards.OVERFLOW_SATURATED,
+            np.all(np.isfinite(vals)) and est.rebuilds > 0,
+            f"rebuilds={est.rebuilds}")
+
+
+def _delete_query_race(rng):
+    """Streaming fault (DESIGN.md §12): deletes racing a fixed query
+    frontier toward an empty dataset.  Once a frontier row dies, the
+    sampler must surface ``EPOCH_STALE`` (raising under
+    ``REPRO_CHECKS=1``) instead of sampling from sentinel coordinates."""
+    from repro.core.dataset import DynamicDataset
+    from repro.core.kernels_fn import gaussian
+    from repro.core.sampling.edge import NeighborSampler
+
+    x = _dataset(rng)
+    ds = DynamicDataset(x, capacity=256)
+    nbr = NeighborSampler(x, gaussian(1.0), mode="blocked", block_size=32,
+                          seed=0, dataset=ds)
+    src = np.arange(8)
+    order = rng.permutation(len(x))
+    seen = 0
+    for lo in range(0, len(x) - 16, 16):
+        ds.delete_rows(order[lo:lo + 16])
+        nbr.sample(src)
+        seen |= nbr.status
+        if seen & guards.EPOCH_STALE:
+            break
+    return seen & guards.EPOCH_STALE, True, guards.decode_status(seen)
+
+
 SCENARIOS: Dict[str, Callable] = {
     "nan_rows_hashed_query": _nan_rows_hashed_query,
     "inf_rows_sampler": _inf_rows_sampler,
@@ -246,6 +301,8 @@ SCENARIOS: Dict[str, Callable] = {
     "reject_exhaustion": _reject_exhaustion,
     "robust_escalation": _robust_escalation,
     "silent_host_watchdog": _silent_host_watchdog,
+    "overflow_insert_storm": _overflow_insert_storm,
+    "delete_query_race": _delete_query_race,
 }
 
 #: scenarios whose point is graceful SURVIVAL (no fatal flag expected);

@@ -17,6 +17,9 @@ Bit layout (documented in DESIGN.md §11)::
     STATE_CORRUPT     1<<5  hash-state member indices out of range
     CG_NO_CONVERGE    1<<6  CG finished above its residual tolerance
     NONFINITE_RESULT  1<<7  the program's *output* is NaN/Inf
+    OVERFLOW_SATURATED 1<<8 the streaming hash overflow region is full
+    EPOCH_STALE       1<<9  a consumer served (or was asked to serve) state
+                            built at an older dataset epoch
 
 Flags are advisory by default; with ``REPRO_CHECKS=1`` every consumer turns
 them into hard ``EstimationError``s via :func:`raise_on_status`, and
@@ -46,6 +49,8 @@ HT_HEAVY = 1 << 4
 STATE_CORRUPT = 1 << 5
 CG_NO_CONVERGE = 1 << 6
 NONFINITE_RESULT = 1 << 7
+OVERFLOW_SATURATED = 1 << 8
+EPOCH_STALE = 1 << 9
 
 STATUS_NAMES = {
     NONFINITE: "NONFINITE",
@@ -56,6 +61,8 @@ STATUS_NAMES = {
     STATE_CORRUPT: "STATE_CORRUPT",
     CG_NO_CONVERGE: "CG_NO_CONVERGE",
     NONFINITE_RESULT: "NONFINITE_RESULT",
+    OVERFLOW_SATURATED: "OVERFLOW_SATURATED",
+    EPOCH_STALE: "EPOCH_STALE",
 }
 
 #: flags that a re-keyed retry can plausibly clear (transient sampling luck)
@@ -203,8 +210,19 @@ class RobustEstimator:
     def __init__(self, x, kernel, seed: int = 0,
                  stages=("hash", "stratified", "exact"), max_retries: int = 1,
                  stage_kw: dict | None = None, **kw):
-        self.x = jnp.asarray(x, jnp.float32)
-        self.x_sq = jnp.sum(self.x * self.x, axis=-1)
+        # `x` may be a DynamicDataset (duck-typed: .x_pad/.epoch): the
+        # wrapper then tracks the dataset epoch and drops lazily-built
+        # stage states on mutation instead of escalating against them
+        self._dataset = x if hasattr(x, "live_x") and hasattr(x, "epoch") \
+            else None
+        if self._dataset is not None:
+            self.x, self.x_sq = self._dataset.live_x()
+            self._ds_epoch = int(self._dataset.epoch)
+        else:
+            self.x = jnp.asarray(x, jnp.float32)
+            self.x_sq = jnp.sum(self.x * self.x, axis=-1)
+            self._ds_epoch = 0
+        self.stage_rebuilds = 0
         self.kernel = kernel
         self.n = int(self.x.shape[0])
         self.d = int(self.x.shape[1])
@@ -219,7 +237,22 @@ class RobustEstimator:
         self.retries = 0
         self.escalations = {name: 0 for name in self.stage_names[1:]}
 
+    def _sync(self) -> None:
+        """Epoch check at stage entry: if the attached dataset mutated
+        since the stages were built, refresh the row arrays and drop every
+        lazily-built stage state -- serving them would silently escalate
+        against stale data (the PR-7 streaming contract, DESIGN.md §12)."""
+        ds = self._dataset
+        if ds is None or self._ds_epoch == int(ds.epoch):
+            return
+        self.x, self.x_sq = ds.live_x()
+        self.n = int(self.x.shape[0])
+        self.stage_rebuilds += len(self._stages)
+        self._stages.clear()
+        self._ds_epoch = int(ds.epoch)
+
     def _stage(self, name: str):
+        self._sync()
         if name not in self._stages:
             from repro.core.kde.base import make_estimator
             kw = dict(self._kw)

@@ -102,7 +102,7 @@ def bucket_table(keys: np.ndarray, rows: np.ndarray, max_bucket: int, rng):
 
 def build_hash_state(x, kernel, cell_width: float | None = None,
                      num_hash_dims: int = 8, max_bucket: int = 256,
-                     seed: int = 0):
+                     seed: int = 0, live=None, overflow_cap: int = 0):
     """Host-side layout build (once per dataset): returns
     ``(HashState, cell_width)``.
 
@@ -114,6 +114,12 @@ def build_hash_state(x, kernel, cell_width: float | None = None,
     HT-corrected estimator stays unbiased under ANY bucket assignment).
     Buckets larger than ``max_bucket`` store a seeded subsample; overflow
     members remain FAR-eligible.
+
+    Streaming extensions (DESIGN.md §12): ``live`` masks the padded rows
+    actually hashed -- dead (sentinel) slots get ``point_bucket = -1``
+    and never enter a bucket; ``overflow_cap > 0`` attaches an (empty)
+    overflow region of that static capacity, the landing zone
+    :class:`HashPatcher` appends mutated rows into between compactions.
     """
     xn = np.asarray(x, np.float32)
     n, d = xn.shape
@@ -121,12 +127,17 @@ def build_hash_state(x, kernel, cell_width: float | None = None,
     w = float(cell_width if cell_width is not None
               else default_cell_width(kernel))
     dims, shift = draw_grid(rng, d, num_hash_dims, w)
-    keys = grid_keys(xn, dims, shift, w)
+    if live is None:
+        rows = np.arange(n, dtype=np.int64)
+    else:
+        rows = np.where(np.asarray(live, bool))[0].astype(np.int64)
+    keys = grid_keys(xn[rows], dims, shift, w)
     uniq, members, counts, stored_rows, truncated = bucket_table(
-        keys, np.arange(n, dtype=np.int64), max_bucket, rng)
+        keys, rows, max_bucket, rng)
     stored = np.zeros(n, bool)
     stored[stored_rows] = True
-    point_bucket = np.searchsorted(uniq, keys).astype(np.int32)
+    point_bucket = np.full(n, -1, np.int32)
+    point_bucket[rows] = np.searchsorted(uniq, keys).astype(np.int32)
     state = _ref.HashState(
         dims=jnp.asarray(dims),
         shift=jnp.asarray(shift),
@@ -135,7 +146,9 @@ def build_hash_state(x, kernel, cell_width: float | None = None,
         counts=jnp.asarray(counts),
         point_bucket=jnp.asarray(point_bucket),
         self_stored=jnp.asarray(stored.astype(np.float32)),
-        truncated=jnp.asarray(truncated))
+        truncated=jnp.asarray(truncated),
+        overflow=(jnp.full((int(overflow_cap),), -1, jnp.int32)
+                  if overflow_cap else None))
     return state, w
 
 
@@ -186,8 +199,7 @@ def hashed_query(x, y, state, key, *, kind, inv_bw, beta, pairwise,
                             pairwise=pairwise, use_pallas=use_pallas,
                             interpret=interpret, bm=bm, reduce_sum=False)
         est = jnp.sum(kv, axis=1)
-        mb = state.members.shape[1]
-        far = kv[:, mb:]
+        far = kv[:, _ref.num_exact_cols(state):]
         heavy = (jnp.any(far > _g.ht_frac()
                          * jnp.maximum(jnp.abs(est)[:, None], 1e-30))
                  if num_far > 0 else jnp.asarray(False))
@@ -234,3 +246,171 @@ def hashed_block_sums(x, src, state, key, *, kind, inv_bw, beta, pairwise,
                               block_size=block_size, num_blocks=num_blocks,
                               n=n, use_pallas=use_pallas, interpret=interpret,
                               bm=bm)
+
+
+# --------------------------------------------------------------------- #
+# streaming patches (DESIGN.md §12)
+# --------------------------------------------------------------------- #
+@jax.jit
+def _apply_hash_patch(members, counts, point_bucket, self_stored, overflow,
+                      bidx, brows, bcnt, pidx, pb, ss, ovidx, ovval):
+    """Jitted scatter of a host-computed hash patch: rewrite the touched
+    bucket rows wholesale (host already deduplicated them) plus the
+    touched per-point and overflow entries.  O(touched) device work, no
+    rehash, no sort, no collectives."""
+    return (members.at[bidx].set(brows),
+            counts.at[bidx].set(bcnt),
+            point_bucket.at[pidx].set(pb),
+            self_stored.at[pidx].set(ss),
+            overflow.at[ovidx].set(ovval))
+
+
+class HashPatcher:
+    """Incremental ``HashState`` maintenance for a mutating dataset.
+
+    Keeps host numpy mirrors of the (host-built anyway) bucket tables and
+    patches them in O(m) per mutation batch; the device state is updated
+    by ONE jitted scatter over the touched entries.  The placement policy
+    (DESIGN.md §12):
+
+    * insert whose grid cell exists in the frozen ``keys`` and whose
+      bucket has free slots -> splice into the bucket at its slot-sorted
+      position (rows arrive tail-first from ``DynamicDataset``, so the
+      patched member table stays bitwise equal to a fresh rebuild);
+    * otherwise -> append to the **overflow region**, which every query /
+      frontier read sweeps exactly (weight 1) until :meth:`needs_rebuild`
+      tells the owner to compact (rebuild via ``build_hash_state``);
+    * delete -> left-shift out of its bucket (or clear its overflow slot);
+      the row's coordinates are already at the sentinel offset, so even a
+      missed removal would contribute exactly 0 mass.
+
+    Saturated overflow sets ``guards.OVERFLOW_SATURATED`` in :attr:`flags`
+    and forces :attr:`needs_rebuild`; touching an RNG-subsampled
+    (truncated) bucket stays *correct* but loses bitwise rebuild parity,
+    which :attr:`exact_parity` records.
+    """
+
+    def __init__(self, state, cell_width: float):
+        if state.overflow is None:
+            raise ValueError("HashPatcher needs a state built with "
+                             "overflow_cap > 0")
+        self.cell_width = float(cell_width)
+        self.dims = np.asarray(state.dims)
+        self.shift = np.asarray(state.shift)
+        self.keys = np.asarray(state.keys)           # frozen, sorted
+        self.members = np.array(state.members, np.int32, copy=True)
+        self.counts = np.array(state.counts, np.int32, copy=True)
+        self.point_bucket = np.array(state.point_bucket, np.int32,
+                                     copy=True)
+        self.self_stored = np.array(state.self_stored, np.float32,
+                                    copy=True)
+        self.truncated = (np.array(state.truncated, bool, copy=True)
+                          if state.truncated is not None
+                          else np.zeros(len(self.keys), bool))
+        self.overflow = np.array(state.overflow, np.int32, copy=True)
+        self.max_bucket = int(self.members.shape[1])
+        self.flags = 0
+        self.needs_rebuild = False
+        self.exact_parity = True
+
+    @property
+    def overflow_fill(self) -> int:
+        """Occupied overflow slots (monitoring / compaction policy)."""
+        return int((self.overflow >= 0).sum())
+
+    def _remove(self, slot: int, touched_b: set, touched_ov: set) -> None:
+        b = int(self.point_bucket[slot])
+        if self.self_stored[slot] > 0.0:
+            if b >= 0:                      # stored in its bucket's slots
+                cnt = int(self.counts[b])
+                row = self.members[b]
+                pos = np.where(row[:cnt] == slot)[0]
+                if pos.size:
+                    p = int(pos[0])
+                    row[p:cnt - 1] = row[p + 1:cnt]
+                    row[cnt - 1] = 0
+                    self.counts[b] = cnt - 1
+                    touched_b.add(b)
+                    if self.truncated[b]:
+                        self.exact_parity = False
+            pos = np.where(self.overflow == slot)[0]
+            if pos.size:                    # stored in the overflow region
+                self.overflow[pos[0]] = -1
+                touched_ov.add(int(pos[0]))
+        elif b >= 0 and self.truncated[b]:
+            # an unstored member of a truncated bucket: nothing to remove,
+            # but a rebuild would resample the smaller bucket
+            self.exact_parity = False
+        self.point_bucket[slot] = -1
+        self.self_stored[slot] = 0.0
+
+    def _insert(self, slot: int, row_x: np.ndarray, touched_b: set,
+                touched_ov: set) -> None:
+        key = grid_keys(row_x[None, :], self.dims, self.shift,
+                        self.cell_width)[0]
+        pos = int(np.searchsorted(self.keys, key))
+        hit = pos < len(self.keys) and self.keys[pos] == key
+        b = pos if hit else -1
+        if hit and int(self.counts[b]) < self.max_bucket \
+                and not self.truncated[b]:
+            cnt = int(self.counts[b])
+            row = self.members[b]
+            at = int(np.searchsorted(row[:cnt], slot))
+            row[at + 1:cnt + 1] = row[at:cnt]
+            row[at] = slot
+            self.counts[b] = cnt + 1
+            self.point_bucket[slot] = b
+            self.self_stored[slot] = 1.0
+            touched_b.add(b)
+            return
+        free = np.where(self.overflow < 0)[0]
+        if free.size == 0:
+            self.flags |= _g.OVERFLOW_SATURATED
+            self.needs_rebuild = True
+            return
+        self.overflow[free[0]] = slot
+        touched_ov.add(int(free[0]))
+        # NEAR reads of this row still see its cell's exact members (if
+        # the cell has a frozen bucket); the row itself is swept via the
+        # overflow region, so its self kernel IS stored-exactly
+        self.point_bucket[slot] = b
+        self.self_stored[slot] = 1.0
+        self.exact_parity = False
+
+    def apply(self, state, slots, old_x, new_x, old_live, new_live):
+        """Patch the mirrors for one coalesced mutation batch and return
+        the updated device ``HashState`` (or ``state`` unchanged with
+        :attr:`needs_rebuild` set when the overflow region saturates --
+        the caller must compact before serving another query)."""
+        slots = np.asarray(slots, np.int64)
+        old_live = np.asarray(old_live, bool)
+        new_live = np.asarray(new_live, bool)
+        new_x = np.asarray(new_x, np.float32)
+        touched_b: set = set()
+        touched_ov: set = set()
+        touched_p = [int(s) for s in slots]
+        for i, s in enumerate(slots):
+            s = int(s)
+            if old_live[i]:
+                self._remove(s, touched_b, touched_ov)
+            if new_live[i]:
+                self._insert(s, new_x[i], touched_b, touched_ov)
+        if self.needs_rebuild:
+            return state
+        bidx = np.fromiter(sorted(touched_b), np.int32,
+                           count=len(touched_b))
+        ovidx = np.fromiter(sorted(touched_ov), np.int32,
+                            count=len(touched_ov))
+        pidx = np.asarray(touched_p, np.int32)
+        members, counts, point_bucket, self_stored, overflow = \
+            _apply_hash_patch(
+                state.members, state.counts, state.point_bucket,
+                state.self_stored, state.overflow,
+                jnp.asarray(bidx), jnp.asarray(self.members[bidx]),
+                jnp.asarray(self.counts[bidx]),
+                jnp.asarray(pidx), jnp.asarray(self.point_bucket[pidx]),
+                jnp.asarray(self.self_stored[pidx]),
+                jnp.asarray(ovidx), jnp.asarray(self.overflow[ovidx]))
+        return state._replace(members=members, counts=counts,
+                              point_bucket=point_bucket,
+                              self_stored=self_stored, overflow=overflow)

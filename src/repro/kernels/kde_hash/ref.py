@@ -57,6 +57,14 @@ class HashState(NamedTuple):
     #                                (optional so older pickled/sharded
     #                                layouts keep working; None reads as
     #                                "no bucket truncated")
+    overflow: jnp.ndarray = None   # (ov_cap,) int32 streaming overflow
+    #                                region: row ids whose bucket is full or
+    #                                whose grid cell is not in the frozen
+    #                                ``keys`` (-1 = free slot).  Queries and
+    #                                frontier reads sweep it EXACTLY (weight
+    #                                1) until a lazy compaction folds it
+    #                                back into the bucket layout
+    #                                (DESIGN.md §12); None = static dataset.
 
 
 def pack_codes(codes: jnp.ndarray) -> jnp.ndarray:
@@ -111,6 +119,36 @@ def _far_collide(fidx, mem, mvalid):
                    & mvalid[:, None, :], axis=-1)
 
 
+def _overflow_cols(state: HashState, w: int):
+    """Broadcast the (global) overflow region to per-row exact columns:
+    (w, ov_cap) clipped row ids + (w, ov_cap) 0/1 validity weights.
+    Returns ``(None, None)`` for static (overflow-free) states."""
+    if state.overflow is None:
+        return None, None
+    ov = state.overflow
+    ovvalid = (ov >= 0)[None, :]
+    ovc = jnp.broadcast_to(jnp.maximum(ov, 0)[None, :], (w, ov.shape[0]))
+    return ovc, jnp.broadcast_to(ovvalid, (w, ov.shape[0]))
+
+
+def _far_hits_overflow(fidx, state: HashState):
+    """(w, s) mask: far sample hits a live overflow row (those are already
+    counted exactly by the overflow sweep)."""
+    if state.overflow is None:
+        return jnp.zeros(fidx.shape, bool)
+    ov = state.overflow
+    return jnp.any((fidx[:, :, None] == ov[None, None, :])
+                   & (ov >= 0)[None, None, :], axis=-1)
+
+
+def num_exact_cols(state: HashState) -> int:
+    """Static count of exact (NEAR member + overflow) evaluation columns
+    in the gathers below -- FAR columns start here."""
+    mb = int(state.members.shape[1])
+    return mb + (int(state.overflow.shape[0])
+                 if state.overflow is not None else 0)
+
+
 def query_gather(x, y, state: HashState, key, cell_width: float,
                  num_far: int, n: int):
     """Bucket lookup + FAR draw for arbitrary queries: hash ``y`` on
@@ -130,10 +168,15 @@ def query_gather(x, y, state: HashState, key, cell_width: float,
     mvalid = jnp.arange(mb, dtype=jnp.int32)[None, :] < cnt[:, None]
     trunc = (hit & state.truncated[b] if state.truncated is not None
              else jnp.zeros(hit.shape, bool))
+    ovc, ovvalid = _overflow_cols(state, y.shape[0])
+    if ovc is not None:                    # streaming: extra exact sweep
+        mem = jnp.concatenate([mem, ovc], axis=1)
+        mvalid = jnp.concatenate([mvalid, ovvalid], axis=1)
     if num_far == 0:                       # static: NEAR-only estimate
         return mem, x[mem], mvalid.astype(jnp.float32), cnt, trunc
     fidx = jax.random.randint(key, (y.shape[0], num_far), 0, n)
-    collide = _far_collide(fidx, mem, mvalid)
+    collide = (_far_collide(fidx, mem[:, :mb], mvalid[:, :mb])
+               | _far_hits_overflow(fidx, state))
     cols = jnp.concatenate([mem, fidx], axis=1)
     wgt = jnp.concatenate(
         [mvalid.astype(jnp.float32),
@@ -156,16 +199,26 @@ def frontier_gather(x, src, state: HashState, key, num_far: int,
     fifth output is the per-row bucket-truncation flag."""
     w = src.shape[0]
     b = state.point_bucket[src]
-    cnt = state.counts[b]
-    mem = state.members[b]
+    # streaming states mark rows with no frozen bucket (overflow rows in a
+    # brand-new grid cell, dead slots) with point_bucket = -1: their NEAR
+    # set is empty and the FAR/overflow terms carry the whole estimate
+    nohit = b < 0
+    bc = jnp.maximum(b, 0)
+    cnt = jnp.where(nohit, 0, state.counts[bc])
+    mem = state.members[bc]
     mb = mem.shape[1]
     mvalid = jnp.arange(mb, dtype=jnp.int32)[None, :] < cnt[:, None]
-    trunc = (state.truncated[b] if state.truncated is not None
+    trunc = (state.truncated[bc] & ~nohit if state.truncated is not None
              else jnp.zeros(b.shape, bool))
+    ovc, ovvalid = _overflow_cols(state, w)
+    if ovc is not None:                    # streaming: extra exact sweep
+        mem = jnp.concatenate([mem, ovc], axis=1)
+        mvalid = jnp.concatenate([mvalid, ovvalid], axis=1)
     base = jnp.arange(num_blocks, dtype=jnp.int32) * block_size
     off = jax.random.randint(key, (w, num_blocks, num_far), 0, block_size)
     fidx = (base[None, :, None] + off).reshape(w, num_blocks * num_far)
-    dead = (_far_collide(fidx, mem, mvalid) | (fidx == src[:, None])
+    dead = (_far_collide(fidx, mem[:, :mb], mvalid[:, :mb])
+            | _far_hits_overflow(fidx, state) | (fidx == src[:, None])
             | (fidx >= n))
     fidx = jnp.minimum(fidx, n - 1)
     cols = jnp.concatenate([mem, fidx], axis=1)
@@ -219,13 +272,15 @@ def scatter_block_sums(kv, cols, src, state: HashState, num_far: int,
     the ops path too, so oracle and fused programs cannot drift): scatter
     the weighted NEAR values into their blocks, reshape-reduce the
     block-indexed FAR values, subtract the self kernel from the own block
-    iff stored, floor every block at 1e-12."""
-    mb = state.members.shape[1]
+    iff stored, floor every block at 1e-12.  Streaming states contribute
+    their overflow region as extra exact columns (already weight-masked by
+    the gather), scattered by block exactly like NEAR members."""
+    nex = num_exact_cols(state)
     w = src.shape[0]
-    blk_near = (cols[:, :mb] // block_size).astype(jnp.int32)
-    bs = kv[:, mb:].reshape(w, num_blocks, num_far).sum(-1)
+    blk_near = (cols[:, :nex] // block_size).astype(jnp.int32)
+    bs = kv[:, nex:].reshape(w, num_blocks, num_far).sum(-1)
     bs = bs.at[jnp.arange(w, dtype=jnp.int32)[:, None], blk_near].add(
-        kv[:, :mb])
+        kv[:, :nex])
     own = (src // block_size).astype(jnp.int32)
     corr = jnp.arange(num_blocks, dtype=jnp.int32)[None, :] == own[:, None]
     bs = jnp.where(corr, bs - state.self_stored[src][:, None], bs)
@@ -243,8 +298,12 @@ def sharded_hashed_query_ref(x_pad, y, shard_states, key, kind: str,
     offset, so their kernel values are exactly 0 and the HT weight is
     ``shard_size/num_far``), and the estimate is the plain sum of the
     per-shard NEAR+FAR partials -- what ONE psum produces on the mesh.
-    Returns (estimates, NEAR counts); ints match the device program
-    bitwise, floats to f32 tolerance (psum reorders the accumulation)."""
+    Streaming shard states carry a per-shard ``overflow`` region of row
+    ids owned by that shard; its live entries join the shard's exact
+    sweep (weight 1) and are masked out of its FAR draw, mirroring the
+    flat ``query_gather`` contract.  Returns (estimates, NEAR counts);
+    ints match the device program bitwise, floats to f32 tolerance
+    (psum reorders the accumulation)."""
     num_shards = len(shard_states)
     m = y.shape[0]
     est = jnp.zeros((m,), jnp.float32)
@@ -259,16 +318,26 @@ def sharded_hashed_query_ref(x_pad, y, shard_states, key, kind: str,
         mem = st.members[b]
         mb = mem.shape[1]
         mvalid = jnp.arange(mb, dtype=jnp.int32)[None, :] < c[:, None]
+        ovc, ovvalid = _overflow_cols(st, m)
+        if ovc is not None:                # streaming: extra exact sweep
+            mem_cat = jnp.concatenate([mem, ovc], axis=1)
+            wexact = jnp.concatenate(
+                [mvalid.astype(jnp.float32), ovvalid.astype(jnp.float32)],
+                axis=1)
+        else:
+            mem_cat = mem
+            wexact = mvalid.astype(jnp.float32)
         if num_far == 0:                   # static: NEAR-only estimate
-            cols, wgt = mem, mvalid.astype(jnp.float32)
+            cols, wgt = mem_cat, wexact
         else:
             kk = jax.random.fold_in(key, p)
             fidx = (p * shard_size
                     + jax.random.randint(kk, (m, num_far), 0, shard_size))
-            collide = _far_collide(fidx, mem, mvalid)
-            cols = jnp.concatenate([mem, fidx], axis=1)
+            collide = (_far_collide(fidx, mem, mvalid)
+                       | _far_hits_overflow(fidx, st))
+            cols = jnp.concatenate([mem_cat, fidx], axis=1)
             wgt = jnp.concatenate(
-                [mvalid.astype(jnp.float32),
+                [wexact,
                  (float(shard_size) / num_far)
                  * (1.0 - collide.astype(jnp.float32))], axis=1)
         kv = rowwise_kv(y, x_pad[cols], kind, inv_bw, beta, pairwise)

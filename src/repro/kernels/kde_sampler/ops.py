@@ -699,3 +699,34 @@ def triangle_edge_scan(x, x_sq, u, v, degs, keys, hstate=None, *, kind,
     num_draws = keys.shape[0] - 1
     w_hat = acc * degs[vv] / num_draws
     return uu, vv, w_hat, _g.merge(st, _g.result_status(w_hat))
+
+
+# --------------------------------------------------------------------- #
+# streaming patches (DESIGN.md §12)
+# --------------------------------------------------------------------- #
+@_jit
+def patch_block_sums(bs, x, src, slots, old_x, new_x, *, kind, inv_bw, beta,
+                     pairwise, block_size):
+    """Incrementally update a cached (w, B) level-1 read after a dataset
+    mutation batch: O(w m) kernel evals instead of the O(w n) rebuild.
+    The jitted body IS ``ref.patch_block_sums_ref`` (same delta scatter),
+    so the oracle parity is structural; equivalence vs a fresh rebuild is
+    what the streaming tests assert.  Frontier rows that mutated must NOT
+    be patched -- the consumer drops the cache instead (the ``src``
+    operand is only read for the frontier coordinates)."""
+    TRACE_COUNTS["patch_block_sums"] += 1
+    return _ref.patch_block_sums_ref(bs, x[src], slots, old_x, new_x, kind,
+                                     inv_bw, beta, block_size, pairwise)
+
+
+@_jit
+def degree_delta(degs, x, x_sq, slots, old_x, new_x, old_live, new_live, *,
+                 kind, inv_bw, beta, pairwise):
+    """Incremental Algorithm 4.3 degree update after a mutation batch:
+    O(n m) evals against the post-mutation padded arrays (column deltas
+    for untouched rows, exact recompute for the mutated slots), replacing
+    the O(n^2 / estimator-budget) degree rebuild."""
+    TRACE_COUNTS["degree_delta"] += 1
+    return _ref.degree_delta_ref(degs, x, x_sq, slots, old_x, new_x,
+                                 old_live, new_live, kind, inv_bw, beta,
+                                 pairwise)

@@ -448,3 +448,61 @@ def fused_edge_batch_ref(x, x_sq, cdf, degs, inv_total, inv_t, key,
     q_edge = inv_total * (degs[u] * q_uv + kuv)
     wgt = kuv * inv_t / jnp.maximum(q_edge, 1e-30)
     return u, v, wgt, q_uv, q_vu
+
+
+# --------------------------------------------------------------------- #
+# streaming patches (DESIGN.md §12)
+# --------------------------------------------------------------------- #
+def patch_block_sums_ref(bs, q, slots, old_x, new_x, kind: str,
+                         inv_bw: float, beta: float, bn: int, pairwise=None):
+    """Oracle of ``ops.patch_block_sums``: incremental §2 level-1 update.
+
+    Subtracts the mutated slots' *old* kernel contributions from the
+    cached (w, B) block sums and adds the *new* ones -- O(w m) evals for
+    an m-row mutation batch instead of the O(w n) rebuild.  Sentinel
+    coordinates (dead side of inserts/deletes) evaluate to exactly 0.0,
+    so one delta formula covers insert, delete and update.  The stored
+    sums are post-floor, so a block clamped at BLOCK_SUM_FLOOR cannot be
+    un-clamped exactly; callers keep patched caches only while the §2
+    floor is not binding (the consumer drops the cache when the frontier
+    itself mutates).
+    """
+    old_sq = jnp.sum(old_x * old_x, axis=-1)
+    new_sq = jnp.sum(new_x * new_x, axis=-1)
+    kv_new = kv_matrix(q, new_x, new_sq, kind, inv_bw, beta, pairwise)
+    kv_old = kv_matrix(q, old_x, old_sq, kind, inv_bw, beta, pairwise)
+    blk = (slots // bn).astype(jnp.int32)
+    out = bs.at[:, blk].add(kv_new - kv_old)
+    return jnp.maximum(out, BLOCK_SUM_FLOOR)
+
+
+def live_degrees_ref(x, x_sq, live, kind: str, inv_bw: float, beta: float,
+                     pairwise=None):
+    """Exact degrees of a live-masked padded dataset (the rebuild oracle
+    for ``ops.degree_delta``): dead slots get degree 0 and contribute no
+    mass; live rows get the usual Algorithm 4.3 row sum minus the self
+    kernel k(x, x) = 1."""
+    q = jnp.where(live[:, None], x, 0.0)     # dead-vs-dead would be NaN
+    kv = kv_matrix(q, x, x_sq, kind, inv_bw, beta, pairwise)
+    return jnp.where(live, kv.sum(axis=1) - 1.0, 0.0)
+
+
+def degree_delta_ref(degs, x, x_sq, slots, old_x, new_x, old_live, new_live,
+                     kind: str, inv_bw: float, beta: float, pairwise=None):
+    """Oracle of ``ops.degree_delta``: O(n m) incremental degree update.
+
+    ``x``/``x_sq`` are the *post-mutation* padded arrays.  Unmutated rows
+    receive the exact column delta sum_j [k(x_i, new_j) - k(x_i, old_j)];
+    the mutated slots' own degrees are recomputed exactly from their new
+    rows (dead slots get 0).  Matches ``live_degrees_ref`` of the new
+    dataset whenever ``degs`` matched it for the old one.
+    """
+    old_q = jnp.where(old_live[:, None], old_x, 0.0)
+    new_q = jnp.where(new_live[:, None], new_x, 0.0)
+    a_new = kv_matrix(new_q, x, x_sq, kind, inv_bw, beta, pairwise) \
+        * new_live[:, None]
+    a_old = kv_matrix(old_q, x, x_sq, kind, inv_bw, beta, pairwise) \
+        * old_live[:, None]
+    out = degs + (a_new - a_old).sum(axis=0)
+    row_new = jnp.where(new_live, a_new.sum(axis=1) - 1.0, 0.0)
+    return out.at[slots].set(row_new)

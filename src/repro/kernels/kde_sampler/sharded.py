@@ -342,6 +342,42 @@ class ShardedBlocks:
     # ------------------------------------------------------------------ #
     # public fused programs
     # ------------------------------------------------------------------ #
+    def _patch_program(self):
+        """The jitted zero-collective mutation program (exposed so tests
+        can jaxpr-assert its collective schedule)."""
+        sp = self.spec
+
+        def factory():
+            def body(x_l, xsq_l, x_rep, xsq_rep, slots, rows):
+                pidx = _flat_index(sp.mesh, sp.axes)
+                rows_sq = jnp.sum(rows * rows, axis=-1)
+                # each shard scatters ONLY its own rows: non-local slots
+                # map to the out-of-range local index and are dropped
+                lidx = slots - pidx * sp.shard_size
+                lidx = jnp.where((lidx >= 0) & (lidx < sp.shard_size),
+                                 lidx, sp.shard_size)
+                x_l = x_l.at[lidx].set(rows, mode="drop")
+                xsq_l = xsq_l.at[lidx].set(rows_sq, mode="drop")
+                x_rep = x_rep.at[slots].set(rows)
+                xsq_rep = xsq_rep.at[slots].set(rows_sq)
+                return x_l, xsq_l, x_rep, xsq_rep
+            return self._build("sharded_patch_rows", body,
+                               self._specs4() + (P(), P()),
+                               self._specs4())
+        return self._program("patch_rows", factory)
+
+    def patch_rows(self, slots, rows):
+        """Scatter a mutation batch into the mesh-resident dataset copies
+        (DESIGN.md §12): each shard patches its own rows, the replicated
+        frontier copy is patched in place on every device -- ZERO new
+        collectives per mutation batch, so the §9 one-psum-per-draw
+        schedule is untouched.  Derived level-1 caches are the caller's
+        to patch or drop (``ops.patch_block_sums`` / the §4 cache)."""
+        fn = self._patch_program()
+        self.x_sh, self.x_sq_sh, self.x_rep, self.x_sq_rep = fn(
+            *self._sharded_args(), jnp.asarray(slots, jnp.int32),
+            jnp.asarray(rows, jnp.float32))
+
     def masked_block_sums(self, src, key):
         """Global §2-contract level-1 sums of a frontier: (w, B_pad),
         sharded along columns, no collective at all (sampling needs only

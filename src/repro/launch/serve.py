@@ -10,6 +10,17 @@ With ``--attention kde --robust`` every decode step's logits are screened
 for NaN/Inf; a flagged step is recomputed with the dense xla attention
 from the pre-step cache (per-request graceful degradation, DESIGN.md §11)
 and counted in the final report.
+
+``--graph-stream N`` serves the OTHER side of the repo instead: an online
+kernel-graph service over a mutating point set (DESIGN.md §12).  Each tick
+mutates a fraction of the rows (insert/delete/update), then answers vertex
+/ neighbor / edge-batch queries at the new epoch -- the samplers patch
+their level-1 / degree / hash state instead of rebuilding, and the final
+report shows per-tick mutation and query latency plus the or-folded
+status flags:
+
+  python -m repro.launch.serve --graph-stream 4096 --ticks 8 \
+      --mutate-frac 0.01 --level1 hash
 """
 from __future__ import annotations
 
@@ -28,6 +39,48 @@ from repro.models import transformer as T
 from repro.train.train_step import make_decode_step
 
 
+def run_graph_stream(args) -> int:
+    """Online kernel-graph serving loop (DESIGN.md §12): mutate, then
+    answer at the new epoch.  Cost per tick: O(m) mutation bookkeeping +
+    one coalesced patch (O(w·m) level-1, O(n·m) degrees, O(m) hash
+    splices) folded into the first query, vs. the frozen engines' full
+    rebuild -- the ratio BENCH_streaming.json tracks."""
+    from repro.core.kernels_fn import gaussian
+    from repro.core.streaming import StreamingKernelGraph
+
+    n, d = int(args.graph_stream), 16
+    rng = np.random.default_rng(args.seed)
+    x0 = rng.normal(size=(n, d)).astype(np.float32)
+    g = StreamingKernelGraph(x0, gaussian(1.0), level1=args.level1,
+                             seed=args.seed)
+    m = max(int(n * args.mutate_frac), 1)
+    mut_t = qry_t = 0.0
+    for tick in range(args.ticks):
+        t0 = time.time()
+        live = g.dataset.live_slots()
+        g.insert(rng.normal(size=(m, d)).astype(np.float32))
+        g.delete(rng.choice(live, size=m, replace=False))
+        upd = rng.choice(g.dataset.live_slots(), size=m, replace=False)
+        g.update(upd, rng.normal(size=(m, d)).astype(np.float32))
+        mut_t += time.time() - t0
+        t0 = time.time()
+        u = g.sample_vertices(256)
+        v, _ = g.sample_neighbors(u)
+        g.sample_edges(512)
+        qry_t += time.time() - t0
+        assert g.dataset.is_live(v), "sampled a dead neighbor"
+    rep = g.status_report()
+    print(f"[serve] graph-stream n={n} ticks={args.ticks} "
+          f"mutate_frac={args.mutate_frac} level1={args.level1}")
+    print(f"[serve] mutation {1e3 * mut_t / args.ticks:.1f} ms/tick, "
+          f"queries {1e3 * qry_t / args.ticks:.1f} ms/tick "
+          f"(patch-on-read, no rebuilds in the hot path)")
+    print(f"[serve] epoch={rep['epoch']} live={rep['num_live']} "
+          f"flags={rep['flags']} degree_rebuilds={rep['degree_rebuilds']} "
+          f"hash_rebuilds={rep['hash_rebuilds']}")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="yi_6b")
@@ -44,7 +97,17 @@ def main(argv=None) -> int:
                     help="screen decode logits; recompute flagged steps "
                          "with dense xla attention from the pre-step cache")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--graph-stream", type=int, default=0,
+                    help="serve an online kernel graph over N points "
+                         "instead of the LLM path (DESIGN.md §12)")
+    ap.add_argument("--ticks", type=int, default=8)
+    ap.add_argument("--mutate-frac", type=float, default=0.01)
+    ap.add_argument("--level1", choices=["blocked", "hash"],
+                    default="blocked")
     args = ap.parse_args(argv)
+
+    if args.graph_stream:
+        return run_graph_stream(args)
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     cfg = dataclasses.replace(cfg, dtype="float32")

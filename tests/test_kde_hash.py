@@ -318,8 +318,8 @@ tab = ShardedHashTable(mesh, x, ker, seed=3)
 y = jnp.asarray(x[:32])
 key = jax.random.PRNGKey(5)
 cc = collective_counts(lambda yy, kk: tab._program()(
-    tab._keys, tab._members, tab._counts, tab._dims, tab._shift,
-    tab.x_sh, yy, kk), y, key)
+    tab._keys, tab._members, tab._counts, tab._overflow, tab._dims,
+    tab._shift, tab.x_sh, yy, kk), y, key)
 assert cc["psum_total"] == 1 and cc["ppermute_total"] == 0, cc
 est, cnt, st = tab.query(y, key)
 assert int(np.asarray(st)) == 0, st
