@@ -26,6 +26,7 @@ import json
 import time
 from pathlib import Path
 
+import jax
 import numpy as np
 
 from benchmarks.common import emit
@@ -91,9 +92,14 @@ def run(quick: bool = False) -> None:
         nbr.sample(src)           # folds the level-1 patch in
 
     stream_batch(warmup)          # compile the patch programs off-clock
+    # drain warmup's async dispatches BEFORE the clock starts, and every
+    # in-flight device op (mutation scatters the queries didn't pull)
+    # before it stops -- steady-state device time only
+    jax.block_until_ready((ds.x_pad, ds.x_sq_pad, ds.live_dev))
     t0 = time.perf_counter()
     for batch in plan:
         stream_batch(batch)
+    jax.block_until_ready((ds.x_pad, ds.x_sq_pad, ds.live_dev))
     t_stream = time.perf_counter() - t0
     assert deg.rebuilds == 0, "journal gap hit -- benchmark mis-sized"
 
@@ -111,9 +117,11 @@ def run(quick: bool = False) -> None:
         nbr2.sample(src)
 
     rebuild_batch(warmup)
+    jax.block_until_ready((ds2.x_pad, ds2.x_sq_pad, ds2.live_dev))
     t0 = time.perf_counter()
     for batch in plan:
         rebuild_batch(batch)
+    jax.block_until_ready((ds2.x_pad, ds2.x_sq_pad, ds2.live_dev))
     t_rebuild = time.perf_counter() - t0
 
     rows = m * batches

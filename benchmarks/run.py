@@ -23,6 +23,7 @@ BENCHES = {
     "eigen_spectrum": "benchmarks.bench_eigen_spectrum",  # Thms 5.22 / 5.17
     "attention": "benchmarks.bench_attention",     # framework integration
     "streaming": "benchmarks.bench_streaming",     # dynamic datasets (§12)
+    "serve": "benchmarks.bench_serve",             # serving layer (§13)
 }
 
 

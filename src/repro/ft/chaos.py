@@ -291,6 +291,55 @@ def _delete_query_race(rng):
     return seen & guards.EPOCH_STALE, True, guards.decode_status(seen)
 
 
+def _serve_eviction_mid_stream(rng):
+    """Serving fault (DESIGN.md §13): an LRU capacity of ONE under a
+    request stream that alternates tenants, so EVERY tick evicts one
+    tenant's device state and rebuilds the other's from its dataset.
+    Eviction must be invisible to correctness -- each request completes
+    with finite sane output and no fatal flag -- because the dataset is
+    the source of truth and admission rebuilds derived state."""
+    from repro.core.kernels_fn import gaussian
+    from repro.core.serving import KernelGraphServable
+
+    srv = KernelGraphServable(max_resident=1)
+    for name, shift in (("a", 0.0), ("b", 0.5)):
+        srv.add_tenant(name, _dataset(rng) + np.float32(shift),
+                       gaussian(1.0), block_size=32, seed=0)
+    reqs = []
+    for t in range(4):
+        reqs.append(srv.submit("ab"[t % 2], "sample", src=np.arange(8),
+                               seed=11 * t))
+        srv.tick()
+    ok = all(r.error is None and np.all(np.isfinite(r.result[1]))
+             for r in reqs)
+    return (srv.status & guards.FATAL, bool(ok and srv.evictions >= 2),
+            f"evictions={srv.evictions}")
+
+
+def _serve_stale_tenant_mutation(rng):
+    """Serving fault (DESIGN.md §13): a tenant's dataset mutates between
+    ``submit`` and ``tick``, killing the submitted request's frontier
+    rows.  The tick must surface ``EPOCH_STALE`` on THAT request's own
+    status word (its own ``EstimationError`` under ``REPRO_CHECKS=1``)
+    while a clean tenant's request in the SAME tick is served normally --
+    per-request isolation, never a poisoned batch."""
+    from repro.core.kernels_fn import gaussian
+    from repro.core.serving import KernelGraphServable
+
+    srv = KernelGraphServable()
+    srv.add_tenant("mut", _dataset(rng), gaussian(1.0), block_size=32,
+                   seed=0)
+    srv.add_tenant("ok", _dataset(rng) + np.float32(1.0), gaussian(1.0),
+                   block_size=32, seed=1)
+    bad = srv.submit("mut", "sample", src=np.arange(8), seed=3)
+    good = srv.submit("ok", "sample", src=np.arange(8), seed=4)
+    srv.dataset("mut").delete_rows(np.arange(8))   # kill the frontier
+    srv.tick()
+    clean = good.error is None and not (good.status & guards.EPOCH_STALE)
+    return (bad.status & guards.EPOCH_STALE, bool(clean),
+            guards.decode_status(bad.status or 0) or "no flag")
+
+
 SCENARIOS: Dict[str, Callable] = {
     "nan_rows_hashed_query": _nan_rows_hashed_query,
     "inf_rows_sampler": _inf_rows_sampler,
@@ -303,12 +352,15 @@ SCENARIOS: Dict[str, Callable] = {
     "silent_host_watchdog": _silent_host_watchdog,
     "overflow_insert_storm": _overflow_insert_storm,
     "delete_query_race": _delete_query_race,
+    "serve_eviction_mid_stream": _serve_eviction_mid_stream,
+    "serve_stale_tenant_mutation": _serve_stale_tenant_mutation,
 }
 
 #: scenarios whose point is graceful SURVIVAL (no fatal flag expected);
 #: everything else must be DETECTED (flag set or EstimationError raised)
 SURVIVE_OK = frozenset((
-    "duplicate_points_survive", "reject_exhaustion", "robust_escalation"))
+    "duplicate_points_survive", "reject_exhaustion", "robust_escalation",
+    "serve_eviction_mid_stream"))
 
 
 def run_scenario(name: str, seed: int = 0) -> Dict:

@@ -113,6 +113,33 @@ def raise_on_status(status, context: str = "", allow: int = 0) -> int:
     return s
 
 
+def raise_per_request(statuses, contexts, allow: int = 0):
+    """Per-request fan-out of :func:`raise_on_status` for the serving
+    layer's batched status words (DESIGN.md §13): ONE ``device_get`` of
+    the (R,) uint32 vector, then the ordinary checks policy applied per
+    request.  ``contexts`` is either one string or a sequence aligned with
+    the requests.  Returns ``(statuses, errors)`` -- python ints plus,
+    aligned, the ``EstimationError`` built for each flagged request (None
+    when the request is clean or checks are off).  Never raises itself:
+    one poisoned request must not take down the other R-1 lanes of a
+    serving tick -- the servable attaches each error to its one request.
+    """
+    arr = np.asarray(jax.device_get(jnp.asarray(statuses, jnp.uint32)))
+    arr = arr.reshape(-1)
+    on = checks_enabled()
+    out, errors = [], []
+    for i, s in enumerate(arr.tolist()):
+        s = int(s)
+        ctx = contexts if isinstance(contexts, str) else contexts[i]
+        bad = s & ~allow
+        errors.append(EstimationError(
+            f"{ctx or 'serving request'}: status flags "
+            f"{decode_status(bad)} (status=0x{s:x})")
+            if bad and on else None)
+        out.append(s)
+    return out, errors
+
+
 def count_flags(counter: dict, status) -> dict:
     """Accumulate per-flag event counts into ``counter`` (name -> int)."""
     s = int(np.asarray(status))

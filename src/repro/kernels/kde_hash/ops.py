@@ -249,6 +249,56 @@ def hashed_block_sums(x, src, state, key, *, kind, inv_bw, beta, pairwise,
 
 
 # --------------------------------------------------------------------- #
+# batched multi-tenant serving entry points (DESIGN.md §13)
+# --------------------------------------------------------------------- #
+def stack_hash_states(states):
+    """Stack equal-shape ``HashState`` pytrees along a new leading tenant
+    axis for the batched multi-tenant query path.  All layouts must agree
+    in every array shape and dtype (bucket count, ``max_bucket``, padded
+    row count, overflow capacity, hash dims) -- the serving layer keys its
+    batch groups by exactly this shape signature, so unequal tenants never
+    share a group.  Raises ``ValueError`` on a mismatch rather than
+    silently padding: phantom padded buckets would change the FAR
+    complement every Horvitz-Thompson draw sees."""
+    if not states:
+        raise ValueError("stack_hash_states needs at least one state")
+    leaves0, treedef0 = jax.tree_util.tree_flatten(states[0])
+    for s in states[1:]:
+        leaves, treedef = jax.tree_util.tree_flatten(s)
+        if treedef != treedef0 or any(
+                a.shape != b.shape or a.dtype != b.dtype
+                for a, b in zip(leaves, leaves0)):
+            raise ValueError(
+                "HashState layouts differ in shape/dtype -- serve these "
+                "tenants in separate batch groups")
+    return jax.tree_util.tree_map(lambda *a: jnp.stack(a), *states)
+
+
+@_jit
+def batched_hashed_query(xa, tidx, y, state, keys, *, kind, inv_bw, beta,
+                         pairwise, cell_width, num_far, n, use_pallas=False,
+                         interpret=False, bm=32):
+    """R hashed Definition 1.1 query requests across stacked tenants in
+    ONE program: ``xa (T, n, d)`` stacked tenant rows, ``state`` a
+    :func:`stack_hash_states` pytree, ``y (R, q, d)`` padded query points,
+    ``keys (R, 2)`` per-request PRNG keys.  Returns (estimates (R, q),
+    NEAR eval counts (R, q), per-request status words (R,)) -- each lane
+    is ``hashed_query`` on its own tenant and key, so estimates match the
+    sequential single-tenant calls."""
+    TRACE_COUNTS["batched_hashed_query"] += 1
+
+    def one(ti, y_r, key_r):
+        hs = jax.tree_util.tree_map(lambda a: a[ti], state)
+        return hashed_query(xa[ti], y_r, hs, key_r, kind=kind,
+                            inv_bw=inv_bw, beta=beta, pairwise=pairwise,
+                            cell_width=cell_width, num_far=num_far, n=n,
+                            use_pallas=use_pallas, interpret=interpret,
+                            bm=bm)
+
+    return jax.vmap(one)(tidx, y, keys)
+
+
+# --------------------------------------------------------------------- #
 # streaming patches (DESIGN.md §12)
 # --------------------------------------------------------------------- #
 @jax.jit

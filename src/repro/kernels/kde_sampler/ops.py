@@ -27,6 +27,10 @@ Public entry points (all jitted; static config is passed by keyword):
   one ``lax.scan`` program (one dispatch, one transfer out).
 * ``kernel_rows``             -- exact batched kernel rows for the FKV /
   CP17 low-rank pipeline (Section 5.2).
+* ``batched_fused_sample`` / ``batched_walk_scan`` / ``batched_prob_of``
+  / ``batched_kde_query``    -- the multi-tenant serving entry points
+  (DESIGN.md §13): vmap over a request axis with per-request PRNG keys,
+  per-request status words, and a stacked tenant arena.
 
 Every sampling / application program additionally returns a ``uint32``
 status bitmask (``repro.ft.guards``): cheap in-program reductions over
@@ -699,6 +703,140 @@ def triangle_edge_scan(x, x_sq, u, v, degs, keys, hstate=None, *, kind,
     num_draws = keys.shape[0] - 1
     w_hat = acc * degs[vv] / num_draws
     return uu, vv, w_hat, _g.merge(st, _g.result_status(w_hat))
+
+
+# --------------------------------------------------------------------- #
+# batched multi-tenant entry points (DESIGN.md §13)
+#
+# One serving tick aggregates R concurrent requests -- possibly from
+# different tenants -- into ONE padded device batch: ``tidx (R,)`` indexes
+# the stacked tenant arena ``xa (T, n, d)`` / ``xa_sq (T, n)`` (and, for
+# hashed level-1 tenants, a stacked ``HashState`` pytree), every request
+# carries its OWN PRNG key, and every program returns a PER-REQUEST uint32
+# status word.  ``jax.vmap`` over the request axis reduces each lane to
+# the identical op sequence the single-request entry point runs, so lanes
+# match the sequential calls bitwise on the jnp paths (the parity contract
+# ``tests/test_serving.py`` asserts).  All request-axis shapes are padded
+# to static buckets by the serving layer, which bounds recompiles to one
+# program per (tenant signature, op, bucket) group.
+# --------------------------------------------------------------------- #
+def _tenant(xa, xa_sq, hstate, ti):
+    """Gather one request's tenant slice out of the stacked arena.  Runs
+    under vmap, so ``ti`` is a traced per-request scalar and the hash
+    state (when present) is gathered leaf-wise from the stacked pytree."""
+    hs = (jax.tree_util.tree_map(lambda a: a[ti], hstate)
+          if hstate is not None else None)
+    return xa[ti], xa_sq[ti], hs
+
+
+@_jit
+def batched_fused_sample(xa, xa_sq, tidx, src, keys, hstate=None, *, kind,
+                         inv_bw, beta, pairwise, block_size, num_blocks, n,
+                         s, exact, use_pallas, interpret, bm,
+                         level1="blocked", num_far=64):
+    """One serving tick's depth-2 draws for R requests across T tenants as
+    ONE program: ``src (R, w)`` padded frontiers, ``keys (R, 2)``
+    per-request PRNG keys, ``tidx (R,)`` tenant indices.  Returns
+    (neighbors (R, w), probs (R, w), level-1 sums (R, w, B), per-request
+    status words (R,)).  Lane r is exactly ``fused_sample`` on tenant
+    ``tidx[r]`` with key ``keys[r]``."""
+    TRACE_COUNTS["batched_fused_sample"] += 1
+
+    def one(ti, src_r, key_r):
+        x, x_sq, hs = _tenant(xa, xa_sq, hstate, ti)
+        return _fused_sample(x, x_sq, src_r, key_r, hs, kind=kind,
+                             inv_bw=inv_bw, beta=beta, pairwise=pairwise,
+                             block_size=block_size, num_blocks=num_blocks,
+                             n=n, s=s, exact=exact, use_pallas=use_pallas,
+                             interpret=interpret, bm=bm, level1=level1,
+                             num_far=num_far)
+
+    return jax.vmap(one)(tidx, src, keys)
+
+
+@_jit
+def batched_walk_scan(xa, xa_sq, tidx, starts, keys, hstate=None, *, kind,
+                      inv_bw, beta, pairwise, block_size, num_blocks, n, s,
+                      exact, use_pallas, interpret, bm, rounds, slack,
+                      record_path=False, level1="blocked", num_far=64):
+    """R independent T-step walks (``starts (R, w)``, ``keys (R, T, 2)``)
+    across stacked tenants in ONE program.  Returns (endpoints (R, w),
+    path ((R, T, w) or None), status (R,), rejection fallbacks (R,)) --
+    lane r is ``walk_scan`` on its tenant with its own key stream, so
+    endpoints are bitwise equal to the sequential per-request calls."""
+    TRACE_COUNTS["batched_walk_scan"] += 1
+
+    def one(ti, st_r, keys_r):
+        x, x_sq, hs = _tenant(xa, xa_sq, hstate, ti)
+        return walk_scan(x, x_sq, st_r, keys_r, hs, kind=kind, inv_bw=inv_bw,
+                         beta=beta, pairwise=pairwise, block_size=block_size,
+                         num_blocks=num_blocks, n=n, s=s, exact=exact,
+                         use_pallas=use_pallas, interpret=interpret, bm=bm,
+                         rounds=rounds, slack=slack, record_path=record_path,
+                         level1=level1, num_far=num_far)
+
+    return jax.vmap(one)(tidx, starts, keys)
+
+
+@_jit
+def batched_prob_of(xa, xa_sq, tidx, src, dst, keys, hstate=None, *, kind,
+                    inv_bw, beta, pairwise, block_size, num_blocks, n, s,
+                    exact, use_pallas, interpret, bm, level1="blocked",
+                    num_far=64):
+    """q(dst | src) for R requests (``src``/``dst`` (R, w)) in ONE
+    program: per lane one masked level-1 read of the src frontier (the
+    same read ``prob_of`` performs when its cache is cold) followed by the
+    exact level-2 probability.  Returns (probs (R, w), status (R,))."""
+    TRACE_COUNTS["batched_prob_of"] += 1
+
+    def one(ti, src_r, dst_r, key_r):
+        x, x_sq, hs = _tenant(xa, xa_sq, hstate, ti)
+        views = _block_views(x, x_sq, block_size)
+        bs, st = _masked_sums_any(x, x_sq, src_r, key_r, hs, kind=kind,
+                                  inv_bw=inv_bw, beta=beta, pairwise=pairwise,
+                                  block_size=block_size,
+                                  num_blocks=num_blocks, n=n, s=s,
+                                  exact=exact, use_pallas=use_pallas,
+                                  interpret=interpret, bm=bm, level1=level1,
+                                  num_far=num_far)
+        prob = _prob_core(x, x_sq, views, src_r, dst_r, bs, kind=kind,
+                          inv_bw=inv_bw, beta=beta, pairwise=pairwise,
+                          block_size=block_size, n=n)
+        return prob, _g.merge(st, _g.result_status(prob))
+
+    return jax.vmap(one)(tidx, src, dst, keys)
+
+
+@_jit
+def batched_kde_query(xa, xa_sq, tidx, y, keys, *, kind, inv_bw, beta,
+                      pairwise, block_size, num_blocks, n, s, exact):
+    """Definition 1.1 row-sum estimates for R query requests (``y``
+    (R, q, d) external points) in ONE program -- the dense level-1 read
+    per lane (exact or stratified, matching ``ExactBlockKDE`` /
+    ``StratifiedKDE.query``).  Hash tenants are served by
+    ``kde_hash.ops.batched_hashed_query`` instead.  Returns (estimates
+    (R, q), status (R,))."""
+    TRACE_COUNTS["batched_kde_query"] += 1
+
+    def one(ti, y_r, key_r):
+        x, x_sq = xa[ti], xa_sq[ti]
+        if exact:
+            bs = exact_block_sums(y_r, x, x_sq, kind=kind, inv_bw=inv_bw,
+                                  beta=beta, pairwise=pairwise,
+                                  block_size=block_size,
+                                  num_blocks=num_blocks, n=n)
+        else:
+            bs = stratified_block_sums(y_r, x, x_sq, key_r, kind=kind,
+                                       inv_bw=inv_bw, beta=beta,
+                                       pairwise=pairwise,
+                                       block_size=block_size,
+                                       num_blocks=num_blocks, n=n, s=s)
+        est = bs.sum(-1)
+        st = _g.merge(_g.sums_status(bs, _ref.BLOCK_SUM_FLOOR),
+                      _g.result_status(est))
+        return est, st
+
+    return jax.vmap(one)(tidx, y, keys)
 
 
 # --------------------------------------------------------------------- #

@@ -15,17 +15,26 @@ and counted in the final report.
 kernel-graph service over a mutating point set (DESIGN.md §12).  Each tick
 mutates a fraction of the rows (insert/delete/update), then answers vertex
 / neighbor / edge-batch queries at the new epoch -- the samplers patch
-their level-1 / degree / hash state instead of rebuilding, and the final
-report shows per-tick mutation and query latency plus the or-folded
-status flags:
+their level-1 / degree / hash state instead of rebuilding.  The final
+``[serve] metrics {...}`` line is machine-parsable JSON (per-tick
+latencies, epoch, flags); a guard trip under ``REPRO_CHECKS=1`` exits 3:
 
   python -m repro.launch.serve --graph-stream 4096 --ticks 8 \
       --mutate-frac 0.01 --level1 hash
+
+``--serve-tenants S`` runs the multi-tenant batched servable instead
+(DESIGN.md §13): S mixed tenants (blocked + hashed level-1), ``--requests
+R`` concurrent mixed requests per tick batched into padded device
+programs, with p50/p99 request latency and throughput in the metrics
+line:
+
+  python -m repro.launch.serve --serve-tenants 4 --requests 16 --ticks 4
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
 import sys
 import time
 
@@ -39,14 +48,29 @@ from repro.models import transformer as T
 from repro.train.train_step import make_decode_step
 
 
-def run_graph_stream(args) -> int:
+def _emit_metrics(payload: dict) -> None:
+    """One machine-parsable metrics line (tests and dashboards grep for
+    the ``[serve] metrics `` prefix and json-load the rest)."""
+    print("[serve] metrics " + json.dumps(payload, sort_keys=True))
+
+
+def run_graph_stream(args, trace=None) -> int:
     """Online kernel-graph serving loop (DESIGN.md §12): mutate, then
     answer at the new epoch.  Cost per tick: O(m) mutation bookkeeping +
     one coalesced patch (O(w·m) level-1, O(n·m) degrees, O(m) hash
     splices) folded into the first query, vs. the frozen engines' full
-    rebuild -- the ratio BENCH_streaming.json tracks."""
+    rebuild -- the ratio BENCH_streaming.json tracks.
+
+    ``trace`` optionally scripts the mutations: a list of per-tick dicts
+    with any of ``insert`` ((m, d) rows), ``delete`` (slot ids, or the
+    string ``"frontier"`` to delete rows of the PREVIOUS tick's query
+    frontier -- with ``--reuse-frontier`` this forces an ``EPOCH_STALE``
+    consumer-side detection), and ``update`` ((slots, rows)).  Exit codes:
+    0 clean; 3 when ``REPRO_CHECKS=1`` promoted a status flag to an
+    ``EstimationError``."""
     from repro.core.kernels_fn import gaussian
     from repro.core.streaming import StreamingKernelGraph
+    from repro.ft.guards import EstimationError
 
     n, d = int(args.graph_stream), 16
     rng = np.random.default_rng(args.seed)
@@ -54,31 +78,142 @@ def run_graph_stream(args) -> int:
     g = StreamingKernelGraph(x0, gaussian(1.0), level1=args.level1,
                              seed=args.seed)
     m = max(int(n * args.mutate_frac), 1)
+    ticks = len(trace) if trace is not None else args.ticks
+    reuse = bool(getattr(args, "reuse_frontier", False))
     mut_t = qry_t = 0.0
-    for tick in range(args.ticks):
-        t0 = time.time()
-        live = g.dataset.live_slots()
-        g.insert(rng.normal(size=(m, d)).astype(np.float32))
-        g.delete(rng.choice(live, size=m, replace=False))
-        upd = rng.choice(g.dataset.live_slots(), size=m, replace=False)
-        g.update(upd, rng.normal(size=(m, d)).astype(np.float32))
-        mut_t += time.time() - t0
-        t0 = time.time()
-        u = g.sample_vertices(256)
-        v, _ = g.sample_neighbors(u)
-        g.sample_edges(512)
-        qry_t += time.time() - t0
-        assert g.dataset.is_live(v), "sampled a dead neighbor"
+    ticks_done = 0
+    frontier = None
+    err = None
+    try:
+        for tick in range(ticks):
+            t0 = time.time()
+            if trace is not None:
+                step = trace[tick]
+                if step.get("insert") is not None:
+                    g.insert(np.asarray(step["insert"], np.float32))
+                dele = step.get("delete")
+                if dele is not None:
+                    if isinstance(dele, str) and dele == "frontier":
+                        dele = (frontier if frontier is not None else
+                                g.dataset.live_slots()[:m])
+                    g.delete(np.asarray(dele))
+                if step.get("update") is not None:
+                    slots, rows = step["update"]
+                    g.update(np.asarray(slots),
+                             np.asarray(rows, np.float32))
+            else:
+                live = g.dataset.live_slots()
+                g.insert(rng.normal(size=(m, d)).astype(np.float32))
+                g.delete(rng.choice(live, size=m, replace=False))
+                upd = rng.choice(g.dataset.live_slots(), size=m,
+                                 replace=False)
+                g.update(upd, rng.normal(size=(m, d)).astype(np.float32))
+            mut_t += time.time() - t0
+            t0 = time.time()
+            u = (frontier if reuse and frontier is not None else
+                 g.sample_vertices(min(256, n)))
+            v, _ = g.sample_neighbors(u)
+            g.sample_edges(min(512, n))
+            qry_t += time.time() - t0
+            assert g.dataset.is_live(v), "sampled a dead neighbor"
+            frontier = u
+            ticks_done += 1
+    except EstimationError as e:
+        err = str(e)
+        print(f"[serve] guard tripped at tick {ticks_done}: {e}")
     rep = g.status_report()
-    print(f"[serve] graph-stream n={n} ticks={args.ticks} "
+    per = max(ticks_done, 1)
+    print(f"[serve] graph-stream n={n} ticks={ticks_done}/{ticks} "
           f"mutate_frac={args.mutate_frac} level1={args.level1}")
-    print(f"[serve] mutation {1e3 * mut_t / args.ticks:.1f} ms/tick, "
-          f"queries {1e3 * qry_t / args.ticks:.1f} ms/tick "
+    print(f"[serve] mutation {1e3 * mut_t / per:.1f} ms/tick, "
+          f"queries {1e3 * qry_t / per:.1f} ms/tick "
           f"(patch-on-read, no rebuilds in the hot path)")
-    print(f"[serve] epoch={rep['epoch']} live={rep['num_live']} "
-          f"flags={rep['flags']} degree_rebuilds={rep['degree_rebuilds']} "
-          f"hash_rebuilds={rep['hash_rebuilds']}")
-    return 0
+    _emit_metrics(dict(
+        mode="graph-stream", n=n, ticks=ticks_done, ticks_planned=ticks,
+        mutation_ms_per_tick=round(1e3 * mut_t / per, 3),
+        query_ms_per_tick=round(1e3 * qry_t / per, 3),
+        epoch=int(rep["epoch"]), live=int(rep["num_live"]),
+        flags=rep["flags"], degree_rebuilds=int(rep["degree_rebuilds"]),
+        hash_rebuilds=int(rep["hash_rebuilds"]), error=err))
+    return 3 if err is not None else 0
+
+
+def run_multi_tenant(args) -> int:
+    """Multi-tenant batched serving loop (DESIGN.md §13): S tenants with
+    mixed estimator configs, ``--requests`` concurrent mixed requests per
+    tick drained into padded batch groups.  Reports p50/p99 submit ->
+    completion latency and served-requests/s (steady-state: the first
+    tick warms every (op, bucket) program off-clock).  Exit codes: 0
+    clean; 3 when ``REPRO_CHECKS=1`` turned a request's status flags into
+    a per-request error."""
+    from repro.core.kernels_fn import gaussian
+    from repro.core.serving import KernelGraphServable
+
+    S, R = int(args.serve_tenants), int(args.requests)
+    n, d = 2048, 8
+    rng = np.random.default_rng(args.seed)
+    srv = KernelGraphServable(max_resident=int(args.max_resident))
+    for i in range(S):
+        x = rng.normal(size=(n, d)).astype(np.float32) + 0.1 * i
+        level1 = "hash" if (args.level1 == "hash" and i % 2 == 1) else \
+            "blocked"
+        # one shared kernel config: tenants with equal static signatures
+        # stack into the same batch group (the cross-tenant win)
+        srv.add_tenant(f"t{i}", x, gaussian(1.0), level1=level1,
+                       seed=args.seed + i)
+
+    def submit_mix(tick):
+        reqs = []
+        for r in range(R):
+            tn = f"t{(r + tick) % S}"
+            op = ("sample", "query", "walk", "prob_of")[r % 4]
+            seed = args.seed + 1000 * tick + r
+            if op == "sample":
+                reqs.append(srv.submit(tn, "sample", seed=seed,
+                                       src=rng.integers(0, n, size=16)))
+            elif op == "query":
+                reqs.append(srv.submit(
+                    tn, "query", seed=seed,
+                    y=rng.normal(size=(8, d)).astype(np.float32)))
+            elif op == "walk":
+                reqs.append(srv.submit(tn, "walk", seed=seed, length=4,
+                                       starts=rng.integers(0, n, size=8)))
+            else:
+                reqs.append(srv.submit(tn, "prob_of", seed=seed,
+                                       src=rng.integers(0, n, size=16),
+                                       dst=rng.integers(0, n, size=16)))
+        return reqs
+
+    submit_mix(0)
+    srv.tick()                       # warmup: compiles every group shape
+    lat = []
+    failed = 0
+    t0 = time.perf_counter()
+    for tick in range(1, args.ticks + 1):
+        reqs = submit_mix(tick)
+        srv.tick()
+        for r in reqs:
+            lat.append(r.latency)
+            failed += r.error is not None
+    wall = time.perf_counter() - t0
+    lat_ms = 1e3 * np.asarray(lat)
+    rep = srv.report()
+    served = args.ticks * R - failed
+    print(f"[serve] multi-tenant S={S} R={R}/tick ticks={args.ticks} "
+          f"max_resident={args.max_resident}")
+    print(f"[serve] p50 {np.percentile(lat_ms, 50):.1f} ms, "
+          f"p99 {np.percentile(lat_ms, 99):.1f} ms, "
+          f"{served / max(wall, 1e-9):.1f} req/s "
+          f"(admissions={rep['admissions']} evictions={rep['evictions']})")
+    _emit_metrics(dict(
+        mode="multi-tenant", tenants=S, requests_per_tick=R,
+        ticks=args.ticks, served=served, failed=failed,
+        p50_ms=round(float(np.percentile(lat_ms, 50)), 3),
+        p99_ms=round(float(np.percentile(lat_ms, 99)), 3),
+        throughput_rps=round(served / max(wall, 1e-9), 2),
+        admissions=rep["admissions"], evictions=rep["evictions"],
+        flags=rep["flags"]))
+    return 3 if failed else 0
 
 
 def main(argv=None) -> int:
@@ -104,8 +239,21 @@ def main(argv=None) -> int:
     ap.add_argument("--mutate-frac", type=float, default=0.01)
     ap.add_argument("--level1", choices=["blocked", "hash"],
                     default="blocked")
+    ap.add_argument("--reuse-frontier", action="store_true",
+                    help="graph-stream: query the PREVIOUS tick's vertex "
+                         "frontier (a scripted delete of those rows then "
+                         "trips the EPOCH_STALE consumer check)")
+    ap.add_argument("--serve-tenants", type=int, default=0,
+                    help="run the multi-tenant batched servable over S "
+                         "tenants instead (DESIGN.md §13)")
+    ap.add_argument("--requests", type=int, default=16,
+                    help="concurrent requests per serving tick")
+    ap.add_argument("--max-resident", type=int, default=4,
+                    help="LRU bound on tenants holding device state")
     args = ap.parse_args(argv)
 
+    if args.serve_tenants:
+        return run_multi_tenant(args)
     if args.graph_stream:
         return run_graph_stream(args)
 

@@ -1,0 +1,126 @@
+"""Shared statistical acceptance-test helpers (ISSUE 8 satellite).
+
+Every distributional assertion in the suite draws its keys from ONE
+documented root seed (:data:`ROOT_SEED`) via :func:`derive_seed`, and
+compares against PRECOMPUTED critical values at a written-down
+significance level -- never an ad-hoc "looks small enough" tolerance.
+
+False-positive budget
+---------------------
+All seeds are pinned, so each test is a deterministic function of the
+code under test: it either passes forever or fails forever, and the
+alpha below is the probability the PINNED draw landed in the rejection
+region when the tested distributions really are equal (i.e. the chance
+we shipped a flaky assertion).  Conventions:
+
+* two-sample / one-sample KS: alpha = 1e-3 per assertion
+  (``ks_critical``'s default), asymptotic Kolmogorov approximation
+  c(alpha) = sqrt(-ln(alpha / 2) / 2);
+* total-variation parity: alpha = 1e-3 via the DKW-style bound of
+  :func:`tv_tolerance` -- with S support cells and n draws per side,
+  the empirical TV between two samples of the SAME law exceeds
+  ``sqrt((S ln 2 + ln(2 / alpha)) / (2 n))`` (per side, summed) with
+  probability < alpha;
+* chi-square goodness of fit: alpha from :data:`CHI2_Z`'s table via the
+  Wilson--Hilferty cube-root normal approximation (exact enough for
+  dof >= 4, conservative below).
+
+A suite of ~20 such assertions therefore carries a < 2% one-time risk
+of having baked in a flaky bound, and zero ongoing flake rate.
+"""
+import hashlib
+
+import numpy as np
+
+#: The single root seed every distributional test derives from.  Chosen
+#: once (the date this harness landed) and never changed casually:
+#: changing it re-rolls every pinned draw and re-exposes the suite to
+#: the one-time alpha risk documented above.
+ROOT_SEED = 20260808
+
+#: upper-tail standard-normal quantiles for the Wilson--Hilferty
+#: chi-square approximation (alpha -> z_alpha)
+CHI2_Z = {0.05: 1.645, 0.01: 2.326, 1e-3: 3.090, 1e-4: 3.719, 1e-6: 4.753}
+
+
+def derive_seed(*labels) -> int:
+    """A stable uint32 seed derived from :data:`ROOT_SEED` and string
+    labels (test name, case, repetition).  sha256-based so adding a new
+    label never perturbs sibling tests' streams."""
+    h = hashlib.sha256(
+        ("|".join([str(ROOT_SEED)] + [str(x) for x in labels])).encode())
+    return int.from_bytes(h.digest()[:4], "big")
+
+
+# ---------------------------------------------------------------- KS #
+def ks_statistic(a, b) -> float:
+    """Two-sample Kolmogorov--Smirnov statistic sup_t |F_a(t) - F_b(t)|
+    over the pooled support (works for discrete samples: ties are
+    handled by evaluating both ECDFs at every pooled value)."""
+    a = np.sort(np.asarray(a, np.float64))
+    b = np.sort(np.asarray(b, np.float64))
+    pooled = np.concatenate([a, b])
+    fa = np.searchsorted(a, pooled, side="right") / len(a)
+    fb = np.searchsorted(b, pooled, side="right") / len(b)
+    return float(np.abs(fa - fb).max())
+
+
+def ks_statistic_against_cdf(samples, cdf_at_support) -> float:
+    """One-sample KS of integer-valued ``samples`` in ``[0, S)`` against
+    the exact discrete CDF evaluated on ``arange(S)``."""
+    cdf = np.asarray(cdf_at_support, np.float64)
+    counts = np.bincount(np.asarray(samples, np.int64), minlength=len(cdf))
+    ecdf = np.cumsum(counts) / len(np.asarray(samples))
+    return float(np.abs(ecdf - cdf).max())
+
+
+def ks_critical(n: int, m: int = None, alpha: float = 1e-3) -> float:
+    """Kolmogorov critical value: one-sample (``m=None``)
+    ``c(alpha)/sqrt(n)``; two-sample ``c(alpha) * sqrt((n+m)/(n m))``
+    with ``c(alpha) = sqrt(-ln(alpha/2)/2)`` (asymptotic; conservative
+    for the sample sizes used here, n >= 500)."""
+    c = np.sqrt(-np.log(alpha / 2.0) / 2.0)
+    if m is None:
+        return float(c / np.sqrt(n))
+    return float(c * np.sqrt((n + m) / (n * m)))
+
+
+# ---------------------------------------------------------------- TV #
+def tv_distance(counts_a, counts_b) -> float:
+    """Total-variation distance between two empirical histograms."""
+    pa = np.asarray(counts_a, np.float64)
+    pb = np.asarray(counts_b, np.float64)
+    return float(0.5 * np.abs(pa / pa.sum() - pb / pb.sum()).sum())
+
+
+def tv_tolerance(support: int, n: int, m: int = None,
+                 alpha: float = 1e-3) -> float:
+    """Upper bound on the empirical TV between two samples of the SAME
+    discrete law on ``support`` cells, violated with probability <
+    ``alpha``: per side, ``TV(hat p, p) <= sqrt((S ln 2 + ln(2/alpha)) /
+    (2 n))`` (union bound over the 2^S events behind the TV sup,
+    Hoeffding each), and the two sides add by the triangle
+    inequality."""
+    def side(k):
+        return np.sqrt((support * np.log(2.0) + np.log(2.0 / alpha))
+                       / (2.0 * k))
+    return float(side(n) + side(m if m is not None else n))
+
+
+# -------------------------------------------------------- chi-square #
+def chi2_statistic(counts, expected) -> float:
+    """Pearson chi-square statistic over cells with expected mass."""
+    c = np.asarray(counts, np.float64)
+    e = np.asarray(expected, np.float64)
+    keep = e > 0
+    return float(((c[keep] - e[keep]) ** 2 / e[keep]).sum())
+
+
+def chi2_critical(dof: int, alpha: float = 1e-3) -> float:
+    """Wilson--Hilferty upper critical value for chi-square(dof): exact
+    to ~1% for dof >= 4 and conservative below; ``alpha`` must be a key
+    of :data:`CHI2_Z`."""
+    z = CHI2_Z[alpha]
+    k = float(dof)
+    return float(k * (1.0 - 2.0 / (9.0 * k)
+                      + z * np.sqrt(2.0 / (9.0 * k))) ** 3)

@@ -268,32 +268,44 @@ def test_walk_draw_stream_bitwise_after_patch(data):
 def test_neighbor_distribution_tv_after_patch(data):
     """Stochastic level-1 (stratified): patched and fresh samplers with
     diverged keys agree in *distribution* -- total variation over the
-    endpoint histogram of single-step draws from one source."""
+    endpoint histogram of single-step draws from one source.  Seeds
+    derive from ``stats.ROOT_SEED``; the tolerance is the precomputed
+    ``stats.tv_tolerance`` bound (alpha = 1e-3) times a x2 slack because
+    the 500 draws of a chunk share ONE stratified level-1 read (8
+    independently-keyed chunks, so the iid bound under-counts the
+    chunk-level noise; measured statistic under the pinned seed: 0.211
+    vs. the inflated bound 0.439)."""
+    import stats
+
     from repro.core.sampling.edge import NeighborSampler
     rng, x0, k = data
     x_small = x0[:96]
     ds = DynamicDataset(x_small, capacity=128)
-    nbr = NeighborSampler(ds.x_pad, k, dataset=ds, seed=2, block_size=16,
-                          samples_per_block=8)
+    nbr = NeighborSampler(ds.x_pad, k, dataset=ds,
+                          seed=stats.derive_seed("streaming", "tv-patched"),
+                          block_size=16, samples_per_block=8)
     nbr.sample(np.arange(8))           # desync the key streams
     ds.delete_rows(np.arange(64, 80))
     ds.insert_rows((x_small[:4] + 0.3).astype(np.float32))
-    fresh = NeighborSampler(ds.x_pad, k, seed=41, block_size=16,
-                            samples_per_block=8)
+    fresh = NeighborSampler(ds.x_pad, k,
+                            seed=stats.derive_seed("streaming", "tv-fresh"),
+                            block_size=16, samples_per_block=8)
     # one stratified level-1 read is shared by a whole batch (one key per
     # frontier), so block-level noise is batch-correlated: average the
     # histograms over several independently-keyed chunks
     src = np.zeros(500, np.int64)
     h1 = np.zeros(ds.n)
     h2 = np.zeros(ds.n)
-    for _ in range(8):
+    reps = 8
+    for _ in range(reps):
         v1, _ = nbr.sample(src)
         v2, _ = fresh.sample(src)
         assert ds.is_live(np.asarray(v1)) and ds.is_live(np.asarray(v2))
         h1 += np.bincount(np.asarray(v1), minlength=ds.n)
         h2 += np.bincount(np.asarray(v2), minlength=ds.n)
-    tv = 0.5 * np.abs(h1 - h2).sum() / h1.sum()
-    assert tv < 0.3, tv
+    tv = stats.tv_distance(h1, h2)
+    tol = 2.0 * stats.tv_tolerance(ds.n, len(src) * reps, alpha=1e-3)
+    assert tv < tol, (tv, tol)
 
 
 def test_streaming_graph_end_to_end(data):
