@@ -41,7 +41,11 @@ Distributional contract (``tests/test_serving.py``): a served request is
 the SAME computation as the sequential single-tenant call with the same
 key -- bitwise for keyed walks and draws when the request width equals
 its shape bucket, and distribution-identical (each padded lane still
-consumes iid uniforms) otherwise.
+consumes iid uniforms) otherwise.  Mesh ``sample``/``prob_of`` groups
+fold every co-batched request's seed into one key stream (see
+:meth:`KernelGraphServable.submit`).  :meth:`~KernelGraphServable.tick`
+itself never raises: admission, grouping, and each group's program are
+fault-isolated, attaching failures to exactly the affected requests.
 
 >>> srv = KernelGraphServable(max_resident=2)
 >>> srv.add_tenant("a", xa, gaussian(1.0))
@@ -225,21 +229,27 @@ class ServedTenant:
     def draw_sig(self):
         """Static signature of the tenant's draw programs: equal
         signatures => the stacked arena traces ONE program for the
-        whole group."""
+        whole group.  Includes the padded dataset shape (not just the
+        ``n`` config key): tenants must agree on the feature dimension
+        ``d`` too, or the arena's ``jnp.stack`` would reject them."""
         c = self.nbr._cfg
-        return tuple(sorted(c.items())) + (self._state_sig(),)
+        return (tuple(sorted(c.items())) + (tuple(self.nbr.x.shape),)
+                + (self._state_sig(),))
 
     def query_sig(self):
         """Static signature of the tenant's query program (the dense
-        level-1 read, or the hashed estimator's config + layout shapes)."""
+        level-1 read, or the hashed estimator's config + layout shapes);
+        both carry the padded dataset shape so only stack-compatible
+        tenants (same ``n_pad`` AND ``d``) share a group."""
         nbr = self.nbr
         if nbr.level1 == "hash":
             hq = nbr.hash_estimator
             return ("hash-query", tuple(sorted(hq._cfg.items())),
-                    self._state_sig())
+                    tuple(nbr.x.shape), self._state_sig())
         keys = ("kind", "inv_bw", "beta", "pairwise", "block_size",
                 "num_blocks", "n", "s", "exact")
-        return ("dense-query", tuple((k, nbr._cfg[k]) for k in keys))
+        return ("dense-query", tuple((k, nbr._cfg[k]) for k in keys),
+                tuple(nbr.x.shape))
 
 
 def _pad_idx(a, wb: int) -> np.ndarray:
@@ -357,11 +367,23 @@ class KernelGraphServable:
         """Enqueue one request; returns its :class:`Request` handle (the
         next :meth:`tick` fills ``result`` / ``status`` / ``error``).
         ``seed`` pins the request's PRNG key -- equal seeds on equal
-        payloads reproduce draws bitwise; default is a running counter."""
+        payloads reproduce draws bitwise; default is a running counter.
+        One caveat: a MESH tenant's ``sample``/``prob_of`` requests that
+        land in the same tick concatenate into one draw batch whose key
+        stream folds in every co-batched request's seed, so bitwise
+        reproducibility there additionally requires the same co-batch
+        composition (a request served alone always reproduces)."""
         if tenant not in self._tenants:
             raise KeyError(f"unknown tenant {tenant!r}")
         if op not in REQUEST_OPS:
             raise ValueError(f"unknown op {op!r}; expected {REQUEST_OPS}")
+        if op == "prob_of":
+            ns = np.asarray(payload["src"]).reshape(-1).shape[0]
+            nd = np.asarray(payload["dst"]).reshape(-1).shape[0]
+            if ns != nd:
+                raise ValueError(
+                    f"prob_of src/dst widths differ ({ns} != {nd}): "
+                    "q(dst | src) pairs one destination per source row")
         self._rid += 1
         r = Request(tenant=tenant, op=op, payload=dict(payload),
                     seed=int(self._rid * 7919 if seed is None else seed),
@@ -388,19 +410,39 @@ class KernelGraphServable:
             stats.update(admissions=0, evictions=0, tick_ms=0.0)
             return stats
         needed = {r.tenant for r in reqs}
+        admit_errors: dict = {}
         for name in sorted(needed):
-            self._admit(name, needed)
+            try:
+                self._admit(name, needed)
+            except Exception as e:     # noqa: BLE001 -- per-tenant isolation
+                admit_errors[name] = e
         groups: dict = {}
         for r in reqs:
-            t = self._tenants[r.tenant]
-            if not self._gate_stale(r, t, stats):
+            if r.tenant in admit_errors:
+                self._fail(r, admit_errors[r.tenant])
                 continue
-            groups.setdefault(self._group_key(r, t), []).append(r)
+            t = self._tenants[r.tenant]
+            try:
+                if not self._gate_stale(r, t, stats):
+                    continue
+                gkey = self._group_key(r, t)
+            except Exception as e:     # noqa: BLE001 -- bad payload
+                self._fail(r, e)
+                continue
+            groups.setdefault(gkey, []).append(r)
         for key, grp in groups.items():
-            if key[0] == "mesh":
-                self._serve_mesh_group(key, grp)
-            else:
-                self._serve_flat_group(key, grp)
+            # per-group fault isolation: one group blowing up (bad payload
+            # dims, engine failure) fails ITS requests only -- the other
+            # groups of the tick still serve ("never poisons a batch")
+            try:
+                if key[0] == "mesh":
+                    self._serve_mesh_group(key, grp)
+                else:
+                    self._serve_flat_group(key, grp)
+            except Exception as e:     # noqa: BLE001 -- per-group isolation
+                for r in grp:
+                    if r.finished is None:
+                        self._fail(r, e)
             stats["groups"] += 1
         for r in reqs:
             if r.finished is None:       # defensive: mark unserved as failed
@@ -419,6 +461,12 @@ class KernelGraphServable:
         return stats
 
     # ------------------------------------------------------------------ #
+    @staticmethod
+    def _fail(r: Request, e: Exception) -> None:
+        """Finish ``r`` with ``e`` -- the tick itself never raises."""
+        r.error = e
+        r.finished = time.perf_counter()
+
     def _frontier_rows(self, r: Request) -> Optional[np.ndarray]:
         """Dataset rows the request dereferences (None for point queries)."""
         if r.op == "sample":
@@ -575,14 +623,16 @@ class KernelGraphServable:
         and probability reads concatenate the group's frontiers into ONE
         draw batch (one psum -- the §9 schedule; batching adds zero extra
         collectives), walks run per request (each walk step is its own
-        collective batch either way).  The group shares one key stream
-        seeded from the first request -- distribution-identical, and the
-        concatenated batch is bitwise-reproducible given equal seeds."""
+        collective batch either way).  The group shares ONE key stream
+        that folds in every request's seed (first seed -> ``PRNGKey``,
+        the rest ``fold_in`` in queue order): distribution-identical,
+        deterministic in all submitted seeds, and bitwise-reproducible
+        given equal seeds AND equal co-batch composition (documented on
+        :meth:`KernelGraphServable.submit`)."""
         _, name, op = key[0], key[1], key[2]
         t = self._tenants[name]
         nbr = t.nbr
         engine = nbr._engine
-        key0 = jax.random.PRNGKey(grp[0].seed)
         if op == "walk":
             length = key[3]
             res, words = [], []
@@ -609,6 +659,9 @@ class KernelGraphServable:
                 getattr(nbr.blocks, "last_status", 0)), np.uint32)
             self._scatter(grp, res, st)
             return
+        key0 = jax.random.PRNGKey(grp[0].seed)
+        for r in grp[1:]:
+            key0 = jax.random.fold_in(key0, r.seed)
         widths = [len(np.asarray(r.payload["src"]).reshape(-1))
                   for r in grp]
         src = jnp.asarray(np.concatenate(
@@ -625,7 +678,11 @@ class KernelGraphServable:
                 [np.asarray(r.payload["dst"]).reshape(-1) for r in grp]),
                 jnp.int32)
             bs = engine.masked_block_sums(src, key0)
-            prob = np.asarray(engine.prob_of_from_block_sums(src, dst, bs))
+            prob_dev = engine.prob_of_from_block_sums(src, dst, bs)
+            # masked_block_sums carries no status word (no collective, no
+            # draw); flag the read itself -- NONFINITE_RESULT on NaN/Inf
+            st = _g.result_status(prob_dev)
+            prob = np.asarray(prob_dev)
             res = [prob[offs[i]:offs[i + 1]] for i in range(len(grp))]
         word = np.uint32(st)
         self._scatter(grp, res, np.full(len(grp), word, np.uint32))

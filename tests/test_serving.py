@@ -279,6 +279,55 @@ def test_no_retrace_across_ticks(srv2):
     assert dict(_ops.TRACE_COUNTS) == before
 
 
+def test_prob_of_width_mismatch_rejected_at_submit(srv2):
+    """len(src) != len(dst) is a caller error surfaced at submit() --
+    the malformed request never reaches (or poisons) a tick."""
+    with pytest.raises(ValueError, match="widths differ"):
+        srv2.submit("a", "prob_of", src=np.arange(4), dst=np.arange(5))
+    assert srv2.pending() == 0
+
+
+def test_group_failure_isolated_per_request(srv2):
+    """Per-group fault isolation: a group that blows up on device (query
+    points with the wrong feature dimension) attaches the exception to
+    ITS requests only -- the healthy group of the same tick still serves
+    and tick() itself never raises."""
+    bad = srv2.submit("a", "query", y=np.zeros((4, D + 3), np.float32),
+                      seed=881)
+    ok = srv2.submit("b", "sample", src=np.arange(8), seed=882)
+    st = srv2.tick()
+    assert st["failed"] == 1 and st["served"] == 1
+    assert bad.error is not None and bad.result is None and bad.done
+    assert ok.error is None and np.isfinite(ok.result[1]).all()
+
+
+def test_malformed_payload_isolated_per_request(srv2):
+    """A request whose payload breaks grouping (walk without length)
+    fails alone; the co-submitted request is served."""
+    bad = srv2.submit("a", "walk", starts=np.arange(8), seed=883)
+    ok = srv2.submit("a", "sample", src=np.arange(8), seed=884)
+    st = srv2.tick()
+    assert st["failed"] == 1 and st["served"] == 1
+    assert isinstance(bad.error, KeyError) and bad.done
+    assert ok.error is None
+
+
+def test_different_feature_dims_do_not_share_group():
+    """Tenants with identical static config but different feature
+    dimension d carry d in their signature, so they form SEPARATE groups
+    (stacking their arenas would be a shape error) and both serve."""
+    srv = KernelGraphServable()
+    srv.add_tenant("d4", _data("d4"), gaussian(1.0), block_size=16)
+    rng = np.random.default_rng(stats.derive_seed("serving", "d6"))
+    srv.add_tenant("d6", rng.normal(0, 0.6, (N, 6)).astype(np.float32),
+                   gaussian(1.0), block_size=16)
+    ra = srv.submit("d4", "sample", src=np.arange(8), seed=871)
+    rb = srv.submit("d6", "sample", src=np.arange(8), seed=872)
+    st = srv.tick()
+    assert st["groups"] == 2 and st["failed"] == 0
+    assert ra.error is None and rb.error is None
+
+
 def test_mutation_between_ticks_refreshes_arena():
     """Mutating a tenant's dataset between ticks invalidates the stacked
     arena via the epoch key: post-mutation draws land on live rows."""
@@ -359,7 +408,10 @@ def test_mesh_serving_one_psum_subprocess():
     """A mesh tenant's served draw batch (4 concatenated requests) is ONE
     engine program with exactly one psum and zero ppermute -- the §9
     schedule survives the batching layer -- and its per-request slices are
-    bitwise the direct engine call."""
+    bitwise the direct engine call under the documented group key stream
+    (first seed -> PRNGKey, co-batched seeds folded in).  A second tick
+    exercises every other mesh op -- walk, query, and prob_of (served
+    alone: bitwise the direct masked_block_sums + prob_of read)."""
     code = """
 import jax, jax.numpy as jnp, numpy as np
 from repro.core.kernels_fn import gaussian
@@ -378,6 +430,8 @@ eng = srv.tenant("m").admit()._engine
 cat = jnp.asarray(np.concatenate([np.arange(16) + 16 * i
                                   for i in range(4)]), jnp.int32)
 key = jax.random.PRNGKey(reqs[0].seed)
+for r in reqs[1:]:
+    key = jax.random.fold_in(key, r.seed)
 cc = collective_counts(lambda s, k: eng.fused_sample(s, k), cat, key)
 assert cc["psum_total"] == 1 and cc["ppermute_total"] == 0, cc
 nb, prob, _, _ = eng.fused_sample(cat, key)
@@ -387,9 +441,19 @@ for i, r in enumerate(reqs):
     np.testing.assert_array_equal(r.result[1], prob[16 * i:16 * (i + 1)])
 rw = srv.submit("m", "walk", starts=np.arange(8), length=3, seed=950)
 rq = srv.submit("m", "query", y=rng.normal(0, 0.6, (6, 4)).astype(np.float32))
+src_p, dst_p = np.arange(8), np.arange(8) + 24
+rp = srv.submit("m", "prob_of", src=src_p, dst=dst_p, seed=960)
 st2 = srv.tick()
-assert st2["failed"] == 0 and rw.result[0].shape == (8,)
+assert st2["failed"] == 0, [str(r.error) for r in (rw, rq, rp)]
+assert rw.result[0].shape == (8,)
 assert np.isfinite(rq.result).all() and rq.result.shape == (6,)
+assert rp.error is None and rp.status == 0
+bs = eng.masked_block_sums(jnp.asarray(src_p, jnp.int32),
+                           jax.random.PRNGKey(rp.seed))
+p0 = eng.prob_of_from_block_sums(jnp.asarray(src_p, jnp.int32),
+                                 jnp.asarray(dst_p, jnp.int32), bs)
+np.testing.assert_array_equal(rp.result, np.asarray(p0))
+assert np.isfinite(rp.result).all() and (rp.result > 0).all()
 print("MESH_SERVE_OK")
 """ % stats.derive_seed("serving", "mesh")
     full = ('import os\nos.environ["XLA_FLAGS"] = '
