@@ -93,6 +93,67 @@ def _time(fn, repeats=3, warmup=1):
     return min(times)
 
 
+def _scaling(quick: bool, mesh, devices: int) -> dict:
+    """n-sweep of the fused sharded walk up to ~10^6 points (DESIGN.md §14).
+
+    Uses the subsampled level-1 configuration (``exact=False``,
+    s = 16 rows per block) so the per-step cost stays O(w * B * s / p)
+    per shard and the sweep reaches 10^6 points in quick mode.  Each entry
+    carries a measured-roofline fraction: per-device operand bytes (local
+    level-1 subsample read + owner-shard level-2 slab) and the one-psum
+    collective payload against ``chip_spec_for_backend()``.
+    """
+    from repro.roofline.analysis import (chip_spec_for_backend,
+                                         measured_roofline)
+    sizes = [4096, 65536, 1048576] if quick else [
+        4096, 65536, 262144, 1048576]
+    w, length, d, s = 256, 4, 8, 16
+    spec = chip_spec_for_backend()
+    rng = np.random.default_rng(0)
+    entries = []
+    for n in sizes:
+        x = rng.normal(0, 0.5, (n, d)).astype(np.float32)
+        ker = gaussian(2.0)
+        bs = max(int(np.sqrt(n)), 16)
+        eng = ShardedBlocks(mesh, x, ker, block_size=bs,
+                            samples_per_block=s, exact=False)
+        starts = jnp.asarray(rng.integers(0, n, w), jnp.int32)
+        keys = jax.random.split(jax.random.PRNGKey(3), length)
+
+        def stepper():
+            end, *_ = eng.walk_scan(starts, keys)
+            np.asarray(end)
+
+        t = _time(stepper, repeats=3, warmup=1)
+        sps = w * length / t
+        num_blocks = -(-n // bs)
+        # Per-device operand traffic per step: this shard's slice of the
+        # subsampled level-1 read plus the (owner-shard) level-2 slab,
+        # amortized 1/p; the psum moves the (w, p) candidate table.
+        bytes_dev = (w * (num_blocks * s // devices) * d * 4
+                     + w * bs * d * 4 // devices)
+        coll_dev = 3 * w * devices * 4
+        flops_dev = 2.0 * w * (num_blocks * s // devices + bs // devices) * d
+        mr = measured_roofline(t / length, flops_dev, bytes_dev, spec=spec,
+                               chips=devices,
+                               coll_bytes_per_device=coll_dev)
+        emit(f"distributed_walk_scaling/n={n}_p{devices}",
+             t * 1e6 / (w * length),
+             f"steps_per_sec={sps:.0f};"
+             f"roofline_frac={mr.achieved_fraction:.3f};"
+             f"dominant={mr.dominant}")
+        entries.append(dict(
+            n=n, block_size=bs, walkers=w, length=length, d=d,
+            samples_per_block=s, steps_per_sec=sps,
+            us_per_step=t / length * 1e6,
+            modeled_bytes_per_device_step=bytes_dev,
+            psum_bytes_per_device_step=coll_dev,
+            roofline=dict(fraction=mr.achieved_fraction,
+                          dominant=mr.dominant,
+                          achieved_bw=mr.achieved_bw)))
+    return dict(devices=devices, spec=spec.as_dict(), entries=entries)
+
+
 def run(quick: bool = False) -> None:
     """Benchmark entry point (called by ``benchmarks.run``)."""
     n = 4096 if quick else 16384
@@ -139,6 +200,7 @@ def run(quick: bool = False) -> None:
         "fused_steps_per_sec": new_sps,
         "host_orchestrated_steps_per_sec": old_sps,
         "speedup": speedup,
+        "scaling": _scaling(quick, mesh, devices),
     }
     _JSON_PATH.write_text(json.dumps(payload, indent=2) + "\n")
     print(f"# wrote {_JSON_PATH.name}: {speedup:.1f}x over the "

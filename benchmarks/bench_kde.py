@@ -167,11 +167,71 @@ def _pipelines(quick: bool, rows, results):
                             ratio=errs["hash"] / errs["stratified"]))
 
 
+def _precision_scaling(quick: bool, rows, results):
+    """f32 vs bf16 level-1 sweep throughput, n-sweep up to ~10^6.
+
+    The bf16 policy (DESIGN.md §14) halves the dataset bytes the level-1
+    sweep streams while keeping f32 accumulation, so the speedup target is
+    >= 1.5x at n >= 262144 with rel-err within ``2 * BF16_REL_ERR``.  Each
+    entry carries a measured-roofline fraction from the modeled sweep
+    traffic (n * d operand bytes per query batch) against the backend
+    peaks.
+    """
+    from repro.kernels.kde_sampler.ref import BF16_REL_ERR
+    from repro.roofline import analysis as _roofline
+    sizes = [65536, 262144, 1048576] if quick else [
+        65536, 262144, 524288, 1048576]
+    d, m = 16, 64
+    spec = _roofline.chip_spec_for_backend()
+    entries = []
+    for n in sizes:
+        rng = np.random.default_rng(0)
+        x = rng.normal(0, 0.5, (n, d)).astype(np.float32)
+        q = rng.normal(0, 0.5, (m, d)).astype(np.float32)
+        ker = gaussian(bandwidth=4.0)
+        per = {}
+        for prec in ("f32", "bf16"):
+            est = ExactKDE(x, ker, precision=prec)
+            reps = 3 if n >= 1048576 else 5
+            us = timeit(lambda: np.asarray(est.query(q)), repeats=reps)
+            t = us * 1e-6
+            in_bytes = _roofline.dtype_bytes(
+                "bfloat16" if prec == "bf16" else "float32")
+            # Sweep traffic: the dataset tile stream dominates (queries and
+            # the f32 accumulator are tile-resident).
+            bytes_moved = float(n) * d * in_bytes + m * d * 4 + m * 4
+            flops = 2.0 * n * m * d
+            mr = _roofline.measured_roofline(t, flops, bytes_moved,
+                                             spec=spec)
+            per[prec] = dict(us_per_batch=us,
+                             evals_per_sec=n * m / t,
+                             vals=np.asarray(est.query(q), np.float64),
+                             roofline=dict(fraction=mr.achieved_fraction,
+                                           dominant=mr.dominant,
+                                           achieved_bw=mr.achieved_bw))
+        rel = float(np.max(np.abs(per["bf16"]["vals"] / per["f32"]["vals"]
+                                  - 1.0)))
+        speedup = per["f32"]["us_per_batch"] / per["bf16"]["us_per_batch"]
+        rows.append(emit(
+            f"kde_precision/n={n}", per["bf16"]["us_per_batch"] / m,
+            f"bf16_speedup={speedup:.2f}x;rel_err={rel:.2e};"
+            f"bound={2 * BF16_REL_ERR:.2e};"
+            f"roofline_frac={per['bf16']['roofline']['fraction']:.3f}"))
+        entries.append(dict(
+            n=n, d=d, m=m, bf16_speedup=speedup, bf16_rel_err=rel,
+            rel_err_bound=2 * BF16_REL_ERR,
+            f32={k: v for k, v in per["f32"].items() if k != "vals"},
+            bf16={k: v for k, v in per["bf16"].items() if k != "vals"}))
+    results["precision"] = dict(kernel="gaussian", spec=spec.as_dict(),
+                                entries=entries)
+
+
 def run(quick: bool = False):
     rows, results = [], {}
     _matrix(quick, rows, results)
     _mesh(quick, rows, results)
     _pipelines(quick, rows, results)
+    _precision_scaling(quick, rows, results)
     _JSON_PATH.write_text(json.dumps(dict(
         benchmark="bench_kde", backend=jax.default_backend(), quick=quick,
         results=results), indent=2) + "\n")

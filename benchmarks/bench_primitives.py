@@ -3,12 +3,21 @@ reduction and application.
 
 derived = "kernel_evals=<n>;frac_of_n2=<f>" -- each application's measured
 cost relative to materializing the kernel matrix (n^2 evals).
+
+``--check`` (the CI perf-smoke step) reruns the quick configuration and
+fails if any eval counter drifts from the pinned ``QUICK_BASELINE`` or if
+the sampler's accumulated status word carries a ``guards.FATAL`` bit.  The
+counters are exact: every primitive here is seeded, so a changed count
+means the sampling schedule changed -- which must be a deliberate edit to
+this baseline, never an accident.
 """
 from __future__ import annotations
 
+import argparse
+
 import numpy as np
 
-from benchmarks.common import emit, timeit
+from benchmarks.common import emit
 from repro.core.eigen import top_eigenvalue
 from repro.core.graph.arboricity import estimate_arboricity
 from repro.core.graph.triangles import estimate_triangle_weight
@@ -21,57 +30,132 @@ from repro.core.sampling.walks import random_walks
 from repro.core.sparsify import spectral_sparsify
 from repro.core.spectrum import approximate_spectrum
 
+# Pinned quick-mode eval counters (n=1000, seeds as in ``_measure``).
+# Regenerate deliberately with ``python -m benchmarks.bench_primitives
+# --quick --print-baseline`` after any intentional schedule change.
+QUICK_BASELINE = {
+    "degree_preprocessing": 64000,
+    "neighbor_sample": 75520,
+    "random_walk_len8": 151040,
+    "spectral_sparsification": 2688832,
+    "low_rank_approx": 280000,
+    "top_eigenvalue": 22500,
+    "spectrum_emd": 1781568,
+    "triangle_weight": 685000,
+    "arboricity": 2821760,
+}
 
-def run(quick: bool = False):
+
+def _measure(quick: bool):
+    """Run every primitive/application once; return (rows, counters,
+    accumulated sampler status word)."""
     n = 1000 if quick else 2000
     rng = np.random.default_rng(0)
     x = rng.normal(0, 0.35, (n, 6)).astype(np.float32)
     ker = gaussian(bandwidth=2.0)
     n2 = float(n * n)
     rows = []
+    counters = {}
 
     est = make_estimator("stratified", x, ker, seed=0)
-    ds = DegreeSampler(est, seed=1)
+    DegreeSampler(est, seed=1)
+    counters["degree_preprocessing"] = int(est.evals)
     rows.append(emit("primitive/degree_preprocessing", 0.0,
                      f"kernel_evals={est.evals};frac_of_n2={est.evals/n2:.4f}"))
 
     nb = NeighborSampler(x, ker, mode="blocked", samples_per_block=8, seed=2)
     nb.sample(np.zeros(256, np.int64))
+    counters["neighbor_sample"] = int(nb.evals)
     per_sample = nb.evals / 256
     rows.append(emit("primitive/neighbor_sample", 0.0,
                      f"kernel_evals={per_sample:.0f};frac_of_n2={per_sample/n2:.6f}"))
 
     e0 = nb.evals
     random_walks(nb, np.zeros(64, np.int64), 8)
+    counters["random_walk_len8"] = int(nb.evals - e0)
     per_walk = (nb.evals - e0) / 64
     rows.append(emit("primitive/random_walk_len8", 0.0,
                      f"kernel_evals={per_walk:.0f};frac_of_n2={per_walk/n2:.6f}"))
+    status = int(nb.status)
 
     g = spectral_sparsify(x, ker, num_edges=8 * n, estimator="stratified",
                           samples_per_block=8, seed=0)
+    counters["spectral_sparsification"] = int(g.kernel_evals)
     rows.append(emit("app/spectral_sparsification", 0.0,
                      f"kernel_evals={g.kernel_evals};frac_of_n2={g.kernel_evals/n2:.3f}"))
 
     res = fkv_lowrank(x, ker, rank=8, num_rows=200, estimator="rs", seed=0)
+    counters["low_rank_approx"] = int(res.kernel_evals)
     rows.append(emit("app/low_rank_approx", 0.0,
                      f"kernel_evals={res.kernel_evals};frac_of_n2={res.kernel_evals/n2:.3f}"))
 
     er = top_eigenvalue(x, ker, t=150, seed=0)
+    counters["top_eigenvalue"] = int(er.kernel_evals)
     rows.append(emit("app/top_eigenvalue", 0.0,
                      f"kernel_evals={er.kernel_evals};frac_of_n2={er.kernel_evals/n2:.3f}"))
 
     sp = approximate_spectrum(x, ker, length=6, num_sources=12,
                               walks_per_source=24, seed=0)
+    counters["spectrum_emd"] = int(sp.kernel_evals)
     rows.append(emit("app/spectrum_emd", 0.0,
                      f"kernel_evals={sp.kernel_evals};frac_of_n2={sp.kernel_evals/n2:.3f}"))
 
     tr = estimate_triangle_weight(x, ker, num_edges=200, neighbor_samples=8,
                                   estimator="stratified", seed=0)
+    counters["triangle_weight"] = int(tr.kernel_evals)
     rows.append(emit("app/triangle_weight", 0.0,
                      f"kernel_evals={tr.kernel_evals};frac_of_n2={tr.kernel_evals/n2:.3f}"))
 
     ar = estimate_arboricity(x, ker, num_edges=4 * n, estimator="stratified",
                              seed=0)
+    counters["arboricity"] = int(ar.kernel_evals)
     rows.append(emit("app/arboricity", 0.0,
                      f"kernel_evals={ar.kernel_evals};frac_of_n2={ar.kernel_evals/n2:.3f}"))
+    return rows, counters, status
+
+
+def check_quick() -> None:
+    """CI perf-smoke: quick counters must match ``QUICK_BASELINE`` exactly
+    and no sampler status word may carry a fatal guard bit."""
+    from repro.ft.guards import FATAL, decode_status
+    _, counters, status = _measure(quick=True)
+    drift = {k: (QUICK_BASELINE.get(k), v) for k, v in counters.items()
+             if QUICK_BASELINE.get(k) != v}
+    if drift:
+        lines = "\n".join(f"  {k}: baseline={b} measured={m}"
+                          for k, (b, m) in sorted(drift.items()))
+        raise RuntimeError(
+            f"eval-counter regression vs QUICK_BASELINE:\n{lines}\n"
+            "If the schedule change is intentional, regenerate the baseline "
+            "with --print-baseline and update bench_primitives.py.")
+    if status & FATAL:
+        raise RuntimeError(
+            f"sampler status carries fatal guard bits: "
+            f"{decode_status(status & FATAL)} (status=0x{status:x})")
+    print(f"# check ok: {len(counters)} counters match baseline, "
+          f"status=0x{status:x}")
+
+
+def run(quick: bool = False):
+    rows, _, _ = _measure(quick)
     return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--check", action="store_true",
+                    help="fail on eval-counter/status regressions")
+    ap.add_argument("--print-baseline", action="store_true",
+                    help="print the measured quick counters as python")
+    a = ap.parse_args()
+    if a.print_baseline:
+        _, counters, _ = _measure(quick=True)
+        print("QUICK_BASELINE = {")
+        for k, v in counters.items():
+            print(f'    "{k}": {v},')
+        print("}")
+    elif a.check:
+        check_quick()
+    else:
+        run(quick=a.quick)

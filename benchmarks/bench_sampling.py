@@ -24,6 +24,8 @@ import numpy as np
 from benchmarks.common import emit
 from repro.core.kernels_fn import Kernel, gaussian
 from repro.core.sampling.edge import NeighborSampler
+from repro.kernels.kde_sampler import ops as _sampler_ops
+from repro.roofline import analysis as _roofline
 
 _JSON_PATH = Path(__file__).resolve().parent.parent / "BENCH_sampling.json"
 
@@ -130,6 +132,74 @@ def _time(fn, repeats=3, warmup=1):
     return min(times)
 
 
+def _walk_scaling(quick: bool, rows: list):
+    """n-sweep of walk throughput up to ~10^6 points (DESIGN.md §14).
+
+    The fused walk's per-step cost under the walk-resident layout is
+    O(cached cols) at level 1 plus O(walk_block_size) at level 2, both flat
+    or sqrt-ish in n -- so walk-steps/sec should degrade only gently with n.
+    ``cliff_ratio`` records thr(4096) / thr(n); the acceptance bound for
+    this series is cliff_ratio <= 2 at n = 65536.
+
+    Each entry also carries a measured-roofline fraction: modeled per-step
+    operand bytes (cached level-1 read + level-2 stratum slab + CDF lanes)
+    and kernel-eval flops against the backend's
+    ``roofline.analysis.chip_spec_for_backend()`` peaks.
+    """
+    sizes = [4096, 65536, 1048576] if quick else [
+        4096, 16384, 65536, 262144, 1048576]
+    walkers, steps, d = 256, 4, 16
+    fb = _roofline.dtype_bytes("float32")
+    spec = _roofline.chip_spec_for_backend()
+    entries = []
+    base_sps = None
+    for n in sizes:
+        rng = np.random.default_rng(0)
+        x = rng.normal(0, 0.5, (n, d)).astype(np.float32)
+        ns = NeighborSampler(x, gaussian(bandwidth=4.0), mode="blocked",
+                             samples_per_block=16, seed=0)
+        starts = rng.integers(0, n, walkers).astype(np.int64)
+        t = _time(lambda: ns.walk(starts, steps), repeats=3, warmup=1)
+        sps = walkers * steps / t
+        if base_sps is None:
+            base_sps = sps
+        cliff = base_sps / sps
+
+        wbs, w_blocks, s_eff = _sampler_ops.walk_layout(
+            ns.n, ns.block_size, ns.num_blocks, ns._cfg["s"])
+        cols = w_blocks * s_eff
+        evals_per_step = walkers * (cols + wbs)
+        # Operand traffic per step: the cached level-1 read, the exact
+        # level-2 stratum slab, and the grouped-CDF sum lanes.
+        bytes_per_step = walkers * (cols * d + wbs * d
+                                    + 4 * (w_blocks + wbs)) * fb
+        flops_per_step = 2.0 * walkers * (cols + wbs) * d
+        mr = _roofline.measured_roofline(t / steps, flops_per_step,
+                                         bytes_per_step, spec=spec)
+        rows.append(emit(
+            f"sampling/walk_scaling/n={n}", t / steps * 1e6,
+            f"steps_per_sec={sps:.0f};cliff_ratio={cliff:.2f};"
+            f"evals_per_step={evals_per_step};"
+            f"roofline_frac={mr.achieved_fraction:.3f}"))
+        entries.append(dict(
+            n=n, walkers=walkers, steps=steps, d=d,
+            steps_per_sec=sps, us_per_step=t / steps * 1e6,
+            cliff_ratio_vs_4096=cliff,
+            walk_layout=dict(block_size=wbs, num_blocks=w_blocks,
+                             samples_per_block=s_eff, cached_cols=cols),
+            kernel_evals_per_step=evals_per_step,
+            modeled_bytes_per_step=bytes_per_step,
+            modeled_flops_per_step=flops_per_step,
+            roofline=dict(fraction=mr.achieved_fraction,
+                          dominant=mr.dominant,
+                          achieved_bw=mr.achieved_bw)))
+    return dict(walkers=walkers, steps=steps, d=d, spec=spec.as_dict(),
+                entries=entries,
+                cliff_ratio_65536=next(
+                    (e["cliff_ratio_vs_4096"] for e in entries
+                     if e["n"] == 65536), None))
+
+
 def run(quick: bool = False):
     sizes = [4096] if quick else [4096, 16384, 65536]
     walkers = 256 if quick else 1024
@@ -179,9 +249,10 @@ def run(quick: bool = False):
             walk_speedup=speedup,
             sparsify_inner_sec=dict(fused=t_sp_new, seed_host_loop=t_sp_old),
             sparsify_inner_speedup=t_sp_old / t_sp_new))
+    scaling = _walk_scaling(quick, rows)
     _JSON_PATH.write_text(json.dumps(dict(
         benchmark="bench_sampling", backend=jax.default_backend(),
-        quick=quick, results=results), indent=2) + "\n")
+        quick=quick, results=results, scaling=scaling), indent=2) + "\n")
     return rows
 
 

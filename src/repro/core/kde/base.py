@@ -43,10 +43,27 @@ def _rowsum(pairwise, y, x):
     return jnp.sum(pairwise(y, x), axis=1)
 
 
-class KDEBase:
-    """Common interface: query(y: (m, d)) -> (m,) estimated row sums."""
+@functools.partial(jax.jit, static_argnames=("kind", "inv_bw", "beta", "bn"))
+def _bf16_rowsum(y, x, kind, inv_bw, beta, bn):
+    """bf16 level-1 sweep reduced to row sums: the blocked column-tile scan
+    of ``kv_block_sums_bf16`` (bf16 operand tiles, f32 accumulation) keeps
+    peak memory at O(m * n / bn) instead of the full (m, n) value matrix."""
+    from repro.kernels.kde_sampler.ref import kv_block_sums_bf16
+    return jnp.sum(kv_block_sums_bf16(y, x, kind, inv_bw, beta, bn=bn),
+                   axis=-1)
 
-    def __init__(self, x: jnp.ndarray, kernel: Kernel):
+
+class KDEBase:
+    """Common interface: query(y: (m, d)) -> (m,) estimated row sums.
+
+    ``precision`` (DESIGN.md §14) selects the dtype policy of the level-1
+    dataset sweeps: ``"f32"`` (default; bitwise-stable legacy path) or
+    ``"bf16"`` (rounded operand tiles, f32 accumulators).  Level-2 rows,
+    CDFs, and sampling probabilities always stay f32.
+    """
+
+    def __init__(self, x: jnp.ndarray, kernel: Kernel,
+                 precision: str = "f32"):
         self.x = jnp.asarray(x, jnp.float32)
         # ||x_j||^2, computed once and reused by every L2-kernel query
         # (the level-1/level-2 reads never recompute dataset norms).
@@ -55,6 +72,11 @@ class KDEBase:
         self.n = int(x.shape[0])
         self.d = int(x.shape[1])
         self.evals = 0  # number of kernel evaluations performed
+        self.precision = precision
+        if precision != "f32":
+            from repro.kernels.kde_sampler.ref import (check_precision,
+                                                       static_pairwise)
+            check_precision(precision, kernel.name, static_pairwise(kernel))
 
     def query(self, y: jnp.ndarray) -> jnp.ndarray:
         """(m, d) queries -> (m,) estimated row sums sum_j k(y_i, x_j)."""
@@ -69,8 +91,8 @@ class ExactKDE(KDEBase):
     """Brute-force oracle; the Pallas kernel computes this on TPU."""
 
     def __init__(self, x, kernel: Kernel, chunk: int = 8192,
-                 use_pallas: bool = False):
-        super().__init__(x, kernel)
+                 use_pallas: bool = False, precision: str = "f32"):
+        super().__init__(x, kernel, precision=precision)
         self.chunk = chunk
         self.use_pallas = use_pallas
 
@@ -80,7 +102,13 @@ class ExactKDE(KDEBase):
         self.evals += y.shape[0] * self.n
         if self.use_pallas:
             from repro.kernels.kde_rowsum import ops as rs_ops
-            return rs_ops.kde_rowsum(y, self.x, self.kernel)
+            return rs_ops.kde_rowsum(y, self.x, self.kernel,
+                                     precision=self.precision)
+        if self.precision != "f32":
+            return _bf16_rowsum(y, self.x, self.kernel.name,
+                                1.0 / self.kernel.bandwidth,
+                                getattr(self.kernel, "beta", 1.0),
+                                bn=min(self.chunk, 1024))
         out = jnp.zeros((y.shape[0],), jnp.float32)
         for lo in range(0, self.n, self.chunk):
             out = out + _rowsum(self.kernel.pairwise, y, self.x[lo:lo + self.chunk])
@@ -93,8 +121,9 @@ class RSKDE(KDEBase):
     ``num_samples = O(1/(tau * eps^2))`` per Section 3.1.
     """
 
-    def __init__(self, x, kernel: Kernel, num_samples: int, seed: int = 0):
-        super().__init__(x, kernel)
+    def __init__(self, x, kernel: Kernel, num_samples: int, seed: int = 0,
+                 precision: str = "f32"):
+        super().__init__(x, kernel, precision=precision)
         self.num_samples = min(int(num_samples), self.n)
         self._rng = np.random.default_rng(seed)
 
@@ -104,6 +133,12 @@ class RSKDE(KDEBase):
         idx = self._rng.integers(0, self.n, size=self.num_samples)
         self.evals += y.shape[0] * self.num_samples
         sub = self.x[jnp.asarray(idx)]
+        if self.precision != "f32":
+            return _bf16_rowsum(y, sub, self.kernel.name,
+                                1.0 / self.kernel.bandwidth,
+                                getattr(self.kernel, "beta", 1.0),
+                                bn=min(self.num_samples, 1024)) \
+                * (self.n / self.num_samples)
         return _rowsum(self.kernel.pairwise, y, sub) * (self.n / self.num_samples)
 
 
@@ -122,8 +157,9 @@ class StratifiedKDE(KDEBase):
     """
 
     def __init__(self, x, kernel: Kernel, block_size: int = 256,
-                 samples_per_block: int = 16, seed: int = 0):
-        super().__init__(x, kernel)
+                 samples_per_block: int = 16, seed: int = 0,
+                 precision: str = "f32"):
+        super().__init__(x, kernel, precision=precision)
         self.block_size = int(block_size)
         self.num_blocks = (self.n + self.block_size - 1) // self.block_size
         self.samples_per_block = min(int(samples_per_block), self.block_size)
@@ -143,7 +179,8 @@ class StratifiedKDE(KDEBase):
                     beta=getattr(self.kernel, "beta", 1.0),
                     pairwise=static_pairwise(self.kernel),
                     block_size=self.block_size,
-                    num_blocks=self.num_blocks, n=self.n)
+                    num_blocks=self.num_blocks, n=self.n,
+                    precision=self.precision)
 
     def block_sums(self, y: jnp.ndarray) -> jnp.ndarray:
         """(m, B) estimated per-block kernel sums -- the level-1 'tree' read."""
@@ -172,9 +209,9 @@ class ExactBlockKDE(StratifiedKDE):
     """
 
     def __init__(self, x, kernel: Kernel, block_size: int = 256,
-                 use_pallas: bool = False):
+                 use_pallas: bool = False, precision: str = "f32"):
         super().__init__(x, kernel, block_size=block_size,
-                         samples_per_block=block_size)
+                         samples_per_block=block_size, precision=precision)
         self.use_pallas = use_pallas
 
     def block_sums(self, y: jnp.ndarray) -> jnp.ndarray:
@@ -184,7 +221,8 @@ class ExactBlockKDE(StratifiedKDE):
         if self.use_pallas:
             from repro.kernels.kde_rowsum import ops as rs_ops
             return rs_ops.kde_blocksum(y, self.x, self.kernel,
-                                       bn=self.block_size)
+                                       bn=self.block_size,
+                                       precision=self.precision)
         from repro.kernels.kde_sampler import ops as sampler_ops
         return sampler_ops.exact_block_sums(y, self.x, self.x_sq,
                                             **self._static_cfg())
@@ -192,7 +230,10 @@ class ExactBlockKDE(StratifiedKDE):
 
 def make_estimator(name: str, x, kernel: Kernel, seed: int = 0,
                    tau: float = 0.05, eps: float = 0.5, **kw) -> KDEBase:
-    """Factory.  ``rs``/``stratified`` budgets default to O(1/(tau eps^2))."""
+    """Factory.  ``rs``/``stratified`` budgets default to O(1/(tau eps^2)).
+
+    All estimators accept ``precision="f32"|"bf16"`` (forwarded via ``kw``):
+    the level-1 sweep dtype policy of DESIGN.md §14."""
     if name == "exact":
         return ExactKDE(x, kernel, **kw)
     if name == "rs":

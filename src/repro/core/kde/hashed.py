@@ -42,10 +42,10 @@ class HashedKDE(KDEBase):
                  use_pallas: bool | None = None,
                  interpret: bool | None = None, mesh=None,
                  data_axes=("data",), dataset=None,
-                 overflow_cap: int | None = None):
+                 overflow_cap: int | None = None, precision: str = "f32"):
         if dataset is not None:
             x = dataset.x_pad      # engines build over the padded capacity
-        super().__init__(x, kernel)
+        super().__init__(x, kernel, precision=precision)
         from repro.kernels.kde_hash import ops as _ops
         self._ops = _ops
         self.num_far_samples = int(num_far_samples)
@@ -121,7 +121,8 @@ class HashedKDE(KDEBase):
                          cell_width=self.cell_width,
                          num_far=min(self.num_far_samples, self.n),
                          n=self.n, use_pallas=bool(use_pallas),
-                         interpret=bool(interpret))
+                         interpret=bool(interpret),
+                         precision=self.precision)
 
     def compact(self) -> None:
         """Fold the overflow region back into a fresh bucket layout at the

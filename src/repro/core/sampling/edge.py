@@ -91,7 +91,8 @@ class NeighborSampler:
                  seed: int = 0, use_pallas: Optional[bool] = None,
                  interpret: Optional[bool] = None, mesh=None,
                  data_axes=("data",), level1: str = "blocked",
-                 hash_opts: Optional[dict] = None, dataset=None):
+                 hash_opts: Optional[dict] = None, dataset=None,
+                 precision: str = "f32"):
         from repro.kernels.kde_sampler import ops as _ops
         self._ops = _ops
         # streaming attach (DESIGN.md §12): engines build over the padded
@@ -107,6 +108,18 @@ class NeighborSampler:
         self.n = int(x.shape[0])
         self.mode = mode
         self.level1 = level1
+        # level-1 sweep dtype policy (DESIGN.md §14); validated against the
+        # kernel kind up front so bad configs fail at construction.
+        self.precision = precision
+        if precision != "f32":
+            from repro.kernels.kde_sampler.ref import (check_precision,
+                                                       static_pairwise)
+            check_precision(precision, kernel.name, static_pairwise(kernel))
+            if mesh is not None:
+                raise ValueError(
+                    "precision='bf16' is single-device for now: the "
+                    "sharded one-psum schedule is pinned f32 (its jaxpr "
+                    "is contract-asserted; see DESIGN.md §14)")
         self._rng = np.random.default_rng(seed)
         self._key = jax.random.PRNGKey(seed)
         # or-fold of every program's status word + per-flag event counts
@@ -151,11 +164,12 @@ class NeighborSampler:
                     data_axes=data_axes, seed=seed)
                 self._engine = self._blocks.engine
             elif exact_blocks:
-                self._blocks = ExactBlockKDE(self.x, kernel, block_size=bs)
+                self._blocks = ExactBlockKDE(self.x, kernel, block_size=bs,
+                                             precision=precision)
             else:
                 self._blocks = StratifiedKDE(self.x, kernel, block_size=bs,
                                              samples_per_block=samples_per_block,
-                                             seed=seed)
+                                             seed=seed, precision=precision)
             # ONE device dataset + one precomputed-norms sweep, shared with
             # the block KDE structure (and, through ``blocks``, with any
             # degree sampler built on top of it -- DESIGN.md §6).
@@ -191,6 +205,7 @@ class NeighborSampler:
                                        use_pallas=bool(use_pallas),
                                        interpret=bool(interpret),
                                        dataset=dataset,
+                                       precision=precision,
                                        **hopts)
                 self._hstate = self._hash.state
             from repro.kernels.kde_sampler.ref import static_pairwise
@@ -204,7 +219,8 @@ class NeighborSampler:
                 exact=exact_blocks, use_pallas=bool(use_pallas),
                 interpret=bool(interpret),
                 bm=32 if level1 == "hash" else 128,
-                level1=level1, num_far=self._far_per_block)
+                level1=level1, num_far=self._far_per_block,
+                precision=precision)
             self._l2_cfg = {k: self._cfg[k] for k in
                             ("kind", "inv_bw", "beta", "pairwise",
                              "block_size", "n")}
@@ -662,7 +678,16 @@ class NeighborSampler:
                 hstate=self._hstate, rounds=rounds if exact else 0,
                 slack=slack, record_path=bool(record_path), **self._cfg)
         w = len(np.asarray(starts))
-        per_step = self._level1_evals(w) + w * self.block_size
+        # the walk-resident level-1 cache (kernels.tuning) caps the per-step
+        # level-1 read at B * s_eff cached columns on the jnp blocked path;
+        # mirror walk_scan's gate so the eval counter reports true cost
+        if (self.level1 == "blocked" and not self.exact_blocks
+                and not self._cfg["use_pallas"] and self._engine is None):
+            wbs, w_blocks, s_eff = self._ops.walk_layout(
+                self.n, self.block_size, self.num_blocks, self._cfg["s"])
+            per_step = w * w_blocks * s_eff + w * wbs
+        else:
+            per_step = self._level1_evals(w) + w * self.block_size
         if exact:
             per_step += rounds * (w * self.block_size + w)
         self._count(length * per_step)

@@ -608,7 +608,7 @@ class KernelGraphServable:
                     xa, tidx, y, hstate, keys, **hq._cfg)
             else:
                 qkeys = ("kind", "inv_bw", "beta", "pairwise", "block_size",
-                         "num_blocks", "n", "s", "exact")
+                         "num_blocks", "n", "s", "exact", "precision")
                 est, st = _ops.batched_kde_query(
                     xa, xa_sq, tidx, y, keys,
                     **{k: cfg[k] for k in qkeys})

@@ -25,13 +25,23 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.kde_hash import ref as _ref
+from repro.kernels.kde_rowsum.kernel import (exp_table_operand,
+                                             exp_table_spec, needs_exp_table)
 
 
-def _weighted_kv_kernel(q_ref, w_ref, xr_ref, o_ref, *, kind, inv_bw, beta,
-                        reduce_sum):
-    kv = _ref.rowwise_kv(q_ref[...], xr_ref[...], kind, inv_bw, beta)
+def _weighted_kv_kernel(q_ref, w_ref, xr_ref, *rest, kind, inv_bw, beta,
+                        reduce_sum, precision, has_table):
+    if has_table:
+        t_ref, o_ref = rest
+        table = t_ref[...]
+    else:
+        (o_ref,) = rest
+        table = None
+    kv = _ref.rowwise_kv(q_ref[...], xr_ref[...], kind, inv_bw, beta,
+                         precision=precision, table=table)
     kv = kv * w_ref[...]
     if reduce_sum:
         o_ref[...] = jnp.sum(kv, axis=1)
@@ -39,42 +49,56 @@ def _weighted_kv_kernel(q_ref, w_ref, xr_ref, o_ref, *, kind, inv_bw, beta,
         o_ref[...] = kv
 
 
-def _call(q, wgt, xr, kind, inv_bw, beta, bm, interpret, reduce_sum):
+def _call(q, wgt, xr, kind, inv_bw, beta, bm, interpret, reduce_sum,
+          precision="f32"):
     m, d = q.shape
     t = xr.shape[1]
+    has_table = needs_exp_table(kind, precision)
     body = functools.partial(_weighted_kv_kernel, kind=kind, inv_bw=inv_bw,
-                             beta=beta, reduce_sum=reduce_sum)
+                             beta=beta, reduce_sum=reduce_sum,
+                             precision=precision, has_table=has_table)
     if reduce_sum:
         out_specs = pl.BlockSpec((bm,), lambda i: (i,))
         out_shape = jax.ShapeDtypeStruct((m,), jnp.float32)
     else:
         out_specs = pl.BlockSpec((bm, t), lambda i: (i, 0))
         out_shape = jax.ShapeDtypeStruct((m, t), jnp.float32)
+    in_specs = [pl.BlockSpec((bm, d), lambda i: (i, 0)),
+                pl.BlockSpec((bm, t), lambda i: (i, 0)),
+                pl.BlockSpec((bm, t, d), lambda i: (i, 0, 0))]
+    operands = [q, wgt, xr]
+    if has_table:
+        in_specs.append(exp_table_spec(lambda i: (0,)))
+        operands.append(exp_table_operand())
     return pl.pallas_call(
         body,
         grid=(m // bm,),
-        in_specs=[pl.BlockSpec((bm, d), lambda i: (i, 0)),
-                  pl.BlockSpec((bm, t), lambda i: (i, 0)),
-                  pl.BlockSpec((bm, t, d), lambda i: (i, 0, 0))],
+        in_specs=in_specs,
         out_specs=out_specs,
         out_shape=out_shape,
+        # one output tile per query tile, no cross-step state: the single
+        # grid axis pipelines with double-buffered gather-row copies
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel",)),
         interpret=interpret,
-    )(q, wgt, xr)
+    )(*operands)
 
 
 def weighted_kv_sum_pallas(q: jnp.ndarray, wgt: jnp.ndarray, xr: jnp.ndarray,
                            kind: str, inv_bw: float, beta: float = 1.0,
-                           bm: int = 32, interpret: bool = False):
+                           bm: int = 32, interpret: bool = False,
+                           precision: str = "f32"):
     """q (m, d), wgt (m, t), xr (m, t, d) -> (m,) weighted kernel-value
     sums ``sum_j wgt_ij k(q_i, xr_ij)``; m must be a multiple of bm."""
     return _call(q, wgt, xr, kind, inv_bw, beta, bm, interpret,
-                 reduce_sum=True)
+                 reduce_sum=True, precision=precision)
 
 
 def weighted_kv_pallas(q: jnp.ndarray, wgt: jnp.ndarray, xr: jnp.ndarray,
                        kind: str, inv_bw: float, beta: float = 1.0,
-                       bm: int = 32, interpret: bool = False):
+                       bm: int = 32, interpret: bool = False,
+                       precision: str = "f32"):
     """q (m, d), wgt (m, t), xr (m, t, d) -> (m, t) weighted kernel values
     (the level-1 scatter input); m must be a multiple of bm."""
     return _call(q, wgt, xr, kind, inv_bw, beta, bm, interpret,
-                 reduce_sum=False)
+                 reduce_sum=False, precision=precision)

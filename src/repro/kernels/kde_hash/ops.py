@@ -38,7 +38,11 @@ TRACE_COUNTS = _sops.TRACE_COUNTS
 
 _STATIC = frozenset((
     "kind", "inv_bw", "beta", "pairwise", "cell_width", "num_far", "n",
-    "block_size", "num_blocks", "use_pallas", "interpret", "bm"))
+    "block_size", "num_blocks", "use_pallas", "interpret", "bm",
+    # precision selects the weighted-pass eval dtype (DESIGN.md §14):
+    # "f32" (default, bitwise-stable) or "bf16" (rounded operand rows,
+    # f32 weights/accumulators/scatters)
+    "precision"))
 
 
 def _jit(fn):
@@ -153,7 +157,7 @@ def build_hash_state(x, kernel, cell_width: float | None = None,
 
 
 def _weighted_pass(q, xr, wgt, *, kind, inv_bw, beta, pairwise, use_pallas,
-                   interpret, bm, reduce_sum):
+                   interpret, bm, reduce_sum, precision="f32"):
     """One weighted kernel-value pass: Pallas bucket kernel on the TPU
     path (padded to a ``bm`` query multiple), the shared ``ref.rowwise_kv``
     math elsewhere -- bitwise-identical results in interpret mode."""
@@ -167,15 +171,16 @@ def _weighted_pass(q, xr, wgt, *, kind, inv_bw, beta, pairwise, use_pallas,
         fn = (_k.weighted_kv_sum_pallas if reduce_sum
               else _k.weighted_kv_pallas)
         return fn(q, wgt, xr, kind, inv_bw, beta, bm=bm,
-                  interpret=interpret)[:m]
-    kv = _ref.rowwise_kv(q, xr, kind, inv_bw, beta, pairwise) * wgt
+                  interpret=interpret, precision=precision)[:m]
+    kv = _ref.rowwise_kv(q, xr, kind, inv_bw, beta, pairwise,
+                         precision=precision) * wgt
     return jnp.sum(kv, axis=1) if reduce_sum else kv
 
 
 @_jit
 def hashed_query(x, y, state, key, *, kind, inv_bw, beta, pairwise,
                  cell_width, num_far, n, use_pallas=False, interpret=False,
-                 bm=32):
+                 bm=32, precision="f32"):
     """(m,) row-sum estimates + (m,) realized NEAR eval counts + a status
     bitmask -- the Definition 1.1 read at O(max_bucket + num_far) evals
     per query.  The status flags bucket truncation, out-of-range member
@@ -191,13 +196,15 @@ def hashed_query(x, y, state, key, *, kind, inv_bw, beta, pairwise,
     if use_pallas and kind in BUILTIN_KINDS:
         est = _weighted_pass(y, xr, wgt, kind=kind, inv_bw=inv_bw, beta=beta,
                              pairwise=pairwise, use_pallas=use_pallas,
-                             interpret=interpret, bm=bm, reduce_sum=True)
+                             interpret=interpret, bm=bm, reduce_sum=True,
+                             precision=precision)
         heavy = jnp.asarray(num_far > 0
                             and float(n) / num_far > _g.ht_bound())
     else:
         kv = _weighted_pass(y, xr, wgt, kind=kind, inv_bw=inv_bw, beta=beta,
                             pairwise=pairwise, use_pallas=use_pallas,
-                            interpret=interpret, bm=bm, reduce_sum=False)
+                            interpret=interpret, bm=bm, reduce_sum=False,
+                            precision=precision)
         est = jnp.sum(kv, axis=1)
         far = kv[:, _ref.num_exact_cols(state):]
         heavy = (jnp.any(far > _g.ht_frac()
@@ -212,7 +219,7 @@ def hashed_query(x, y, state, key, *, kind, inv_bw, beta, pairwise,
 
 def _hashed_block_sums(x, src, state, key, *, kind, inv_bw, beta, pairwise,
                        num_far, block_size, num_blocks, n, use_pallas,
-                       interpret, bm):
+                       interpret, bm, precision="f32"):
     """Traceable core of ``hashed_block_sums`` (called from inside the
     fused sampler programs of ``kde_sampler.ops``).  Returns
     ``(block sums, status)``."""
@@ -222,7 +229,8 @@ def _hashed_block_sums(x, src, state, key, *, kind, inv_bw, beta, pairwise,
                                                    num_blocks, n)
     kv = _weighted_pass(q, xr, wgt, kind=kind, inv_bw=inv_bw, beta=beta,
                         pairwise=pairwise, use_pallas=use_pallas,
-                        interpret=interpret, bm=bm, reduce_sum=False)
+                        interpret=interpret, bm=bm, reduce_sum=False,
+                        precision=precision)
     bs = _ref.scatter_block_sums(kv, cols, src, state, num_far,
                                  block_size, num_blocks)
     st = _g.merge(_g.flag_if(jnp.any((cols < 0) | (cols >= n)),
@@ -235,7 +243,7 @@ def _hashed_block_sums(x, src, state, key, *, kind, inv_bw, beta, pairwise,
 @_jit
 def hashed_block_sums(x, src, state, key, *, kind, inv_bw, beta, pairwise,
                       num_far, block_size, num_blocks, n, use_pallas=False,
-                      interpret=False, bm=32):
+                      interpret=False, bm=32, precision="f32"):
     """(w, B) §2-contract level-1 estimates of a dataset frontier from
     O(max_bucket + B num_far) evals per row: exact NEAR scatter +
     ``num_far`` stratified FAR slots per block (the ``level1="hash"``
@@ -245,7 +253,7 @@ def hashed_block_sums(x, src, state, key, *, kind, inv_bw, beta, pairwise,
                               beta=beta, pairwise=pairwise, num_far=num_far,
                               block_size=block_size, num_blocks=num_blocks,
                               n=n, use_pallas=use_pallas, interpret=interpret,
-                              bm=bm)
+                              bm=bm, precision=precision)
 
 
 # --------------------------------------------------------------------- #
@@ -277,7 +285,7 @@ def stack_hash_states(states):
 @_jit
 def batched_hashed_query(xa, tidx, y, state, keys, *, kind, inv_bw, beta,
                          pairwise, cell_width, num_far, n, use_pallas=False,
-                         interpret=False, bm=32):
+                         interpret=False, bm=32, precision="f32"):
     """R hashed Definition 1.1 query requests across stacked tenants in
     ONE program: ``xa (T, n, d)`` stacked tenant rows, ``state`` a
     :func:`stack_hash_states` pytree, ``y (R, q, d)`` padded query points,
@@ -293,7 +301,7 @@ def batched_hashed_query(xa, tidx, y, state, keys, *, kind, inv_bw, beta,
                             inv_bw=inv_bw, beta=beta, pairwise=pairwise,
                             cell_width=cell_width, num_far=num_far, n=n,
                             use_pallas=use_pallas, interpret=interpret,
-                            bm=bm)
+                            bm=bm, precision=precision)
 
     return jax.vmap(one)(tidx, y, keys)
 

@@ -29,7 +29,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.kde_sampler.ref import (BLOCK_SUM_FLOOR, _L2_KINDS,
-                                           _finish_l2)
+                                           _finish_l2, _finish_l2_bf16,
+                                           check_precision)
 
 # Knuth's 2^32 golden-ratio multiplier; uint32 multiply-add wraps
 # identically in numpy (host build) and jnp (device query hashing).
@@ -84,11 +85,20 @@ def query_codes(y, dims, shift, cell_width: float) -> jnp.ndarray:
     return jnp.floor((yh + shift[None, :]) / cell_width).astype(jnp.int32)
 
 
-def rowwise_kv(q, xr, kind: str, inv_bw: float, beta: float, pairwise=None):
+def rowwise_kv(q, xr, kind: str, inv_bw: float, beta: float, pairwise=None,
+               precision: str = "f32", table=None):
     """Per-row kernel values k(q_i, xr_i_j): q (w, d), xr (w, t, d) ->
     (w, t), accumulated over a static d-loop.  This exact function runs
     inside the Pallas kernel body AND in the jnp oracles, so compiled
-    (interpret) and oracle values agree bitwise."""
+    (interpret) and oracle values agree bitwise.
+
+    ``precision="bf16"`` rounds both operand rows to bf16 (DESIGN.md §14)
+    and runs the identical f32-accumulated d-loop on the rounded values;
+    the HT weights applied downstream stay f32."""
+    if precision != "f32":
+        check_precision(precision, kind, pairwise)
+        q = q.astype(jnp.bfloat16).astype(jnp.float32)
+        xr = xr.astype(jnp.bfloat16).astype(jnp.float32)
     if kind in _L2_KINDS:
         d = q.shape[-1]
         cross = jnp.zeros(xr.shape[:2], jnp.float32)
@@ -100,6 +110,8 @@ def rowwise_kv(q, xr, kind: str, inv_bw: float, beta: float, pairwise=None):
             xx = xx + c * c
             qq = qq + q[:, k] * q[:, k]
         d2 = jnp.maximum(qq[:, None] + xx - 2.0 * cross, 0.0)
+        if precision != "f32":
+            return _finish_l2_bf16(d2, kind, inv_bw, beta, table)
         return _finish_l2(d2, kind, inv_bw, beta)
     if kind == "laplacian":
         d = q.shape[-1]

@@ -12,6 +12,18 @@ with a (bm, bn) accumulator resident in VMEM.
 
 Block sizes default to MXU-aligned 128 lanes; the row accumulator lives in a
 VMEM scratch and is flushed on the last j-step (revisiting output pattern).
+Both grids carry ``dimension_semantics`` so the Mosaic pipeliner
+double-buffers the HBM->VMEM tile copies: the query axis is "parallel"
+everywhere; the x-block axis is "arbitrary" for the rowsum (its VMEM
+accumulator is a cross-j carry) and "parallel" for the blocksum (each cell
+owns its output block).
+
+``precision="bf16"`` (DESIGN.md §14) rounds both operand tiles to bf16 --
+halving the staged bytes, which is what a bandwidth-bound sweep buys from
+mixed precision -- while the distance accumulation (MXU ``preferred_element_
+type``), the kernel transform, and every downstream sum stay f32.  The norm
+terms are recomputed in f32 from the *rounded* coordinates so the bf16 path
+is a pure function of the bf16 operands (bitwise-matched by the jnp refs).
 """
 from __future__ import annotations
 
@@ -22,12 +34,47 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.kde_sampler.ref import (_finish_l2_bf16, bf16_exp_table,
+                                           check_precision)
+
 _L2_KINDS = ("gaussian", "exponential", "rational_quadratic")
+_EXP_KINDS = ("gaussian", "exponential")
+
+
+def needs_exp_table(kind: str, precision: str) -> bool:
+    """True when the bf16 finisher gathers from the exp table -- Pallas
+    callers must then stream the table in as an input (a closed-over
+    numpy constant is rejected by ``pallas_call``)."""
+    return precision != "f32" and kind in _EXP_KINDS
+
+
+def exp_table_operand() -> jnp.ndarray:
+    """The (65536,) f32 exp table as a device operand for Pallas calls."""
+    return jnp.asarray(bf16_exp_table())
+
+
+def exp_table_spec(index_map) -> pl.BlockSpec:
+    """Whole-table BlockSpec with a constant index map, so the pipeliner
+    keeps one resident copy instead of restaging it per grid step."""
+    return pl.BlockSpec((65536,), index_map)
 
 
 def _tile_kernel_values(q, x, kind: str, inv_bw: float, beta: float,
-                        d_chunk: int = 128):
+                        d_chunk: int = 128, precision: str = "f32",
+                        table=None):
     """(bm, bn) kernel values for one (q-tile, x-tile) pair."""
+    if precision != "f32":
+        check_precision(precision, kind, None)
+        qb = q.astype(jnp.bfloat16)
+        xb = x.astype(jnp.bfloat16)
+        qf = qb.astype(jnp.float32)
+        xf = xb.astype(jnp.float32)
+        qq = jnp.sum(qf * qf, axis=1, keepdims=True)
+        xx = jnp.sum(xf * xf, axis=1, keepdims=True).T
+        cross = jax.lax.dot_general(qb, xb, (((1,), (1,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+        d2 = jnp.maximum(qq + xx - 2.0 * cross, 0.0)
+        return _finish_l2_bf16(d2, kind, inv_bw, beta, table)
     if kind in _L2_KINDS:
         qq = jnp.sum(q * q, axis=1, keepdims=True)
         xx = jnp.sum(x * x, axis=1, keepdims=True).T
@@ -51,14 +98,22 @@ def _tile_kernel_values(q, x, kind: str, inv_bw: float, beta: float,
     return jnp.exp(-acc * inv_bw)
 
 
-def _rowsum_kernel(q_ref, x_ref, o_ref, acc_ref, *, kind, inv_bw, beta):
+def _rowsum_kernel(q_ref, x_ref, *rest, kind, inv_bw, beta, precision,
+                   has_table):
+    if has_table:
+        t_ref, o_ref, acc_ref = rest
+        table = t_ref[...]
+    else:
+        o_ref, acc_ref = rest
+        table = None
     j = pl.program_id(1)
 
     @pl.when(j == 0)
     def _():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    kv = _tile_kernel_values(q_ref[...], x_ref[...], kind, inv_bw, beta)
+    kv = _tile_kernel_values(q_ref[...], x_ref[...], kind, inv_bw, beta,
+                             precision=precision, table=table)
     acc_ref[...] += jnp.sum(kv, axis=1)
 
     @pl.when(j == pl.num_programs(1) - 1)
@@ -66,46 +121,78 @@ def _rowsum_kernel(q_ref, x_ref, o_ref, acc_ref, *, kind, inv_bw, beta):
         o_ref[...] = acc_ref[...]
 
 
-def _blocksum_kernel(q_ref, x_ref, o_ref, *, kind, inv_bw, beta):
-    kv = _tile_kernel_values(q_ref[...], x_ref[...], kind, inv_bw, beta)
+def _blocksum_kernel(q_ref, x_ref, *rest, kind, inv_bw, beta, precision,
+                     has_table):
+    if has_table:
+        t_ref, o_ref = rest
+        table = t_ref[...]
+    else:
+        (o_ref,) = rest
+        table = None
+    kv = _tile_kernel_values(q_ref[...], x_ref[...], kind, inv_bw, beta,
+                             precision=precision, table=table)
     o_ref[...] = jnp.sum(kv, axis=1, keepdims=True)
 
 
 def rowsum_pallas(q: jnp.ndarray, x: jnp.ndarray, kind: str, inv_bw: float,
                   beta: float = 1.0, bm: int = 128, bn: int = 512,
-                  interpret: bool = False) -> jnp.ndarray:
+                  interpret: bool = False,
+                  precision: str = "f32") -> jnp.ndarray:
     """q (m, d), x (n, d) -> (m,); m, n must be multiples of bm, bn."""
     m, d = q.shape
     n = x.shape[0]
+    has_table = needs_exp_table(kind, precision)
     body = functools.partial(_rowsum_kernel, kind=kind, inv_bw=inv_bw,
-                             beta=beta)
+                             beta=beta, precision=precision,
+                             has_table=has_table)
+    in_specs = [pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
+                pl.BlockSpec((bn, d), lambda i, j: (j, 0))]
+    operands = [q, x]
+    if has_table:
+        in_specs.append(exp_table_spec(lambda i, j: (0,)))
+        operands.append(exp_table_operand())
     return pl.pallas_call(
         body,
         grid=(m // bm, n // bn),
-        in_specs=[pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
-                  pl.BlockSpec((bn, d), lambda i, j: (j, 0))],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm,), lambda i, j: (i,)),
         out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bm,), jnp.float32)],
+        # the row accumulator is a cross-j VMEM carry, so the x-block axis
+        # must stay sequential; query tiles double-buffer in parallel
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
-    )(q, x)
+    )(*operands)
 
 
 def blocksum_pallas(q: jnp.ndarray, x: jnp.ndarray, kind: str, inv_bw: float,
                     beta: float = 1.0, bm: int = 128, bn: int = 256,
-                    interpret: bool = False) -> jnp.ndarray:
+                    interpret: bool = False,
+                    precision: str = "f32") -> jnp.ndarray:
     """q (m, d), x (n, d) -> (m, n/bn) per-block sums (level-1 read)."""
     m, d = q.shape
     n = x.shape[0]
     nb = n // bn
+    has_table = needs_exp_table(kind, precision)
     body = functools.partial(_blocksum_kernel, kind=kind, inv_bw=inv_bw,
-                             beta=beta)
+                             beta=beta, precision=precision,
+                             has_table=has_table)
+    in_specs = [pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
+                pl.BlockSpec((bn, d), lambda i, j: (j, 0))]
+    operands = [q, x]
+    if has_table:
+        in_specs.append(exp_table_spec(lambda i, j: (0,)))
+        operands.append(exp_table_operand())
     return pl.pallas_call(
         body,
         grid=(m // bm, nb),
-        in_specs=[pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
-                  pl.BlockSpec((bn, d), lambda i, j: (j, 0))],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, 1), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, nb), jnp.float32),
+        # no cross-step state: every (i, j) cell writes its own output
+        # block, so both axes pipeline with double-buffered tile copies
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
-    )(q, x)
+    )(*operands)

@@ -3,8 +3,27 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.kernels.kde_sampler.ref import _finish_l2_bf16, check_precision
 
-def kernel_values(q, x, kind: str, inv_bw: float, beta: float = 1.0):
+
+def kernel_values(q, x, kind: str, inv_bw: float, beta: float = 1.0,
+                  precision: str = "f32"):
+    if precision != "f32":
+        # bf16 operand rounding + f32 norms from the rounded coordinates:
+        # the same contract as the Pallas tile path (DESIGN.md §14).  Note
+        # the single whole-array dot here accumulates in a different order
+        # than the (bm, bn) tile decomposition, so THIS ref is the
+        # tolerance oracle; bitwise parity tests mirror the tile loop.
+        check_precision(precision, kind, None)
+        qb = q.astype(jnp.bfloat16)
+        xb = x.astype(jnp.bfloat16)
+        qf = qb.astype(jnp.float32)
+        xf = xb.astype(jnp.float32)
+        qq = jnp.sum(qf * qf, axis=1, keepdims=True)
+        xx = jnp.sum(xf * xf, axis=1, keepdims=True).T
+        cross = jnp.matmul(qb, xb.T, preferred_element_type=jnp.float32)
+        d2 = jnp.maximum(qq + xx - 2.0 * cross, 0.0)
+        return _finish_l2_bf16(d2, kind, inv_bw, beta)
     if kind == "laplacian":
         d1 = jnp.sum(jnp.abs(q[:, None, :] - x[None, :, :]), axis=-1)
         return jnp.exp(-d1 * inv_bw)
@@ -20,12 +39,13 @@ def kernel_values(q, x, kind: str, inv_bw: float, beta: float = 1.0):
     raise ValueError(kind)
 
 
-def rowsum_ref(q, x, kind: str, inv_bw: float, beta: float = 1.0):
-    return jnp.sum(kernel_values(q, x, kind, inv_bw, beta), axis=1)
+def rowsum_ref(q, x, kind: str, inv_bw: float, beta: float = 1.0,
+               precision: str = "f32"):
+    return jnp.sum(kernel_values(q, x, kind, inv_bw, beta, precision), axis=1)
 
 
 def blocksum_ref(q, x, kind: str, inv_bw: float, beta: float = 1.0,
-                 bn: int = 256):
-    kv = kernel_values(q, x, kind, inv_bw, beta)
+                 bn: int = 256, precision: str = "f32"):
+    kv = kernel_values(q, x, kind, inv_bw, beta, precision)
     m, n = kv.shape
     return kv.reshape(m, n // bn, bn).sum(-1)

@@ -22,15 +22,23 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.kde_rowsum.kernel import _tile_kernel_values
+from repro.kernels.kde_rowsum.kernel import (_tile_kernel_values,
+                                             exp_table_operand,
+                                             exp_table_spec, needs_exp_table)
 
 _FLOOR = 1e-12  # == ref.BLOCK_SUM_FLOOR
 
 
-def _sample_block_kernel(q_ref, own_ref, g_ref, x_ref,
-                         blk_ref, pb_ref, tot_ref, bs_ref,
-                         max_ref, arg_ref, best_ref, acc_ref,
-                         *, kind, inv_bw, beta):
+def _sample_block_kernel(q_ref, own_ref, g_ref, x_ref, *rest,
+                         kind, inv_bw, beta, precision, has_table):
+    if has_table:
+        t_ref = rest[0]
+        rest = rest[1:]
+        table = t_ref[...]
+    else:
+        table = None
+    (blk_ref, pb_ref, tot_ref, bs_ref,
+     max_ref, arg_ref, best_ref, acc_ref) = rest
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -40,7 +48,8 @@ def _sample_block_kernel(q_ref, own_ref, g_ref, x_ref,
         best_ref[...] = jnp.zeros_like(best_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    kv = _tile_kernel_values(q_ref[...], x_ref[...], kind, inv_bw, beta)
+    kv = _tile_kernel_values(q_ref[...], x_ref[...], kind, inv_bw, beta,
+                             precision=precision, table=table)
     s = jnp.sum(kv, axis=1)                         # (bm,) this block's sums
     own = own_ref[...][:, 0]
     s = jnp.where(own == j, s - 1.0, s)             # k(x, x) = 1 self mask
@@ -61,10 +70,17 @@ def _sample_block_kernel(q_ref, own_ref, g_ref, x_ref,
         pb_ref[...] = best_ref[...] / acc_ref[...]
 
 
-def _masked_blocksum_kernel(q_ref, own_ref, x_ref, bs_ref, *, kind, inv_bw,
-                            beta):
+def _masked_blocksum_kernel(q_ref, own_ref, x_ref, *rest, kind, inv_bw,
+                            beta, precision, has_table):
+    if has_table:
+        t_ref, bs_ref = rest
+        table = t_ref[...]
+    else:
+        (bs_ref,) = rest
+        table = None
     j = pl.program_id(1)
-    kv = _tile_kernel_values(q_ref[...], x_ref[...], kind, inv_bw, beta)
+    kv = _tile_kernel_values(q_ref[...], x_ref[...], kind, inv_bw, beta,
+                             precision=precision, table=table)
     s = jnp.sum(kv, axis=1)
     own = own_ref[...][:, 0]
     s = jnp.where(own == j, s - 1.0, s)             # k(x, x) = 1 self mask
@@ -74,7 +90,8 @@ def _masked_blocksum_kernel(q_ref, own_ref, x_ref, bs_ref, *, kind, inv_bw,
 def masked_blocksum_pallas(q: jnp.ndarray, x: jnp.ndarray, own: jnp.ndarray,
                            kind: str, inv_bw: float, beta: float = 1.0,
                            bm: int = 128, bn: int = 256,
-                           interpret: bool = False) -> jnp.ndarray:
+                           interpret: bool = False,
+                           precision: str = "f32") -> jnp.ndarray:
     """Masked level-1 block sums WITHOUT the in-pass block draw: the reverse
     probability read of the fused Algorithm 5.1 edge op (the sparsifier
     evaluates q(u | v) for already-drawn edges, so no Gumbel state is
@@ -84,39 +101,57 @@ def masked_blocksum_pallas(q: jnp.ndarray, x: jnp.ndarray, own: jnp.ndarray,
     m, d = q.shape
     n = x.shape[0]
     nb = n // bn
+    has_table = needs_exp_table(kind, precision)
     body = functools.partial(_masked_blocksum_kernel, kind=kind,
-                             inv_bw=inv_bw, beta=beta)
+                             inv_bw=inv_bw, beta=beta, precision=precision,
+                             has_table=has_table)
+    in_specs = [pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
+                pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),
+                pl.BlockSpec((bn, d), lambda i, j: (j, 0))]
+    operands = [q, own, x]
+    if has_table:
+        in_specs.append(exp_table_spec(lambda i, j: (0,)))
+        operands.append(exp_table_operand())
     return pl.pallas_call(
         body,
         grid=(m // bm, nb),
-        in_specs=[pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
-                  pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),
-                  pl.BlockSpec((bn, d), lambda i, j: (j, 0))],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, 1), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, nb), jnp.float32),
+        # every (i, j) cell writes its own output block -- both grid axes
+        # are revisit-free, so the pipeline double-buffers freely
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
-    )(q, own, x)
+    )(*operands)
 
 
 def sample_block_pallas(q: jnp.ndarray, x: jnp.ndarray, own: jnp.ndarray,
                         gumbel: jnp.ndarray, kind: str, inv_bw: float,
                         beta: float = 1.0, bm: int = 128, bn: int = 256,
-                        interpret: bool = False):
+                        interpret: bool = False, precision: str = "f32"):
     """q (m, d), x (n, d), own (m, 1) int32, gumbel (m, n/bn) ->
     (blk (m,) int32, p_blk (m,), tot (m,), block_sums (m, n/bn)).
     m, n must be multiples of bm, bn; padded queries use own = -1."""
     m, d = q.shape
     n = x.shape[0]
     nb = n // bn
+    has_table = needs_exp_table(kind, precision)
     body = functools.partial(_sample_block_kernel, kind=kind, inv_bw=inv_bw,
-                             beta=beta)
+                             beta=beta, precision=precision,
+                             has_table=has_table)
+    in_specs = [pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
+                pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),
+                pl.BlockSpec((bm, 1), lambda i, j: (i, j)),
+                pl.BlockSpec((bn, d), lambda i, j: (j, 0))]
+    operands = [q, own, gumbel, x]
+    if has_table:
+        in_specs.append(exp_table_spec(lambda i, j: (0,)))
+        operands.append(exp_table_operand())
     return pl.pallas_call(
         body,
         grid=(m // bm, nb),
-        in_specs=[pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
-                  pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),
-                  pl.BlockSpec((bm, 1), lambda i, j: (i, j)),
-                  pl.BlockSpec((bn, d), lambda i, j: (j, 0))],
+        in_specs=in_specs,
         out_specs=[pl.BlockSpec((bm,), lambda i, j: (i,)),
                    pl.BlockSpec((bm,), lambda i, j: (i,)),
                    pl.BlockSpec((bm,), lambda i, j: (i,)),
@@ -129,5 +164,9 @@ def sample_block_pallas(q: jnp.ndarray, x: jnp.ndarray, own: jnp.ndarray,
                         pltpu.VMEM((bm,), jnp.int32),
                         pltpu.VMEM((bm,), jnp.float32),
                         pltpu.VMEM((bm,), jnp.float32)],
+        # the Gumbel argmax carries VMEM state across j, so the x-block
+        # axis is "arbitrary" (sequential revisit); query tiles pipeline
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
-    )(q, own, gumbel, x)
+    )(*operands)

@@ -52,6 +52,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.ft import guards as _g
+from repro.kernels import tuning as _tuning
 from repro.kernels.kde_rowsum.ops import _PAD_OFFSET, _pad_rows
 from repro.kernels.kde_sampler import kernel as _k
 from repro.kernels.kde_sampler import ref as _ref
@@ -63,10 +64,14 @@ TRACE_COUNTS = collections.Counter()
 # structure) or "hash" (the kde_hash padded-bucket estimator, whose
 # ``HashState`` arrays ride along as the ``hstate`` operand pytree and
 # whose FAR budget is the ``num_far`` static -- DESIGN.md §10).
+# ``precision`` selects the level-1 eval dtype policy (DESIGN.md §14):
+# "f32" (default, bitwise-stable) or "bf16" (rounded operand tiles, f32
+# accumulators/CDFs; level-2 rows and pairwise corrections stay f32).
 _STATIC = frozenset((
     "kind", "inv_bw", "beta", "pairwise", "block_size", "num_blocks",
     "n", "s", "exact", "use_pallas", "interpret", "bm", "rounds", "slack",
-    "batch", "record_path", "iters", "num_samples", "level1", "num_far"))
+    "batch", "record_path", "iters", "num_samples", "level1", "num_far",
+    "precision"))
 
 
 def _jit(fn):
@@ -84,12 +89,14 @@ def default_use_pallas() -> bool:
 # --------------------------------------------------------------------- #
 @_jit
 def stratified_block_sums(y, x, x_sq, key, *, kind, inv_bw, beta, pairwise,
-                          block_size, num_blocks, n, s):
+                          block_size, num_blocks, n, s, precision="f32"):
     """Per-block uniform-subsample estimates of the block sums, (m, B).
 
     Each block contributes ``size_b / s_b * sum(sampled kernel values)``
     where ``s_b = min(s, size_b)`` counts only *real* (non-padded) samples:
-    the tail block is no longer inflated by duplicated pad indices.
+    the tail block is no longer inflated by duplicated pad indices.  The
+    subsample *draw* is precision-independent; only the gathered kernel
+    evals honor ``precision``.
     """
     TRACE_COUNTS["stratified_block_sums"] += 1
     m = y.shape[0]
@@ -103,7 +110,7 @@ def stratified_block_sums(y, x, x_sq, key, *, kind, inv_bw, beta, pairwise,
         _, order = jax.lax.top_k(-u, s)           # (B, s) w/o replacement
         flat = (base[:, None] + order).reshape(-1)
         kv = _ref.kv_matrix(y, x[flat], x_sq[flat], kind, inv_bw, beta,
-                            pairwise)
+                            pairwise, precision=precision)
         return kv.reshape(m, num_blocks, s).sum(-1) * (block_size / float(s))
     pos = base[:, None] + jnp.arange(block_size, dtype=jnp.int32)[None, :]
     valid_pos = pos < n
@@ -113,7 +120,8 @@ def stratified_block_sums(y, x, x_sq, key, *, kind, inv_bw, beta, pairwise,
     sel_valid = jnp.take_along_axis(valid_pos, order, axis=1)
     idx = jnp.minimum(idx, n - 1)
     flat = idx.reshape(-1)
-    kv = _ref.kv_matrix(y, x[flat], x_sq[flat], kind, inv_bw, beta, pairwise)
+    kv = _ref.kv_matrix(y, x[flat], x_sq[flat], kind, inv_bw, beta, pairwise,
+                        precision=precision)
     kv = kv.reshape(m, num_blocks, s) * sel_valid[None]
     sizes = jnp.minimum(n - base, block_size).astype(jnp.float32)
     s_b = jnp.minimum(sizes, float(s))
@@ -122,9 +130,15 @@ def stratified_block_sums(y, x, x_sq, key, *, kind, inv_bw, beta, pairwise,
 
 @_jit
 def exact_block_sums(y, x, x_sq, *, kind, inv_bw, beta, pairwise,
-                     block_size, num_blocks, n):
-    """Exact (m, B) block sums: one dense vectorized sweep, zero host loops."""
+                     block_size, num_blocks, n, precision="f32"):
+    """Exact (m, B) block sums: one dense vectorized sweep, zero host loops.
+    The bf16 policy swaps in the blocked column-tile scan (f32 accumulator,
+    O(m * tile) peak memory) instead of materializing the (m, n) matrix."""
     TRACE_COUNTS["exact_block_sums"] += 1
+    if precision == "bf16":
+        _ref.check_precision(precision, kind, pairwise)
+        return _ref.kv_block_sums_bf16(y, x, kind, inv_bw, beta,
+                                       bn=block_size)
     m = y.shape[0]
     kv = _ref.kv_matrix(y, x, x_sq, kind, inv_bw, beta, pairwise)
     pad = num_blocks * block_size - n
@@ -146,19 +160,20 @@ def _pallas_pad(x, src, bm, block_size):
 
 
 def _masked_block_sums(x, x_sq, src, key, *, kind, inv_bw, beta, pairwise,
-                       block_size, num_blocks, n, s, exact):
+                       block_size, num_blocks, n, s, exact, precision="f32"):
     """Level-1 sums for a frontier of dataset indices, own-block corrected
     (k(x, x) = 1 subtracted) and floored -- the cacheable object."""
     q = x[src]
     if exact:
         bs = exact_block_sums(q, x, x_sq, kind=kind, inv_bw=inv_bw, beta=beta,
                               pairwise=pairwise, block_size=block_size,
-                              num_blocks=num_blocks, n=n)
+                              num_blocks=num_blocks, n=n, precision=precision)
     else:
         bs = stratified_block_sums(q, x, x_sq, key, kind=kind, inv_bw=inv_bw,
                                    beta=beta, pairwise=pairwise,
                                    block_size=block_size,
-                                   num_blocks=num_blocks, n=n, s=s)
+                                   num_blocks=num_blocks, n=n, s=s,
+                                   precision=precision)
     own = (src // block_size).astype(jnp.int32)
     corr = jnp.arange(num_blocks, dtype=jnp.int32)[None, :] == own[:, None]
     bs = jnp.where(corr, bs - 1.0, bs)
@@ -169,7 +184,7 @@ def _masked_block_sums(x, x_sq, src, key, *, kind, inv_bw, beta, pairwise,
 def masked_block_sums(x, x_sq, src, key, hstate=None, *, kind, inv_bw, beta,
                       pairwise, block_size, num_blocks, n, s, exact,
                       use_pallas=False, interpret=False, bm=128,
-                      level1="blocked", num_far=64):
+                      level1="blocked", num_far=64, precision="f32"):
     """Level-1 frontier read; dispatches to the Pallas masked-blocksum
     kernel (no Gumbel state) on the exact+Pallas path, or to the hashed
     read when ``level1="hash"``."""
@@ -179,7 +194,7 @@ def masked_block_sums(x, x_sq, src, key, hstate=None, *, kind, inv_bw, beta,
                              block_size=block_size, num_blocks=num_blocks,
                              n=n, s=s, exact=exact, use_pallas=use_pallas,
                              interpret=interpret, bm=bm, level1=level1,
-                             num_far=num_far)
+                             num_far=num_far, precision=precision)
     return bs
 
 
@@ -213,9 +228,29 @@ def _sample_core(x, x_sq, views, src, bs, key, *, kind, inv_bw, beta,
                                  beta, block_size, n, pairwise)
 
 
+def _walk_sample_core(x, x_sq, views, src, bs, key, *, kind, inv_bw, beta,
+                      pairwise, block_size, n, num_blocks):
+    """``sample_from_sums`` with the two-level inverse-CDF draws
+    (``ref.grouped_inverse_cdf``) at both depths -- the walk-resident-cache
+    step's hot path, where the flat (w, B) and (w, bs) cumsums were the
+    dominant n-scaling cost.  Same key-split discipline and sampling law
+    as ``_sample_core``; the realized index can differ from the flat
+    search only by fp regrouping of the partial sums."""
+    k_blk, k_in = jax.random.split(key)
+    blk, pb = _ref.choose_block_grouped(bs, k_blk, _ref.cdf_group(num_blocks))
+    kv, live, cols_c = _ref.level2_row(x, x_sq, views, src, blk, kind,
+                                       inv_bw, beta, block_size, n, pairwise)
+    nb, pin = _ref.level2_draw_grouped(kv, live, cols_c,
+                                       jax.random.uniform(k_in,
+                                                          (src.shape[0],)),
+                                       _ref.cdf_group(block_size))
+    return nb, pb * pin
+
+
 def _fused_sample(x, x_sq, src, key, hstate=None, *, kind, inv_bw, beta,
                   pairwise, block_size, num_blocks, n, s, exact, use_pallas,
-                  interpret, bm, level1="blocked", num_far=64, views=None):
+                  interpret, bm, level1="blocked", num_far=64,
+                  precision="f32", views=None):
     if views is None:
         views = _block_views(x, x_sq, block_size)
     k_l1, k_rest = jax.random.split(key)
@@ -226,7 +261,7 @@ def _fused_sample(x, x_sq, src, key, hstate=None, *, kind, inv_bw, beta,
                                   num_blocks=num_blocks, n=n, s=s,
                                   exact=exact, use_pallas=use_pallas,
                                   interpret=interpret, bm=bm, level1=level1,
-                                  num_far=num_far)
+                                  num_far=num_far, precision=precision)
         nb, prob = _sample_core(x, x_sq, views, src, bs, k_rest, kind=kind,
                                 inv_bw=inv_bw, beta=beta, pairwise=pairwise,
                                 block_size=block_size, n=n)
@@ -240,7 +275,7 @@ def _fused_sample(x, x_sq, src, key, hstate=None, *, kind, inv_bw, beta,
                      ((0, rem), (0, 0)))
         blk, pb, _, bs = _k.sample_block_pallas(
             q, xp, own, gp, kind, inv_bw, beta, bm=bm, bn=block_size,
-            interpret=interpret)
+            interpret=interpret, precision=precision)
         blk, pb, bs = blk[:w], pb[:w], bs[:w]
         kv, live, cols_c = _level2_kv(x, x_sq, views, src, blk, kind=kind,
                                       inv_bw=inv_bw, beta=beta,
@@ -255,7 +290,7 @@ def _fused_sample(x, x_sq, src, key, hstate=None, *, kind, inv_bw, beta,
     bs = _masked_block_sums(x, x_sq, src, k_l1, kind=kind, inv_bw=inv_bw,
                             beta=beta, pairwise=pairwise,
                             block_size=block_size, num_blocks=num_blocks,
-                            n=n, s=s, exact=exact)
+                            n=n, s=s, exact=exact, precision=precision)
     nb, prob = _sample_core(x, x_sq, views, src, bs, k_rest, kind=kind,
                             inv_bw=inv_bw, beta=beta, pairwise=pairwise,
                             block_size=block_size, n=n)
@@ -267,7 +302,8 @@ def _fused_sample(x, x_sq, src, key, hstate=None, *, kind, inv_bw, beta,
 @_jit
 def fused_sample(x, x_sq, src, key, hstate=None, *, kind, inv_bw, beta,
                  pairwise, block_size, num_blocks, n, s, exact, use_pallas,
-                 interpret, bm, level1="blocked", num_far=64):
+                 interpret, bm, level1="blocked", num_far=64,
+                 precision="f32"):
     """One depth-2 sampling step: (neighbors, realized probs, level-1 sums,
     status bitmask)."""
     TRACE_COUNTS["fused_sample"] += 1
@@ -275,7 +311,7 @@ def fused_sample(x, x_sq, src, key, hstate=None, *, kind, inv_bw, beta,
                          beta=beta, pairwise=pairwise, block_size=block_size,
                          num_blocks=num_blocks, n=n, s=s, exact=exact,
                          use_pallas=use_pallas, interpret=interpret, bm=bm,
-                         level1=level1, num_far=num_far)
+                         level1=level1, num_far=num_far, precision=precision)
 
 
 @_jit
@@ -330,7 +366,8 @@ def prob_of_from_block_sums(x, x_sq, src, dst, bs, *, kind, inv_bw, beta,
 # --------------------------------------------------------------------- #
 def _masked_sums_any(x, x_sq, src, key, hstate=None, *, kind, inv_bw, beta,
                      pairwise, block_size, num_blocks, n, s, exact,
-                     use_pallas, interpret, bm, level1="blocked", num_far=64):
+                     use_pallas, interpret, bm, level1="blocked", num_far=64,
+                     precision="f32"):
     """Masked level-1 sums for a frontier, dispatching to the Pallas
     masked-blocksum kernel on the exact+Pallas path (no Gumbel state --
     probability evaluation needs sums only), or to the hashed-KDE read
@@ -343,25 +380,27 @@ def _masked_sums_any(x, x_sq, src, key, hstate=None, *, kind, inv_bw, beta,
             x, src, hstate, key, kind=kind, inv_bw=inv_bw, beta=beta,
             pairwise=pairwise, num_far=num_far, block_size=block_size,
             num_blocks=num_blocks, n=n, use_pallas=use_pallas,
-            interpret=interpret, bm=bm)
+            interpret=interpret, bm=bm, precision=precision)
     if exact and use_pallas:
         w = src.shape[0]
         q, own, xp, _ = _pallas_pad(x, src, bm, block_size)
         bs = _k.masked_blocksum_pallas(q, xp, own, kind, inv_bw, beta, bm=bm,
-                                       bn=block_size, interpret=interpret)
+                                       bn=block_size, interpret=interpret,
+                                       precision=precision)
         bs = bs[:w]
         return bs, _g.sums_status(bs, _ref.BLOCK_SUM_FLOOR)
     bs = _masked_block_sums(x, x_sq, src, key, kind=kind, inv_bw=inv_bw,
                             beta=beta, pairwise=pairwise,
                             block_size=block_size, num_blocks=num_blocks,
-                            n=n, s=s, exact=exact)
+                            n=n, s=s, exact=exact, precision=precision)
     return bs, _g.sums_status(bs, _ref.BLOCK_SUM_FLOOR)
 
 
 def _edge_batch_core(x, x_sq, views, cdf, degs, inv_total, inv_t, key,
                      hstate=None, *, batch, kind, inv_bw, beta, pairwise,
                      block_size, num_blocks, n, s, exact, use_pallas,
-                     interpret, bm, level1="blocked", num_far=64):
+                     interpret, bm, level1="blocked", num_far=64,
+                     precision="f32"):
     """One Algorithm 5.1 edge batch, steps (a)-(d), as straight-line device
     code: u ~ degrees (inverse CDF over the device prefix array), v | u by
     the depth-2 engine, the reverse probability, and the importance weight
@@ -382,7 +421,8 @@ def _edge_batch_core(x, x_sq, views, cdf, degs, inv_total, inv_t, key,
                                    num_blocks=num_blocks, n=n, s=s,
                                    exact=exact, use_pallas=use_pallas,
                                    interpret=interpret, bm=bm, level1=level1,
-                                   num_far=num_far, views=views)
+                                   num_far=num_far, precision=precision,
+                                   views=views)
     kuv = _ref.kv_pairs(x[u], x[v], kind, inv_bw, beta, pairwise)
     q_vu = kuv / jnp.maximum(degs[v], _ref.BLOCK_SUM_FLOOR)
     # q_e = p_u q_uv + p_v q_vu with p_i = deg_i / sum(deg); the second
@@ -397,7 +437,7 @@ def _edge_batch_core(x, x_sq, views, cdf, degs, inv_total, inv_t, key,
 def fused_edge_batch(x, x_sq, cdf, degs, inv_total, inv_t, key, hstate=None,
                      *, batch, kind, inv_bw, beta, pairwise, block_size,
                      num_blocks, n, s, exact, use_pallas, interpret, bm,
-                     level1="blocked", num_far=64):
+                     level1="blocked", num_far=64, precision="f32"):
     """One fused Algorithm 5.1 edge batch: (u, v, weight, q_uv, q_vu,
     status)."""
     TRACE_COUNTS["fused_edge_batch"] += 1
@@ -408,14 +448,14 @@ def fused_edge_batch(x, x_sq, cdf, degs, inv_total, inv_t, key, hstate=None,
                             block_size=block_size, num_blocks=num_blocks,
                             n=n, s=s, exact=exact, use_pallas=use_pallas,
                             interpret=interpret, bm=bm, level1=level1,
-                            num_far=num_far)
+                            num_far=num_far, precision=precision)
 
 
 @_jit
 def edge_batch_scan(x, x_sq, cdf, degs, inv_total, inv_t, keys, hstate=None,
                     *, batch, kind, inv_bw, beta, pairwise, block_size,
                     num_blocks, n, s, exact, use_pallas, interpret, bm,
-                    level1="blocked", num_far=64):
+                    level1="blocked", num_far=64, precision="f32"):
     """All T = len(keys) edge batches of the sparsifier in ONE program: a
     ``lax.scan`` over per-batch keys whose body is one fused edge batch.
     The whole Algorithm 5.1 sampling loop runs with a single dispatch and
@@ -431,7 +471,8 @@ def edge_batch_scan(x, x_sq, cdf, degs, inv_total, inv_t, keys, hstate=None,
             batch=batch, kind=kind, inv_bw=inv_bw, beta=beta,
             pairwise=pairwise, block_size=block_size, num_blocks=num_blocks,
             n=n, s=s, exact=exact, use_pallas=use_pallas,
-            interpret=interpret, bm=bm, level1=level1, num_far=num_far)
+            interpret=interpret, bm=bm, level1=level1, num_far=num_far,
+            precision=precision)
         return st | st_b, (u, v, wgt, q_uv, q_vu)
 
     status, out = jax.lax.scan(body, jnp.uint32(0), keys)
@@ -439,12 +480,14 @@ def edge_batch_scan(x, x_sq, cdf, degs, inv_total, inv_t, keys, hstate=None,
 
 
 @_jit
-def kernel_rows(q, x, x_sq, *, kind, inv_bw, beta, pairwise):
+def kernel_rows(q, x, x_sq, *, kind, inv_bw, beta, pairwise,
+                precision="f32"):
     """Exact (m, n) kernel rows in one program -- the FKV sketch rows and
     the CP17 column reads of Section 5.2, replacing the host chunk loop
     over ``kernel.pairwise``."""
     TRACE_COUNTS["kernel_rows"] += 1
-    return _ref.kv_matrix(q, x, x_sq, kind, inv_bw, beta, pairwise)
+    return _ref.kv_matrix(q, x, x_sq, kind, inv_bw, beta, pairwise,
+                          precision=precision)
 
 
 def _sample_exact_core(x, x_sq, views, src, bs, key, *, kind, inv_bw, beta,
@@ -489,11 +532,105 @@ def fused_sample_exact(x, x_sq, src, bs, key, *, kind, inv_bw, beta, pairwise,
     return cur, st, fallbacks
 
 
+# fold_in constant deriving a walk program's cache key from its first
+# step key (any fixed value works; it only has to be distinct from the
+# per-step split stream).
+_WALK_CACHE_FOLD = 97
+
+
+def walk_cache_samples(num_blocks: int, s: int) -> int:
+    """Per-block subsample width ``s_eff`` of the walk-resident cache --
+    exposed so eval accounting (``core.sampling.edge``) and the benchmarks
+    report the true per-step level-1 cost."""
+    return _tuning.walk_samples_per_block(num_blocks, s)
+
+
+def walk_layout(n: int, block_size: int, num_blocks: int, s: int):
+    """(stratum width, stratum count, per-stratum cache width) of the
+    walk-resident layout (``tuning.walk_block_size``): the walk step's own
+    block granularity, decoupled from the sampler's query layout so the
+    exact level-2 read stays narrow as n grows.  Shared by ``walk_scan``
+    and the eval accounting in ``core.sampling.edge``.
+
+    When the sampler's own layout already fits the cache budget
+    (``num_blocks * s <= WALK_CACHE_COLS``) it is returned unchanged, so
+    small problems keep the query layout -- and the per-step eval count
+    stays EXACTLY the mesh engine's ``B * s + block_size`` (the sharded
+    walk has no resident cache; counter parity across backends is a
+    pinned contract)."""
+    if num_blocks * s <= _tuning.WALK_CACHE_COLS:
+        return block_size, num_blocks, s
+    wbs = _tuning.walk_block_size(n, block_size)
+    w_blocks = -(-int(n) // wbs)
+    return wbs, w_blocks, _tuning.walk_samples_per_block(w_blocks, s)
+
+
+def _walk_level1_cache(x, x_sq, key, *, block_size, num_blocks, n, s):
+    """Walk-resident compact level-1 subsample (DESIGN.md §14).
+
+    ONE stratified per-block draw per walk program -- ``s_eff =
+    walk_cache_samples(B, s)`` columns per block, total capped at
+    ~``tuning.WALK_CACHE_COLS`` columns -- gathered into a compact
+    (B * s_eff, d) array that every step's level-1 read sweeps instead of
+    re-gathering a fresh O(B s) subsample from the full dataset.  This is
+    the n=65536 walk-cliff fix: the per-step level-1 cost becomes
+    O(w * WALK_CACHE_COLS), independent of n, and the gather touches a
+    dataset-sized array once per *program* instead of once per *step*.
+    The cache key is ``fold_in(keys[0], const)`` so the draw is a pure
+    function of the walk's key stream (vmap-safe for the serving lanes;
+    re-running with the same keys reuses the identical subsample).
+    Returns ``(xs, xs_sq, sel, scale)``; ``sel`` is None on the tail-free
+    layout.  The cache is laid out SAMPLE-major -- column ``j`` holds
+    sample ``j // B`` of block ``j % B`` -- so the per-step reduction is
+    ``reshape(w, s_eff, B).sum(1)``: a middle-axis sum with the B blocks
+    contiguous in the minor axis, which vectorizes ~2x better than the
+    narrow trailing ``(w, B, s_eff).sum(-1)`` when ``s_eff`` is small."""
+    ck = jax.random.fold_in(key, _WALK_CACHE_FOLD)
+    base = jnp.arange(num_blocks, dtype=jnp.int32) * block_size
+    u = jax.random.uniform(ck, (num_blocks, block_size))
+    if n == num_blocks * block_size:
+        _, order = jax.lax.top_k(-u, s)           # (B, s_eff) w/o repl.
+        flat = (base[:, None] + order).T.reshape(-1)
+        sel = None
+        scale = jnp.full((num_blocks,), block_size / float(s), jnp.float32)
+    else:
+        pos = base[:, None] + jnp.arange(block_size, dtype=jnp.int32)[None, :]
+        valid_pos = pos < n
+        u = jnp.where(valid_pos, u, jnp.inf)
+        _, order = jax.lax.top_k(-u, s)
+        idx = jnp.take_along_axis(pos, order, axis=1)
+        sel = jnp.take_along_axis(valid_pos, order, axis=1).T.reshape(-1)
+        flat = jnp.minimum(idx, n - 1).T.reshape(-1)
+        sizes = jnp.minimum(n - base, block_size).astype(jnp.float32)
+        s_b = jnp.minimum(sizes, float(s))
+        scale = sizes / jnp.maximum(s_b, 1.0)
+    return x[flat], x_sq[flat], sel, scale
+
+
+def _cached_block_sums(cache, x, src, *, kind, inv_bw, beta, pairwise,
+                       block_size, num_blocks, s, precision):
+    """Masked level-1 read against the walk-resident cache: one compact
+    (w, B * s_eff) kernel eval, per-block reduction and rescale, then the
+    §2 own-block correction + floor (identical post-processing to
+    ``_masked_block_sums``)."""
+    xs, xs_sq, sel, scale = cache
+    q = x[src]
+    kv = _ref.kv_matrix(q, xs, xs_sq, kind, inv_bw, beta, pairwise,
+                        precision=precision)
+    if sel is not None:
+        kv = kv * sel[None, :]
+    bs = kv.reshape(q.shape[0], s, num_blocks).sum(1) * scale[None, :]
+    own = (src // block_size).astype(jnp.int32)
+    corr = jnp.arange(num_blocks, dtype=jnp.int32)[None, :] == own[:, None]
+    bs = jnp.where(corr, bs - 1.0, bs)
+    return jnp.maximum(bs, _ref.BLOCK_SUM_FLOOR)
+
+
 @_jit
 def walk_scan(x, x_sq, starts, keys, hstate=None, *, kind, inv_bw, beta,
               pairwise, block_size, num_blocks, n, s, exact, use_pallas,
               interpret, bm, rounds, slack, record_path=True,
-              level1="blocked", num_far=64):
+              level1="blocked", num_far=64, precision="f32"):
     """T-step random walk entirely on device: the frontier is scan carry,
     each step is one fused depth-2 sample (or rejection-exact step when
     ``rounds > 0``).  Returns (endpoints, (T, w) path); with
@@ -502,28 +639,70 @@ def walk_scan(x, x_sq, starts, keys, hstate=None, *, kind, inv_bw, beta,
     and None is returned in its place.  The key stream is identical either
     way, so endpoints match bitwise.  Returns (endpoints, path, status,
     rejection-fallback count) -- status and fallbacks are or/sum-folded
-    across the T steps inside the scan carry."""
+    across the T steps inside the scan carry.
+
+    On the stratified blocked path (``exact=False``, jnp level-1) the
+    level-1 read runs against the walk-resident subsample cache built ONCE
+    before the scan (see ``_walk_level1_cache``); every step still draws
+    its own level-2 randomness from the per-step key stream."""
     TRACE_COUNTS["walk_scan"] += 1
     views = _block_views(x, x_sq, block_size)  # hoisted out of the step body
+    cache = None
+    wbs, w_blocks, s_eff = block_size, num_blocks, s
+    if level1 == "blocked" and not exact and not use_pallas:
+        # walk-resident layout: same ~WALK_CACHE_COLS cached level-1
+        # columns spread over finer strata, so the exact level-2 read is
+        # O(wbs) << O(block_size) at large n (tuning.walk_block_size)
+        wbs, w_blocks, s_eff = walk_layout(n, block_size, num_blocks, s)
+        cache = _walk_level1_cache(x, x_sq, keys[0], block_size=wbs,
+                                   num_blocks=w_blocks, n=n, s=s_eff)
+        views = _block_views(x, x_sq, wbs)
 
     def body(carry, k):
         cur, st, fb = carry
         if rounds > 0:
             k_l1, k_rs = jax.random.split(k)
-            bs, st1 = _masked_sums_any(x, x_sq, cur, k_l1, hstate, kind=kind,
-                                       inv_bw=inv_bw, beta=beta,
-                                       pairwise=pairwise,
-                                       block_size=block_size,
-                                       num_blocks=num_blocks, n=n, s=s,
-                                       exact=exact, use_pallas=use_pallas,
-                                       interpret=interpret, bm=bm,
-                                       level1=level1, num_far=num_far)
+            if cache is not None:
+                bs = _cached_block_sums(cache, x, cur, kind=kind,
+                                        inv_bw=inv_bw, beta=beta,
+                                        pairwise=pairwise,
+                                        block_size=wbs,
+                                        num_blocks=w_blocks, s=s_eff,
+                                        precision=precision)
+                st1 = _g.sums_status(bs, _ref.BLOCK_SUM_FLOOR)
+            else:
+                bs, st1 = _masked_sums_any(x, x_sq, cur, k_l1, hstate,
+                                           kind=kind, inv_bw=inv_bw,
+                                           beta=beta, pairwise=pairwise,
+                                           block_size=block_size,
+                                           num_blocks=num_blocks, n=n, s=s,
+                                           exact=exact,
+                                           use_pallas=use_pallas,
+                                           interpret=interpret, bm=bm,
+                                           level1=level1, num_far=num_far,
+                                           precision=precision)
             nxt, st2, fb_k = _sample_exact_core(
                 x, x_sq, views, cur, bs, k_rs, kind=kind, inv_bw=inv_bw,
-                beta=beta, pairwise=pairwise, block_size=block_size, n=n,
+                beta=beta, pairwise=pairwise, block_size=wbs, n=n,
                 rounds=rounds, slack=slack)
             st = st | st1 | st2
             fb = fb + fb_k
+        elif cache is not None:
+            # mirrors _fused_sample's (k_l1, k_rest) discipline; k_l1 is
+            # unused because the level-1 subsample is the walk-resident one
+            _, k_rest = jax.random.split(k)
+            bs = _cached_block_sums(cache, x, cur, kind=kind, inv_bw=inv_bw,
+                                    beta=beta, pairwise=pairwise,
+                                    block_size=wbs,
+                                    num_blocks=w_blocks, s=s_eff,
+                                    precision=precision)
+            nxt, prob = _walk_sample_core(x, x_sq, views, cur, bs, k_rest,
+                                          kind=kind, inv_bw=inv_bw,
+                                          beta=beta, pairwise=pairwise,
+                                          block_size=wbs, n=n,
+                                          num_blocks=w_blocks)
+            st = st | _g.merge(_g.sums_status(bs, _ref.BLOCK_SUM_FLOOR),
+                               _g.result_status(prob))
         else:
             nxt, _, _, st_k = _fused_sample(x, x_sq, cur, k, hstate,
                                            kind=kind, inv_bw=inv_bw,
@@ -533,7 +712,7 @@ def walk_scan(x, x_sq, starts, keys, hstate=None, *, kind, inv_bw, beta,
                                            exact=exact, use_pallas=use_pallas,
                                            interpret=interpret, bm=bm,
                                            level1=level1, num_far=num_far,
-                                           views=views)
+                                           precision=precision, views=views)
             st = st | st_k
         return (nxt, st, fb), (nxt if record_path else None)
 
@@ -668,7 +847,7 @@ def signed_endpoint_stat(ends, signs, *, n):
 def triangle_edge_scan(x, x_sq, u, v, degs, keys, hstate=None, *, kind,
                        inv_bw, beta, pairwise, block_size, num_blocks, n, s,
                        exact, use_pallas, interpret, bm, level1="blocked",
-                       num_far=64):
+                       num_far=64, precision="f32"):
     """Theorem 6.17's per-edge inner loop as ONE program: degree-ordered
     orientation of the (u, v) pairs, ONE masked level-1 read of the
     oriented v frontier (keys[0], shared by every draw -- the §4 caching
@@ -689,7 +868,7 @@ def triangle_edge_scan(x, x_sq, u, v, degs, keys, hstate=None, *, kind,
                               block_size=block_size, num_blocks=num_blocks,
                               n=n, s=s, exact=exact, use_pallas=use_pallas,
                               interpret=interpret, bm=bm, level1=level1,
-                              num_far=num_far)
+                              num_far=num_far, precision=precision)
 
     def body(acc, k):
         w, _ = _sample_core(x, x_sq, views, vv, bs, k, kind=kind,
@@ -733,7 +912,7 @@ def _tenant(xa, xa_sq, hstate, ti):
 def batched_fused_sample(xa, xa_sq, tidx, src, keys, hstate=None, *, kind,
                          inv_bw, beta, pairwise, block_size, num_blocks, n,
                          s, exact, use_pallas, interpret, bm,
-                         level1="blocked", num_far=64):
+                         level1="blocked", num_far=64, precision="f32"):
     """One serving tick's depth-2 draws for R requests across T tenants as
     ONE program: ``src (R, w)`` padded frontiers, ``keys (R, 2)``
     per-request PRNG keys, ``tidx (R,)`` tenant indices.  Returns
@@ -749,7 +928,7 @@ def batched_fused_sample(xa, xa_sq, tidx, src, keys, hstate=None, *, kind,
                              block_size=block_size, num_blocks=num_blocks,
                              n=n, s=s, exact=exact, use_pallas=use_pallas,
                              interpret=interpret, bm=bm, level1=level1,
-                             num_far=num_far)
+                             num_far=num_far, precision=precision)
 
     return jax.vmap(one)(tidx, src, keys)
 
@@ -758,7 +937,8 @@ def batched_fused_sample(xa, xa_sq, tidx, src, keys, hstate=None, *, kind,
 def batched_walk_scan(xa, xa_sq, tidx, starts, keys, hstate=None, *, kind,
                       inv_bw, beta, pairwise, block_size, num_blocks, n, s,
                       exact, use_pallas, interpret, bm, rounds, slack,
-                      record_path=False, level1="blocked", num_far=64):
+                      record_path=False, level1="blocked", num_far=64,
+                      precision="f32"):
     """R independent T-step walks (``starts (R, w)``, ``keys (R, T, 2)``)
     across stacked tenants in ONE program.  Returns (endpoints (R, w),
     path ((R, T, w) or None), status (R,), rejection fallbacks (R,)) --
@@ -773,7 +953,8 @@ def batched_walk_scan(xa, xa_sq, tidx, starts, keys, hstate=None, *, kind,
                          num_blocks=num_blocks, n=n, s=s, exact=exact,
                          use_pallas=use_pallas, interpret=interpret, bm=bm,
                          rounds=rounds, slack=slack, record_path=record_path,
-                         level1=level1, num_far=num_far)
+                         level1=level1, num_far=num_far,
+                         precision=precision)
 
     return jax.vmap(one)(tidx, starts, keys)
 
@@ -782,7 +963,7 @@ def batched_walk_scan(xa, xa_sq, tidx, starts, keys, hstate=None, *, kind,
 def batched_prob_of(xa, xa_sq, tidx, src, dst, keys, hstate=None, *, kind,
                     inv_bw, beta, pairwise, block_size, num_blocks, n, s,
                     exact, use_pallas, interpret, bm, level1="blocked",
-                    num_far=64):
+                    num_far=64, precision="f32"):
     """q(dst | src) for R requests (``src``/``dst`` (R, w)) in ONE
     program: per lane one masked level-1 read of the src frontier (the
     same read ``prob_of`` performs when its cache is cold) followed by the
@@ -798,7 +979,7 @@ def batched_prob_of(xa, xa_sq, tidx, src, dst, keys, hstate=None, *, kind,
                                   num_blocks=num_blocks, n=n, s=s,
                                   exact=exact, use_pallas=use_pallas,
                                   interpret=interpret, bm=bm, level1=level1,
-                                  num_far=num_far)
+                                  num_far=num_far, precision=precision)
         prob = _prob_core(x, x_sq, views, src_r, dst_r, bs, kind=kind,
                           inv_bw=inv_bw, beta=beta, pairwise=pairwise,
                           block_size=block_size, n=n)
@@ -809,7 +990,8 @@ def batched_prob_of(xa, xa_sq, tidx, src, dst, keys, hstate=None, *, kind,
 
 @_jit
 def batched_kde_query(xa, xa_sq, tidx, y, keys, *, kind, inv_bw, beta,
-                      pairwise, block_size, num_blocks, n, s, exact):
+                      pairwise, block_size, num_blocks, n, s, exact,
+                      precision="f32"):
     """Definition 1.1 row-sum estimates for R query requests (``y``
     (R, q, d) external points) in ONE program -- the dense level-1 read
     per lane (exact or stratified, matching ``ExactBlockKDE`` /
@@ -824,13 +1006,15 @@ def batched_kde_query(xa, xa_sq, tidx, y, keys, *, kind, inv_bw, beta,
             bs = exact_block_sums(y_r, x, x_sq, kind=kind, inv_bw=inv_bw,
                                   beta=beta, pairwise=pairwise,
                                   block_size=block_size,
-                                  num_blocks=num_blocks, n=n)
+                                  num_blocks=num_blocks, n=n,
+                                  precision=precision)
         else:
             bs = stratified_block_sums(y_r, x, x_sq, key_r, kind=kind,
                                        inv_bw=inv_bw, beta=beta,
                                        pairwise=pairwise,
                                        block_size=block_size,
-                                       num_blocks=num_blocks, n=n, s=s)
+                                       num_blocks=num_blocks, n=n, s=s,
+                                       precision=precision)
         est = bs.sum(-1)
         st = _g.merge(_g.sums_status(bs, _ref.BLOCK_SUM_FLOOR),
                       _g.result_status(est))

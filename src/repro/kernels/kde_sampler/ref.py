@@ -38,15 +38,177 @@ def _finish_l2(d2, kind: str, inv_bw: float, beta: float):
     return (1.0 + d2 * (inv_bw * inv_bw)) ** (-beta)
 
 
+# --------------------------------------------------------------------- #
+# mixed precision (DESIGN.md §14)
+#
+# ``precision="bf16"`` rounds the dataset/query tiles to bfloat16 before
+# the level-1 distance GEMM and keeps EVERYTHING downstream in f32: the
+# cross term accumulates in f32 (``preferred_element_type``), the norms
+# are recomputed in f32 from the *rounded* coordinates (so d2 is the exact
+# f32 distance of the bf16-rounded points, never a mixed-rounding hybrid),
+# and the CDF/prefix sums of the draw stages are untouched -- the PR-2
+# prefix-sum bias fix is precision-independent.  ``"f32"`` is the default
+# and stays bitwise identical to the pre-policy code path.
+# --------------------------------------------------------------------- #
+PRECISIONS = ("f32", "bf16")
+
+# Documented accuracy bound of the bf16 eval path for Table-1 kernels.
+# The error is INPUT-rounding dominated: each coordinate picks up one bf16
+# rounding (eps = 2^-8), so the squared distance of the rounded points
+# drifts by |Δd2| <~ 2 eps d2, and for the exponential-family kernels
+# k = exp(-c d2) the per-value relative error is ~ Δd2 = 2^-7 d2.  Terms
+# with d2 large enough to push that bound past ~6% (d2 > 8) contribute
+# k < 3e-4 of the row mass, so the row-sum relative error is bounded by
+# the d2 <~ 8 envelope: 8 * 2^-7 = 2^-4.  (The bf16 exp table adds only
+# 2^-9 on top.)  Measured on gaussian n=262144 d=16: 4.1e-2 max over 256
+# queries -- inside this bound, outside any tighter one.
+# tests/test_precision.py pins estimator outputs to 2 * this bound.
+BF16_REL_ERR = 2.0 ** -4
+
+# Mirrors kde_rowsum.ops._PAD_OFFSET (imported there, duplicated here to
+# keep ref.py import-free of the ops layer): bf16-representable, and its
+# squared norm overflows f32 to inf, so padded rows evaluate to exactly 0
+# on the bf16 path too.
+_FAR_OFFSET = 1.0e30
+
+_EXP_TABLE = None
+
+
+def bf16_exp_table():
+    """(65536,) f32 table of exp() over every bfloat16 bit pattern.
+
+    A bf16 argument has only 2^16 distinct values, so exp on a bf16-rounded
+    argument is an exact table gather -- one f32 load instead of a
+    transcendental per element, which is what makes the bf16 sweep
+    bandwidth-bound instead of exp-bound on the host backend.  -inf maps
+    to 0.0 and NaN patterns stay NaN (corruption propagates, the status
+    guards still fire).  Built lazily once per process.
+    """
+    global _EXP_TABLE
+    if _EXP_TABLE is None:
+        import numpy as np
+        with np.errstate(over="ignore", invalid="ignore"):
+            args = (np.arange(65536, dtype=np.uint32) << 16).view(np.float32)
+            # cache as NUMPY: a jnp constant materialized inside a trace
+            # would be a tracer, and caching a tracer across traces leaks
+            _EXP_TABLE = np.exp(args.astype(np.float64)).astype(np.float32)
+    return _EXP_TABLE
+
+
+def exp_bf16(y, table=None):
+    """exp() of ``y`` after rounding it to bf16, as an exact table read.
+
+    ``table`` lets Pallas kernel bodies pass the table in as a VMEM ref
+    value -- a closed-over numpy array would be a captured constant, which
+    ``pallas_call`` rejects.  jnp callers leave it None.
+    """
+    yb = y.astype(jnp.bfloat16)
+    bits = jax.lax.bitcast_convert_type(yb, jnp.uint16).astype(jnp.int32)
+    if table is None:
+        table = jnp.asarray(bf16_exp_table())
+    return jnp.take(table, bits)
+
+
+def check_precision(precision: str, kind: str, pairwise=None) -> None:
+    """Reject unsupported precision configs at trace time (not mid-run)."""
+    if precision not in PRECISIONS:
+        raise ValueError(f"unknown precision {precision!r}; "
+                         f"expected one of {PRECISIONS}")
+    if precision == "bf16" and (kind not in _L2_KINDS or pairwise is not None):
+        raise ValueError(
+            "precision='bf16' supports the built-in L2 kernels only "
+            f"(gaussian / exponential / rational_quadratic); got {kind!r}")
+
+
+def _finish_l2_bf16(d2, kind: str, inv_bw: float, beta: float, table=None):
+    """L2-kind finisher of the bf16 path: f32 d2 in, table-exp out.  This
+    exact function runs inside the Pallas kernel bodies AND the jnp refs,
+    so interpret-mode bf16 runs match the oracles bitwise.  Pallas bodies
+    pass the exp table as a streamed input via ``table``."""
+    d2 = jnp.maximum(d2, 0.0)
+    if kind == "gaussian":
+        return exp_bf16(-d2 * (inv_bw * inv_bw), table)
+    if kind == "exponential":
+        return exp_bf16(-jnp.sqrt(d2) * inv_bw, table)
+    return (1.0 + d2 * (inv_bw * inv_bw)) ** (-beta)
+
+
+def kv_matrix_bf16(q, x, kind: str, inv_bw: float, beta: float):
+    """(m, n) kernel values with bf16 operand tiles and f32 accumulation.
+    The passed-in dataset norms are NOT reused: they describe the unrounded
+    rows, so the bf16 path recomputes both norm vectors in f32 from the
+    rounded coordinates (O((m + n) d), amortized by the O(m n d) GEMM)."""
+    qb = q.astype(jnp.bfloat16)
+    xb = x.astype(jnp.bfloat16)
+    qf = qb.astype(jnp.float32)
+    xf = xb.astype(jnp.float32)
+    qq = jnp.sum(qf * qf, axis=1, keepdims=True)
+    xx = jnp.sum(xf * xf, axis=1)
+    cross = jax.lax.dot_general(qb, xb, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    d2 = qq + xx[None, :] - 2.0 * cross
+    return _finish_l2_bf16(d2, kind, inv_bw, beta)
+
+
+def kv_block_sums_bf16(q, x, kind: str, inv_bw: float, beta: float,
+                       bn: int, blocks_per_tile: int | None = None):
+    """(m, ceil(n/bn)) per-block sums as a bf16 column-tile scan.
+
+    The bandwidth-optimal level-1 sweep: the dataset is rounded to bf16,
+    pre-transposed into (tile, d, tile_cols) GEMM layout ONCE, and a
+    ``lax.scan`` walks the column tiles -- each step is one
+    (m, d) x (d, tile_cols) bf16 GEMM with an f32 accumulator, the table
+    exp, and an in-register per-block reduction.  Peak live memory is the
+    (m, tile_cols) f32 value tile instead of the dense (m, n) matrix, so
+    the sweep streams the dataset at memory bandwidth.  The tail is padded
+    at the far offset (kernel values exactly 0) and sliced off.
+    """
+    from repro.kernels import tuning
+    m = q.shape[0]
+    n, d = x.shape
+    num_b = -(-n // bn)
+    t = blocks_per_tile or tuning.sweep_blocks_per_tile(bn, d)
+    ntiles = -(-num_b // t)
+    pad = ntiles * t * bn - n
+    if pad:
+        x = jnp.concatenate(
+            [x, jnp.full((pad, d), _FAR_OFFSET, x.dtype)], axis=0)
+    xb = x.astype(jnp.bfloat16)
+    xf = xb.astype(jnp.float32)
+    x_sq = jnp.sum(xf * xf, axis=-1)
+    xt = xb.T.reshape(d, ntiles, t * bn).transpose(1, 0, 2)  # (T, d, cols)
+    xsq_t = x_sq.reshape(ntiles, t * bn)
+    qb = q.astype(jnp.bfloat16)
+    qf = qb.astype(jnp.float32)
+    qq = jnp.sum(qf * qf, axis=1, keepdims=True)
+
+    def body(_, operand):
+        xt_i, xsq_i = operand
+        cross = jax.lax.dot_general(qb, xt_i, (((1,), (0,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+        d2 = qq + xsq_i[None, :] - 2.0 * cross
+        kv = _finish_l2_bf16(d2, kind, inv_bw, beta)
+        return None, kv.reshape(m, t, bn).sum(-1)
+
+    _, out = jax.lax.scan(body, None, (xt, xsq_t))           # (T, m, t)
+    out = out.transpose(1, 0, 2).reshape(m, ntiles * t)
+    return out[:, :num_b]
+
+
 def kv_matrix(q, x, x_sq, kind: str, inv_bw: float, beta: float,
-              pairwise=None) -> jnp.ndarray:
+              pairwise=None, precision: str = "f32") -> jnp.ndarray:
     """(m, n) kernel values; L2 kinds reuse precomputed ``x_sq = ||x_j||^2``.
 
     Built-in kinds never touch ``pairwise`` -- keeping it out of the jit
     static key means one compiled program per (kind, inv_bw, beta), not one
     per ``Kernel`` instance.  Unknown kinds (custom ``Kernel`` objects) fall
-    back to the ``pairwise`` callable.
+    back to the ``pairwise`` callable.  ``precision="bf16"`` dispatches to
+    the mixed-precision evaluator (L2 kinds only; ``x_sq`` is recomputed
+    from the rounded rows there).
     """
+    if precision != "f32":
+        check_precision(precision, kind, pairwise)
+        return kv_matrix_bf16(q, x, kind, inv_bw, beta)
     if kind in _L2_KINDS:
         qq = jnp.sum(q * q, axis=1, keepdims=True)
         d2 = qq + x_sq[None, :] - 2.0 * (q @ x.T)
@@ -68,9 +230,11 @@ def kv_rows(xs, xb, xs_sq, xb_sq, kind: str, inv_bw: float, beta: float,
     """Per-row block values k(xs_i, xb_i_j): xs (w, d), xb (w, bs, d) ->
     (w, bs).  The level-2 read of the depth-2 sampler."""
     if kind in _L2_KINDS:
-        # batched matvec via dot_general -- measurably faster than the
-        # equivalent einsum lowering on CPU for these thin shapes
-        cross = jax.lax.dot_general(xs, xb, (((1,), (2,)), ((0,), (0,))))
+        # broadcast multiply-reduce -- the batched dot_general lowering is
+        # ~8x slower on the host backend for these thin (w, 1, d) x
+        # (w, d, bs) shapes (it was the hidden per-step cost of the walk
+        # level-2 read at large n)
+        cross = jnp.sum(xs[:, None, :] * xb, axis=-1)
         d2 = xs_sq[:, None] + xb_sq - 2.0 * cross
         return _finish_l2(d2, kind, inv_bw, beta)
     if kind == "laplacian":
@@ -165,6 +329,63 @@ def choose_block(bs, key):
     blk = blk.clip(0, bs.shape[1] - 1)
     pb = jnp.take_along_axis(bs, blk[:, None], axis=1)[:, 0] / tot
     return blk, pb
+
+
+def cdf_group(m: int) -> int:
+    """Largest divisor of ``m`` that is <= sqrt(m) -- the inner group width
+    of the two-level inverse CDF.  1 for prime ``m`` (degenerates to the
+    flat search, still correct)."""
+    g = max(int(m ** 0.5), 1)
+    while m % g:
+        g -= 1
+    return g
+
+
+def grouped_inverse_cdf(vals, u, group: int):
+    """Two-level inverse-CDF categorical over each row of ``vals``
+    (contiguous groups of ``group`` columns): pick the group by the group
+    CDF, then the column inside it.  The SAME sampling law as the flat
+    ``cumsum`` inverse CDF -- nested search over contiguous groups visits
+    the same index up to fp regrouping of partial sums -- but the per-row
+    cumsum touches O(m/group + group) lanes instead of O(m), which is the
+    walk step's hot-path win (DESIGN.md §14).  Returns
+    (index, vals[index], row total)."""
+    w, m = vals.shape
+    ng = m // group
+    v3 = vals.reshape(w, ng, group)
+    grp = v3.sum(-1)
+    cg = jnp.cumsum(grp, axis=1)
+    tot = cg[:, -1]
+    t = u * tot
+    g = jnp.sum(t[:, None] > cg, axis=1).clip(0, ng - 1).astype(jnp.int32)
+    prev = (jnp.take_along_axis(cg, g[:, None], axis=1)
+            - jnp.take_along_axis(grp, g[:, None], axis=1))[:, 0]
+    sub = jnp.take_along_axis(v3, g[:, None, None], axis=1)[:, 0]
+    cs = jnp.cumsum(sub, axis=1)
+    j = jnp.sum((t - prev)[:, None] > cs, axis=1).clip(0, group - 1)
+    idx = (g * group + j.astype(jnp.int32))
+    val = jnp.take_along_axis(sub, j[:, None], axis=1)[:, 0]
+    return idx, val, tot
+
+
+def choose_block_grouped(bs, key, group: int):
+    """``choose_block`` by the two-level inverse CDF -- same categorical
+    law, O(B/group + group) cumsum lanes per draw.  Used by the walk's
+    resident-cache step where the flat (w, B) cumsum dominated."""
+    u = jax.random.uniform(key, (bs.shape[0],))
+    blk, val, tot = grouped_inverse_cdf(bs, u, group)
+    return blk, val / tot
+
+
+def level2_draw_grouped(kv, live, cols_c, u2, group: int):
+    """``level2_draw`` by the two-level inverse CDF (same all-zero-row
+    fallback to uniform-over-live)."""
+    rowsum = kv.sum(axis=1)
+    use = jnp.where((rowsum > 0.0)[:, None], kv, live.astype(jnp.float32))
+    j, val, tot = grouped_inverse_cdf(use, u2, group)
+    nb = jnp.take_along_axis(cols_c, j[:, None], axis=1)[:, 0]
+    pin = val / jnp.maximum(tot, 1e-30)
+    return nb, pin
 
 
 def sample_from_sums(x, x_sq, views, src, bs, key, kind: str, inv_bw: float,

@@ -1,0 +1,116 @@
+"""Analytic tile-size / budget autotuning for the kernel layer (DESIGN.md §14).
+
+Every chooser here is a pure function of *static* shape/config values and is
+memoized with ``functools.lru_cache``, so a tuned size is a compile-time
+constant: it feeds straight into the same static-config program cache the
+jitted entry points already key on (``kde_sampler.ops._STATIC`` etc.) and can
+never force a retrace at call time.
+
+Three budgets are tuned:
+
+* ``sweep_blocks_per_tile`` -- column-tile width of the bf16 level-1 sweep
+  (``kde_sampler.ref.kv_block_sums_bf16``): wide enough to amortize the f32
+  accumulator flush, small enough that the (m, tile) value tile stays cache
+  resident.
+* ``pallas_tiles`` -- (bm, bn) for the Pallas rowsum/blocksum grids under a
+  double-buffered VMEM budget (two in-flight copies of each operand tile
+  plus the accumulator).
+* ``walk_samples_per_block`` -- the per-block subsample width of the
+  walk-resident level-1 cache: capped so the cached compact dataset read is
+  O(WALK_CACHE_COLS) columns per step *independent of n*, which is what
+  removes the n=65536 walk-throughput cliff (the per-step level-1 re-read
+  used to grow as num_blocks * s = O(n)).
+"""
+from __future__ import annotations
+
+import functools
+
+# Column budget of the bf16 sweep tile: the knee measured on the host
+# backend (one (m, 2048) f32 value tile + the (d, 2048) bf16 operand tile
+# fit in L2 for the benchmarked m <= 1024, d <= 64 range).
+SWEEP_TILE_COLS = 2048
+
+# Level-1 columns resident in a walk program's subsample cache.  At the
+# default block layout (bs = sqrt(n)) this equals num_blocks * s for
+# n = 4096 (B=64, s=16), so small problems are untouched; past that the
+# per-block width shrinks instead of the per-step cost growing.
+WALK_CACHE_COLS = 1024
+WALK_CACHE_MIN_S = 2
+
+# Narrowest walk-layout stratum: below this the per-step fixed costs
+# (key splits, status folds) dominate the level-2 read they amortize.
+WALK_MIN_BLOCK = 64
+
+# Double-buffered VMEM budget for the Pallas tile chooser (bytes).  ~16 MiB
+# of VMEM per core on current TPUs; keep tiles under half of it so the
+# pipelined (two in-flight) copies of every operand fit.
+VMEM_BUDGET = 8 * 1024 * 1024
+
+
+@functools.lru_cache(maxsize=None)
+def sweep_blocks_per_tile(bn: int, d: int,
+                          target_cols: int = SWEEP_TILE_COLS) -> int:
+    """Blocks per column tile of the bf16 blocked sweep (>= 1)."""
+    return max(1, int(target_cols) // max(int(bn), 1))
+
+
+@functools.lru_cache(maxsize=None)
+def walk_samples_per_block(num_blocks: int, s: int,
+                           cap: int = WALK_CACHE_COLS) -> int:
+    """Per-block subsample width of the walk-resident level-1 cache.
+
+    ``min(s, max(cap // num_blocks, WALK_CACHE_MIN_S))``: never more than
+    the configured stratified width ``s``, never fewer than
+    ``WALK_CACHE_MIN_S`` rows per block (the estimate must keep some
+    within-block variance reduction), and at most ~``cap`` total columns.
+    """
+    return min(int(s), max(int(cap) // max(int(num_blocks), 1),
+                           WALK_CACHE_MIN_S))
+
+
+@functools.lru_cache(maxsize=None)
+def walk_block_size(n: int, block_size: int) -> int:
+    """Stratum width of the walk-resident layout -- at most half the next
+    power of two above ``sqrt(n)``, floored at ``WALK_MIN_BLOCK`` and never
+    wider than the sampler's own blocks.
+
+    The walk step pays O(cached cols) at level 1 (flat in n once the cache
+    cap binds) plus O(walk_block_size) for the exact level-2 read, so the
+    level-2 stratum is the only per-step term still growing with n under
+    the sqrt layout.  Halving it (while the same ~WALK_CACHE_COLS cached
+    points spread over twice as many strata) halves that term without
+    shrinking the cache: same level-1 coverage, finer strata, exact
+    within-stratum draw -- the identical stratified depth-2 scheme at a
+    finer level-1 granularity.  n = 4096 stays at 64 (unchanged layout);
+    n = 65536 drops 256 -> 128; n = 10^6 uses 512.
+    """
+    p = 1
+    while p * p < n:
+        p *= 2
+    return max(WALK_MIN_BLOCK, min(int(block_size), p // 2))
+
+
+def _tile_bytes(bm: int, bn: int, d: int, in_bytes: int) -> int:
+    # double-buffered q tile + x tile, plus the f32 value/accumulator tile
+    return 2 * (bm * d + bn * d) * in_bytes + bm * bn * 4 + bm * 4
+
+
+@functools.lru_cache(maxsize=None)
+def pallas_tiles(m: int, n: int, d: int, precision: str = "f32"):
+    """(bm, bn) for the Pallas rowsum/blocksum grids.
+
+    Prefers the widest MXU-aligned x tile whose double-buffered staging
+    fits ``VMEM_BUDGET``; bf16 operands halve the staged bytes, so the
+    tuner widens the tiles (more reuse per HBM byte) exactly when the
+    precision policy makes that free.  Callers pad their operands to the
+    returned multiples, so small shapes stick to the narrow tiles (padding
+    a 512-row dataset to a 1024 tile would be pure waste).
+    """
+    in_bytes = 2 if precision == "bf16" else 4
+    bm = 256 if m >= 256 else 128
+    for bn in (1024, 512, 256):
+        if bn > max(n, 256):
+            continue
+        if _tile_bytes(bm, bn, d, in_bytes) <= VMEM_BUDGET:
+            return bm, bn
+    return bm, 256

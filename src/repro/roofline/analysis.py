@@ -1,9 +1,11 @@
-"""Roofline analysis from the compiled dry-run artifact (TPU v5e target).
+"""Roofline analysis: analytic terms from the compiled dry-run artifact,
+plus a *measured* mode (bytes and seconds observed on a live run against a
+backend-configurable chip spec).
 
-Terms (seconds, per step):
-  compute    = FLOPs / (chips * 197 TF/s bf16)
-  memory     = HBM bytes / (chips * 819 GB/s)
-  collective = per-device collective bytes / 50 GB/s/link
+Analytic terms (seconds, per step), against a ``ChipSpec``:
+  compute    = FLOPs / (chips * spec.peak_flops)
+  memory     = HBM bytes / (chips * spec.hbm_bw)
+  collective = per-device collective bytes / spec.link_bw
 
 FLOPs / HBM bytes come from the analytic model (roofline/flops.py) because
 XLA cost_analysis counts while(=scan) bodies once (measured);
@@ -13,6 +15,13 @@ summing operand sizes of all-gather / all-reduce / reduce-scatter /
 all-to-all / collective-permute, each multiplied by the product of enclosing
 while-loop trip counts (extracted from the loop condition's comparison
 constant).
+
+Measured mode (``measured_roofline``) takes a wall time and the modeled
+flops/bytes of the program that ran, and reports the achieved fraction of
+the spec's roofline: ``max(compute_s, memory_s, collective_s) / time_s``
+-- 1.0 means the run sits ON the roofline for its dominant resource.  The
+benchmarks' scaling campaigns record this per size so regressions show as
+a falling fraction, not just a rising microsecond count.
 """
 from __future__ import annotations
 
@@ -20,9 +29,49 @@ import dataclasses
 import re
 from typing import Dict, List, Optional, Tuple
 
-PEAK_FLOPS = 197e12          # bf16 / chip
-HBM_BW = 819e9               # bytes/s / chip
-LINK_BW = 50e9               # bytes/s / link
+
+@dataclasses.dataclass(frozen=True)
+class ChipSpec:
+    """Peak rates of one accelerator chip (or host core) for roofline
+    normalization.  ``link_bw`` is the per-link interconnect rate used by
+    the collective term; hosts without a fabric reuse memory bandwidth."""
+    name: str
+    peak_flops: float          # FLOP/s per chip (dense, preferred dtype)
+    hbm_bw: float              # bytes/s per chip
+    link_bw: float             # bytes/s per link
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+# TPU v5e: 197 TF/s bf16, 819 GB/s HBM, 50 GB/s per ICI link.
+TPU_V5E = ChipSpec("tpu_v5e", 197e12, 819e9, 50e9)
+
+# Order-of-magnitude single host core (AVX2-class f32 FMA, DRAM stream):
+# the fallback spec when the process runs on the CPU backend, so measured
+# fractions stay O(0.1..1) instead of reading as 1e-4 of a TPU.
+HOST_CPU = ChipSpec("host_cpu", 5.0e10, 2.0e10, 2.0e10)
+
+
+def chip_spec_for_backend(backend: Optional[str] = None) -> ChipSpec:
+    """Chip spec for an explicit backend name, or the process default
+    backend when None.  Unknown / GPU backends get the TPU spec (the
+    campaign's normalization target) -- pass an explicit ``ChipSpec`` to
+    the term builders to override."""
+    if backend is None:
+        try:
+            import jax
+            backend = jax.default_backend()
+        except Exception:
+            backend = "cpu"
+    return HOST_CPU if backend == "cpu" else TPU_V5E
+
+
+# Back-compat module constants (== TPU_V5E); roofline_terms defaults to
+# them so the dry-run artifact numbers are unchanged.
+PEAK_FLOPS = TPU_V5E.peak_flops      # bf16 / chip
+HBM_BW = TPU_V5E.hbm_bw              # bytes/s / chip
+LINK_BW = TPU_V5E.link_bw            # bytes/s / link
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
@@ -32,6 +81,21 @@ _DTYPE_BYTES = {
 
 _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                 "collective-permute")
+
+def dtype_bytes(dtype: str) -> int:
+    """Bytes per element of an HLO/numpy-style dtype name ("f32", "bf16",
+    "bfloat16", "float32", ...).  The ONE bytes-per-dtype table -- the
+    measured-mode byte models in ``benchmarks/`` use this instead of
+    hardcoding 4."""
+    alias = {"float64": "f64", "float32": "f32", "bfloat16": "bf16",
+             "float16": "f16", "int64": "s64", "int32": "s32",
+             "int16": "s16", "int8": "s8", "uint64": "u64", "uint32": "u32",
+             "uint16": "u16", "uint8": "u8", "bool": "pred"}
+    key = alias.get(str(dtype), str(dtype))
+    if key not in _DTYPE_BYTES:
+        raise KeyError(f"unknown dtype {dtype!r}")
+    return _DTYPE_BYTES[key]
+
 
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 _INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
@@ -212,10 +276,11 @@ class Roofline:
 
 def roofline_terms(flops_total: float, model_flops: float, hbm_bytes: float,
                    coll_bytes_per_device: float, chips: int,
-                   raw_cost: Optional[Dict] = None) -> Roofline:
-    compute_s = flops_total / (chips * PEAK_FLOPS)
-    memory_s = hbm_bytes / (chips * HBM_BW)
-    collective_s = coll_bytes_per_device / LINK_BW
+                   raw_cost: Optional[Dict] = None,
+                   spec: ChipSpec = TPU_V5E) -> Roofline:
+    compute_s = flops_total / (chips * spec.peak_flops)
+    memory_s = hbm_bytes / (chips * spec.hbm_bw)
+    collective_s = coll_bytes_per_device / spec.link_bw
     terms = {"compute": compute_s, "memory": memory_s,
              "collective": collective_s}
     dominant = max(terms, key=terms.get)
@@ -227,3 +292,49 @@ def roofline_terms(flops_total: float, model_flops: float, hbm_bytes: float,
         chips=chips,
         raw_cost_flops=(raw_cost or {}).get("flops"),
         raw_cost_bytes=(raw_cost or {}).get("bytes accessed"))
+
+
+@dataclasses.dataclass
+class MeasuredRoofline:
+    """One live measurement against a chip spec's roofline.
+
+    ``achieved_fraction = max(compute_s, memory_s, collective_s) / time_s``
+    -- the fraction of the roofline bound actually reached (1.0 = the run
+    is AT the bound for its dominant resource; > 1 means the byte/flop
+    model undercounts, e.g. cache-resident traffic)."""
+    time_s: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    achieved_fraction: float
+    achieved_flops: float
+    achieved_bw: float
+    spec: str
+    chips: int
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def measured_roofline(time_s: float, flops: float, bytes_moved: float,
+                      spec: Optional[ChipSpec] = None, chips: int = 1,
+                      coll_bytes_per_device: float = 0.0) -> MeasuredRoofline:
+    """Roofline placement of a measured run: modeled flops/bytes of the
+    program that ran, observed wall seconds, backend-configurable peaks
+    (``chip_spec_for_backend()`` when ``spec`` is None)."""
+    if spec is None:
+        spec = chip_spec_for_backend()
+    compute_s = flops / (chips * spec.peak_flops)
+    memory_s = bytes_moved / (chips * spec.hbm_bw)
+    collective_s = coll_bytes_per_device / spec.link_bw
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    t = max(float(time_s), 1e-12)
+    return MeasuredRoofline(
+        time_s=float(time_s), compute_s=compute_s, memory_s=memory_s,
+        collective_s=collective_s, dominant=dominant,
+        achieved_fraction=max(compute_s, memory_s, collective_s) / t,
+        achieved_flops=flops / t, achieved_bw=bytes_moved / t,
+        spec=spec.name, chips=chips)
