@@ -32,6 +32,7 @@ from benchmarks.common import emit
 from repro.compat import shard_map
 from repro.core.kernels_fn import gaussian
 from repro.kernels.kde_sampler.sharded import ShardedBlocks
+from repro.obs.export import telemetry_block
 
 _JSON_PATH = Path(__file__).resolve().parent.parent / "BENCH_distributed.json"
 
@@ -83,14 +84,12 @@ def _host_orchestrated_walk(mesh, x, xs, kernel, starts, length, bs, rng):
 
 
 def _time(fn, repeats=3, warmup=1):
-    for _ in range(warmup):
-        fn()
-    times = []
-    for _ in range(repeats):
-        t0 = time.perf_counter()
-        fn()
-        times.append(time.perf_counter() - t0)
-    return min(times)
+    """Best-of-N FENCED wall seconds via ``obs.Timer`` (the return value
+    of ``fn`` is ``block_until_ready``'d before the clock stops); min is
+    robust against background load on shared CPUs."""
+    from repro.obs.metrics import Timer
+    return Timer("bench").timeit(fn, repeats=repeats, warmup=warmup,
+                                 reduce="min") / 1e6
 
 
 def _scaling(quick: bool, mesh, devices: int) -> dict:
@@ -201,6 +200,7 @@ def run(quick: bool = False) -> None:
         "host_orchestrated_steps_per_sec": old_sps,
         "speedup": speedup,
         "scaling": _scaling(quick, mesh, devices),
+        "telemetry": telemetry_block(wall_us=1e6 / new_sps),
     }
     _JSON_PATH.write_text(json.dumps(payload, indent=2) + "\n")
     print(f"# wrote {_JSON_PATH.name}: {speedup:.1f}x over the "

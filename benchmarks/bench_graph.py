@@ -33,6 +33,7 @@ from repro.core.kernels_fn import Kernel, gaussian
 from repro.core.sampling.edge import NeighborSampler
 from repro.core.sampling.vertex import DegreeSampler, approximate_degrees
 from repro.data.synthetic_points import gaussian_clusters
+from repro.obs.export import telemetry_block
 
 _JSON_PATH = Path(__file__).resolve().parent.parent / "BENCH_graph.json"
 
@@ -83,15 +84,12 @@ def _host_arboricity_edges(deg: DegreeSampler, nbr: NeighborSampler,
 
 
 def _time(fn, repeats=3, warmup=1):
-    """Best-of-N wall time: robust against background load on shared CPUs."""
-    for _ in range(warmup):
-        fn()
-    times = []
-    for _ in range(repeats):
-        t0 = time.perf_counter()
-        fn()
-        times.append(time.perf_counter() - t0)
-    return min(times)
+    """Best-of-N FENCED wall seconds via ``obs.Timer`` (the return value
+    of ``fn`` is ``block_until_ready``'d before the clock stops); min is
+    robust against background load on shared CPUs."""
+    from repro.obs.metrics import Timer
+    return Timer("bench").timeit(fn, repeats=repeats, warmup=warmup,
+                                 reduce="min") / 1e6
 
 
 def _engine(quick: bool):
@@ -201,5 +199,6 @@ def run(quick: bool = False):
     rows2, results2 = _accuracy(quick)
     _JSON_PATH.write_text(json.dumps(dict(
         benchmark="bench_graph", backend=jax.default_backend(), quick=quick,
+        telemetry=telemetry_block(),
         results=results + results2), indent=2) + "\n")
     return rows + rows2

@@ -32,6 +32,7 @@ from benchmarks.common import emit, timeit
 from repro.core.kde.base import ExactKDE, make_estimator
 from repro.core.kernels_fn import (exponential, gaussian, laplacian,
                                    rational_quadratic)
+from repro.obs.export import telemetry_block
 
 _JSON_PATH = Path(__file__).resolve().parent.parent / "BENCH_kde.json"
 
@@ -234,5 +235,6 @@ def run(quick: bool = False):
     _precision_scaling(quick, rows, results)
     _JSON_PATH.write_text(json.dumps(dict(
         benchmark="bench_kde", backend=jax.default_backend(), quick=quick,
+        telemetry=telemetry_block(),
         results=results), indent=2) + "\n")
     return rows

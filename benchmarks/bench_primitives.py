@@ -6,7 +6,10 @@ cost relative to materializing the kernel matrix (n^2 evals).
 
 ``--check`` (the CI perf-smoke step) reruns the quick configuration and
 fails if any eval counter drifts from the pinned ``QUICK_BASELINE`` or if
-the sampler's accumulated status word carries a ``guards.FATAL`` bit.  The
+the sampler's accumulated status word carries a ``guards.FATAL`` bit.
+The ``*_realized`` entries are read off the device counter words
+(DESIGN.md §15.1) and pin host/device eval parity, not just the host
+arithmetic.  The
 counters are exact: every primitive here is seeded, so a changed count
 means the sampling schedule changed -- which must be a deliberate edit to
 this baseline, never an accident.
@@ -35,8 +38,11 @@ from repro.core.spectrum import approximate_spectrum
 # --quick --print-baseline`` after any intentional schedule change.
 QUICK_BASELINE = {
     "degree_preprocessing": 64000,
+    "degree_preprocessing_realized": 64000,
     "neighbor_sample": 75520,
+    "neighbor_sample_realized": 75520,
     "random_walk_len8": 151040,
+    "random_walk_len8_realized": 151040,
     "spectral_sparsification": 2688832,
     "low_rank_approx": 280000,
     "top_eigenvalue": 22500,
@@ -60,19 +66,27 @@ def _measure(quick: bool):
     est = make_estimator("stratified", x, ker, seed=0)
     DegreeSampler(est, seed=1)
     counters["degree_preprocessing"] = int(est.evals)
+    # realized device evals from the counter words (DESIGN.md §15.1);
+    # on the flat stratified/blocked pipelines they must equal the
+    # analytic counters exactly (asserted in tests/test_fused_apps.py)
+    counters["degree_preprocessing_realized"] = \
+        int(est.device_counters["evals"])
     rows.append(emit("primitive/degree_preprocessing", 0.0,
                      f"kernel_evals={est.evals};frac_of_n2={est.evals/n2:.4f}"))
 
     nb = NeighborSampler(x, ker, mode="blocked", samples_per_block=8, seed=2)
     nb.sample(np.zeros(256, np.int64))
     counters["neighbor_sample"] = int(nb.evals)
+    counters["neighbor_sample_realized"] = int(nb.device_counters["evals"])
     per_sample = nb.evals / 256
     rows.append(emit("primitive/neighbor_sample", 0.0,
                      f"kernel_evals={per_sample:.0f};frac_of_n2={per_sample/n2:.6f}"))
 
-    e0 = nb.evals
+    e0, r0 = nb.evals, nb.device_counters["evals"]
     random_walks(nb, np.zeros(64, np.int64), 8)
     counters["random_walk_len8"] = int(nb.evals - e0)
+    counters["random_walk_len8_realized"] = \
+        int(nb.device_counters["evals"] - r0)
     per_walk = (nb.evals - e0) / 64
     rows.append(emit("primitive/random_walk_len8", 0.0,
                      f"kernel_evals={per_walk:.0f};frac_of_n2={per_walk/n2:.6f}"))

@@ -26,6 +26,7 @@ from repro.core.kernels_fn import Kernel, gaussian
 from repro.core.sampling.edge import NeighborSampler
 from repro.kernels.kde_sampler import ops as _sampler_ops
 from repro.roofline import analysis as _roofline
+from repro.obs.export import telemetry_block
 
 _JSON_PATH = Path(__file__).resolve().parent.parent / "BENCH_sampling.json"
 
@@ -121,15 +122,12 @@ def _walk_seed(sampler, starts, steps):
 
 
 def _time(fn, repeats=3, warmup=1):
-    """Best-of-N wall time: robust against background load on shared CPUs."""
-    for _ in range(warmup):
-        fn()
-    times = []
-    for _ in range(repeats):
-        t0 = time.perf_counter()
-        fn()
-        times.append(time.perf_counter() - t0)
-    return min(times)
+    """Best-of-N FENCED wall seconds via ``obs.Timer`` (the return value
+    of ``fn`` is ``block_until_ready``'d before the clock stops); min is
+    robust against background load on shared CPUs."""
+    from repro.obs.metrics import Timer
+    return Timer("bench").timeit(fn, repeats=repeats, warmup=warmup,
+                                 reduce="min") / 1e6
 
 
 def _walk_scaling(quick: bool, rows: list):
@@ -252,7 +250,8 @@ def run(quick: bool = False):
     scaling = _walk_scaling(quick, rows)
     _JSON_PATH.write_text(json.dumps(dict(
         benchmark="bench_sampling", backend=jax.default_backend(),
-        quick=quick, results=results, scaling=scaling), indent=2) + "\n")
+        quick=quick, telemetry=telemetry_block(),
+        results=results, scaling=scaling), indent=2) + "\n")
     return rows
 
 

@@ -46,6 +46,7 @@ import numpy as np
 from benchmarks.common import emit
 from repro.core.kernels_fn import gaussian
 from repro.core.serving import KernelGraphServable
+from repro.obs.export import telemetry_block
 
 _JSON_PATH = Path(__file__).resolve().parent.parent / "BENCH_serve.json"
 
@@ -80,7 +81,9 @@ def _request_plan(rng, n, d, S, R, ticks):
 
 def _measure(datasets, ker, plan, warmup, level1s, S, R, ticks):
     """Run the served path and the sequential baseline over the SAME
-    request plan; returns (p50_ms, p99_ms, served_rps, seq_rps)."""
+    request plan; returns (p50_ms, p99_ms, served_rps, seq_rps,
+    realized_evals) -- the last read off the servable's device counter
+    words (DESIGN.md §15.1)."""
     srv = KernelGraphServable(max_resident=S)
     for i, x in enumerate(datasets):
         srv.add_tenant(f"t{i}", x, ker, block_size=32,
@@ -131,7 +134,8 @@ def _measure(datasets, ker, plan, warmup, level1s, S, R, ticks):
 
     p50 = float(np.percentile(lat_ms, 50))
     p99 = float(np.percentile(lat_ms, 99))
-    return p50, p99, served_rps, seq_rps
+    return (p50, p99, served_rps, seq_rps,
+            srv.report()["device_counters"]["evals"])
 
 
 def run(quick: bool = False) -> None:
@@ -148,7 +152,7 @@ def run(quick: bool = False) -> None:
 
     # headline: every tenant shares the blocked static config, so the
     # whole tick collapses to one program per (op, bucket)
-    p50, p99, served_rps, seq_rps = _measure(
+    p50, p99, served_rps, seq_rps, evals = _measure(
         datasets, ker, plan, warmup, ["blocked"] * S, S, R, ticks)
     speedup = served_rps / seq_rps
     emit(f"serve_multi_tenant_S{S}_R{R}_n{n}", R * ticks * 1e6 / served_rps,
@@ -157,7 +161,7 @@ def run(quick: bool = False) -> None:
 
     # secondary: half the tenants use hashed level-1 -- their layouts are
     # data-dependent, so they serve in singleton groups (no stacking win)
-    hp50, hp99, h_rps, h_seq = _measure(
+    hp50, hp99, h_rps, h_seq, h_evals = _measure(
         datasets, ker, plan, warmup,
         ["hash" if i % 2 else "blocked" for i in range(S)], S, R, ticks)
     emit(f"serve_hash_mix_S{S}_R{R}_n{n}", R * ticks * 1e6 / h_rps,
@@ -178,7 +182,10 @@ def run(quick: bool = False) -> None:
             "served_requests_per_sec": h_rps,
             "sequential_requests_per_sec": h_seq,
             "throughput_speedup": h_rps / h_seq,
+            "realized_evals": h_evals,
         },
+        "telemetry": telemetry_block(wall_us=1e6 / served_rps,
+                                     realized_evals=evals),
     }
     _JSON_PATH.write_text(json.dumps(payload, indent=2) + "\n")
     print(f"# wrote {_JSON_PATH.name}: {speedup:.1f}x throughput over the "

@@ -36,6 +36,7 @@ from repro.core.sampling.edge import NeighborSampler
 from repro.core.sampling.vertex import DegreeSampler
 from repro.core.sparsify import SparseGraph, spectral_sparsify
 from repro.data.synthetic_points import nested, rings
+from repro.obs.export import telemetry_block
 
 _JSON_PATH = Path(__file__).resolve().parent.parent / "BENCH_sparsify.json"
 
@@ -65,15 +66,12 @@ def _host_loop_edges(deg: DegreeSampler, nbr: NeighborSampler, kernel: Kernel,
 
 
 def _time(fn, repeats=3, warmup=1):
-    """Best-of-N wall time: robust against background load on shared CPUs."""
-    for _ in range(warmup):
-        fn()
-    times = []
-    for _ in range(repeats):
-        t0 = time.perf_counter()
-        fn()
-        times.append(time.perf_counter() - t0)
-    return min(times)
+    """Best-of-N FENCED wall seconds via ``obs.Timer`` (the return value
+    of ``fn`` is ``block_until_ready``'d before the clock stops); min is
+    robust against background load on shared CPUs."""
+    from repro.obs.metrics import Timer
+    return Timer("bench").timeit(fn, repeats=repeats, warmup=warmup,
+                                 reduce="min") / 1e6
 
 
 def _spectral_error(g: SparseGraph, l_true: np.ndarray, probes: int = 24,
@@ -172,7 +170,8 @@ def _engine(quick: bool):
                       ok=counters_ok)))
     _JSON_PATH.write_text(json.dumps(dict(
         benchmark="bench_sparsify", backend=jax.default_backend(),
-        quick=quick, results=results), indent=2) + "\n")
+        quick=quick, telemetry=telemetry_block(),
+        results=results), indent=2) + "\n")
     return rows
 
 

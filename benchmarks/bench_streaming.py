@@ -34,6 +34,7 @@ from repro.core.dataset import DynamicDataset
 from repro.core.kernels_fn import gaussian
 from repro.core.sampling.edge import NeighborSampler
 from repro.core.sampling.vertex import DegreeSampler
+from repro.obs.export import telemetry_block
 
 _JSON_PATH = Path(__file__).resolve().parent.parent / "BENCH_streaming.json"
 
@@ -140,6 +141,7 @@ def run(quick: bool = False) -> None:
         "streaming_sec_per_batch": t_stream / batches,
         "rebuild_sec_per_batch": t_rebuild / batches,
         "speedup": speedup,
+        "telemetry": telemetry_block(wall_us=1e6 * t_stream / batches),
     }
     _JSON_PATH.write_text(json.dumps(payload, indent=2) + "\n")
     print(f"# wrote {_JSON_PATH.name}: {speedup:.1f}x update throughput "

@@ -1,22 +1,22 @@
 """Shared benchmark utilities.  Every benchmark prints CSV rows:
-``name,us_per_call,derived`` (derived = benchmark-specific metric)."""
+``name,us_per_call,derived`` (derived = benchmark-specific metric).
+
+Timing routes through ``obs.Timer`` (DESIGN.md §15.2): the timed
+callable's return value is ``jax.block_until_ready``'d before the clock
+stops, so every number is realized device time, never an async-dispatch
+tail.  Callables that already fence internally (``np.asarray`` on the
+result) pay only a no-op re-fence."""
 from __future__ import annotations
 
-import time
-from typing import Callable, List, Tuple
+from typing import Callable
+
+from repro.obs.metrics import Timer
 
 
-def timeit(fn: Callable, repeats: int = 3, warmup: int = 1) -> float:
-    """Median wall time in microseconds."""
-    for _ in range(warmup):
-        fn()
-    times = []
-    for _ in range(repeats):
-        t0 = time.perf_counter()
-        fn()
-        times.append((time.perf_counter() - t0) * 1e6)
-    times.sort()
-    return times[len(times) // 2]
+def timeit(fn: Callable, repeats: int = 3, warmup: int = 1,
+           name: str = "bench") -> float:
+    """Median FENCED wall time in microseconds (``obs.Timer``)."""
+    return Timer(name).timeit(fn, repeats=repeats, warmup=warmup)
 
 
 def emit(name: str, us: float, derived) -> str:

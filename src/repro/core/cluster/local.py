@@ -77,8 +77,10 @@ def same_cluster_test(x, kernel, u: int, w: int, walk_length: int,
         ends, _ = sampler.walk(starts, walk_length)
         signs = np.concatenate([np.ones(r_u, np.float32),
                                 -np.ones(r_w, np.float32)])
-        sq = float(sampler._ops.signed_endpoint_stat(
-            jnp.asarray(ends, jnp.int32), jnp.asarray(signs), n=n))
+        sq_dev, cw = sampler._ops.signed_endpoint_stat(
+            jnp.asarray(ends, jnp.int32), jnp.asarray(signs), n=n)
+        sampler._note(cw, "same_cluster_test")
+        sq = float(sq_dev)
         # CDVV14: z = sum (X_i - Y_i)^2 - X_i - Y_i; sum X_i = r_u etc.
         stat = (sq - r_u - r_w) / float(num_walks) ** 2
     else:  # tree-mode fallback: host walks + host counts

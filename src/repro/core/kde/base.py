@@ -36,6 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.kernels_fn import Kernel
+from repro.obs import counters as _c
 
 
 @functools.partial(jax.jit, static_argnames=("pairwise",))
@@ -71,7 +72,10 @@ class KDEBase:
         self.kernel = kernel
         self.n = int(x.shape[0])
         self.d = int(x.shape[1])
-        self.evals = 0  # number of kernel evaluations performed
+        self.evals = 0  # number of kernel evaluations performed (analytic)
+        # realized device-side totals (DESIGN.md §15.1), folded from the
+        # counter words of every fused program this estimator runs
+        self.device_counters = _c.HostTotals()
         self.precision = precision
         if precision != "f32":
             from repro.kernels.kde_sampler.ref import (check_precision,
@@ -187,9 +191,11 @@ class StratifiedKDE(KDEBase):
         from repro.kernels.kde_sampler import ops as sampler_ops
         y = jnp.asarray(y, jnp.float32)
         self.evals += y.shape[0] * self.num_blocks * self.samples_per_block
-        return sampler_ops.stratified_block_sums(
+        bs, cw = sampler_ops.stratified_block_sums(
             y, self.x, self.x_sq, self._split(), s=self.samples_per_block,
             **self._static_cfg())
+        self.device_counters.note(cw)
+        return bs
 
     def query(self, y: jnp.ndarray) -> jnp.ndarray:
         """Stratified row-sum estimates; m*B*s evals per call."""
@@ -224,8 +230,10 @@ class ExactBlockKDE(StratifiedKDE):
                                        bn=self.block_size,
                                        precision=self.precision)
         from repro.kernels.kde_sampler import ops as sampler_ops
-        return sampler_ops.exact_block_sums(y, self.x, self.x_sq,
-                                            **self._static_cfg())
+        bs, cw = sampler_ops.exact_block_sums(y, self.x, self.x_sq,
+                                              **self._static_cfg())
+        self.device_counters.note(cw)
+        return bs
 
 
 def make_estimator(name: str, x, kernel: Kernel, seed: int = 0,

@@ -31,6 +31,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.kernels_fn import Kernel
 from repro.kernels.kde_sampler import sharded as _sh
+from repro.obs import counters as _c
 
 
 def sharded_kde_query(mesh: Mesh, kernel: Kernel,
@@ -116,6 +117,9 @@ class ShardedKDE:
         self.samples_per_block = self.engine.samples_per_block
         self.exact = bool(exact)
         self.evals = 0
+        # realized device totals folded from the engine's counter words
+        # (DESIGN.md §15.1; counts include the sentinel-padded sweeps)
+        self.device_counters = _c.HostTotals()
         self._key = jax.random.PRNGKey(seed)
 
     def _split(self) -> jnp.ndarray:
@@ -141,7 +145,9 @@ class ShardedKDE:
         sweep + one psum (Section 3)."""
         y = jnp.asarray(y, jnp.float32)
         self.evals += self._query_evals(y.shape[0])
-        return self.engine.kde_query(y, self._split())
+        est, cw = self.engine.kde_query(y, self._split())
+        self.device_counters.note(cw)
+        return est
 
     def query1(self, y: jnp.ndarray) -> float:
         """Single-point convenience wrapper around ``query``."""
@@ -155,8 +161,9 @@ class ShardedKDE:
         host loop); both subtract the kernel's actual diagonal."""
         if self.exact:
             self.evals += self.n * self.n
-            return np.asarray(self.engine.degrees_ring(self.kernel),
-                              np.float64)
+            deg, cw = self.engine.degrees_ring(self.kernel)
+            self.device_counters.note(cw)
+            return np.asarray(deg, np.float64)
         from repro.kernels.kde_sampler.ref import BUILTIN_KINDS
         total = np.zeros(self.n, np.float64)
         for lo in range(0, self.n, batch):

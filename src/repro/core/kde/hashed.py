@@ -176,7 +176,13 @@ class HashedKDE(KDEBase):
         return k
 
     def _note(self, st) -> int:
-        s = int(np.uint32(jax.device_get(st)))
+        """Fold one program return -- a counter word or a legacy scalar
+        status -- into the guard state and ``device_counters``."""
+        from repro.obs import counters as _c
+        if _c.is_word(st):
+            s = self.device_counters.note(jax.device_get(st))
+        else:
+            s = int(np.uint32(jax.device_get(st)))
         self.last_status = s
         self.status |= s
         _g.count_flags(self.flag_counts, s)

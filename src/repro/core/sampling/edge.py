@@ -51,6 +51,7 @@ from repro.core.kde.base import ExactBlockKDE, StratifiedKDE
 from repro.core.kde.multilevel import MultiLevelKDE
 from repro.core.kernels_fn import Kernel
 from repro.ft import guards as _g
+from repro.obs import counters as _c
 
 # Flags a healthy pipeline may legitimately raise: truncated buckets and
 # heavy HT samples are accuracy (not validity) signals, and rejection
@@ -126,6 +127,11 @@ class NeighborSampler:
         # (DESIGN.md §11); rejection-fallback accounting for Theorem 4.12.
         self.status = 0
         self.flag_counts: Counter = Counter()
+        # realized device totals (DESIGN.md §15.1): every fused program's
+        # counter word folds in through ``_note``; ``device_counters
+        # ["evals"]`` reconciles against the analytic ``.evals`` on the
+        # flat blocked/exact pipelines (asserted in tests)
+        self.device_counters = _c.HostTotals()
         self.exact_draws = 0
         self.exact_fallbacks = 0
         self._engine = None
@@ -260,9 +266,13 @@ class NeighborSampler:
         return k
 
     def _note(self, st, context: str) -> int:
-        """Fold one program's status word into the counters, then apply
-        the ``REPRO_CHECKS`` policy (fatal flags raise, benign ones pass)."""
-        s = int(np.uint32(jax.device_get(st)))
+        """Fold one program's counter word (or a legacy scalar status)
+        into the counters, then apply the ``REPRO_CHECKS`` policy (fatal
+        flags raise, benign ones pass)."""
+        if _c.is_word(st):
+            s = self.device_counters.note(jax.device_get(st))
+        else:
+            s = int(np.uint32(jax.device_get(st)))
         self.status |= s
         _g.count_flags(self.flag_counts, s)
         _g.raise_on_status(s, context=context, allow=_BENIGN)
@@ -339,7 +349,7 @@ class NeighborSampler:
                                   np.asarray(slots, np.int64)).size:
                     self._l1_cache = None   # frontier row itself mutated
                 else:
-                    bs = self._ops.patch_block_sums(
+                    bs, cw = self._ops.patch_block_sums(
                         bs, self.x, jnp.asarray(src32),
                         jnp.asarray(slots), jnp.asarray(old_x, jnp.float32),
                         jnp.asarray(new_x, jnp.float32),
@@ -348,6 +358,7 @@ class NeighborSampler:
                         pairwise=self._cfg["pairwise"],
                         block_size=self.block_size)
                     self._count(2 * len(src32) * len(slots))
+                    self._note(cw, "NeighborSampler.sync")
                     self._l1_cache = (dig, bs, src32)
         if self._hash is not None:
             self._hash._sync()
@@ -377,8 +388,17 @@ class NeighborSampler:
     # blocked mode: fused device engine
     def _level1_evals(self, w: int) -> int:
         if self.level1 == "hash":
-            return w * (self._hash.max_bucket
-                        + self.num_blocks * self._cfg["num_far"])
+            # the frontier gather sweeps the realized bucket-member width,
+            # the streaming overflow region (previously omitted -- the
+            # host counter drifted below the device word on streaming
+            # hash pipelines), and far_per_block FAR slots per block --
+            # the same static shapes the device counter word is built from
+            mb = (int(self._hstate.members.shape[1])
+                  if self._hstate is not None else self._hash.max_bucket)
+            ov = (int(self._hstate.overflow.shape[0])
+                  if self._hstate is not None
+                  and self._hstate.overflow is not None else 0)
+            return w * (mb + ov + self.num_blocks * self._cfg["num_far"])
         if self.exact_blocks:
             return w * self.n
         return w * self.num_blocks * self._cfg["s"]
@@ -395,13 +415,15 @@ class NeighborSampler:
         if self._l1_cache is not None and self._l1_cache[0] == dig:
             return self._l1_cache[1]
         if self._engine is not None:
-            bs = self._engine.masked_block_sums(src_dev, self._next_key())
+            bs, cw = self._engine.masked_block_sums(src_dev,
+                                                    self._next_key())
         else:
-            bs = self._ops.masked_block_sums(self.x, self.x_sq, src_dev,
-                                             self._next_key(),
-                                             hstate=self._hstate,
-                                             **self._cfg)
+            bs, cw = self._ops.masked_block_sums(self.x, self.x_sq, src_dev,
+                                                 self._next_key(),
+                                                 hstate=self._hstate,
+                                                 **self._cfg)
         self._count(self._level1_evals(len(src32)))
+        self._note(cw, "NeighborSampler.level1")
         self._l1_cache = (dig, bs, src32)
         return bs
 
@@ -449,13 +471,14 @@ class NeighborSampler:
         src_dev = jnp.asarray(src32)
         bs = self._level1(src32, src_dev)
         if self._engine is not None:
-            out = self._engine.prob_of_from_block_sums(
+            out, cw = self._engine.prob_of_from_block_sums(
                 src_dev, jnp.asarray(dst, jnp.int32), bs)
         else:
-            out = self._ops.prob_of_from_block_sums(
+            out, cw = self._ops.prob_of_from_block_sums(
                 self.x, self.x_sq, src_dev, jnp.asarray(dst, jnp.int32), bs,
                 **self._l2_cfg)
         self._count(len(src) * self.block_size)
+        self._note(cw, "NeighborSampler.prob_of")
         return np.asarray(out)
 
     # ------------------------------------------------------------------ #
@@ -686,10 +709,16 @@ class NeighborSampler:
             wbs, w_blocks, s_eff = self._ops.walk_layout(
                 self.n, self.block_size, self.num_blocks, self._cfg["s"])
             per_step = w * w_blocks * s_eff + w * wbs
+            if exact:
+                # rejection rounds run on the walk-resident layout too:
+                # level-2 rows are wbs wide, not block_size (the old
+                # block_size term drifted above the device word whenever
+                # tuning picked a different walk block size)
+                per_step += rounds * (w * wbs + w)
         else:
             per_step = self._level1_evals(w) + w * self.block_size
-        if exact:
-            per_step += rounds * (w * self.block_size + w)
+            if exact:
+                per_step += rounds * (w * self.block_size + w)
         self._count(length * per_step)
         self._l1_cache = None  # frontier moved; cached sums are stale
         self._note(st, "NeighborSampler.walk")

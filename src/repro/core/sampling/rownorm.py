@@ -143,13 +143,16 @@ class RowNormSampler:
                 coalesce_mutations(batches)
             c = float(self.kernel.squaring_constant)
             from repro.kernels.kde_sampler import ops as _ops
-            d = np.asarray(_ops.degree_delta(
+            d, cw = _ops.degree_delta(
                 jnp.asarray(self.row_norms_sq, jnp.float32), xs, xs_sq,
                 jnp.asarray(slots),
                 jnp.asarray(old_x, jnp.float32) * c,
                 jnp.asarray(new_x, jnp.float32) * c,
                 jnp.asarray(old_live), jnp.asarray(new_live),
-                **self._row_cfg), np.float64)
+                **self._row_cfg)
+            d = np.asarray(d, np.float64)
+            if hasattr(self._est, "device_counters"):
+                self._est.device_counters.note(cw)
             # degree_delta recomputes mutated rows as row sum MINUS the
             # self kernel; row norms keep the diagonal (k(x,x)^2 = 1)
             sl = np.asarray(slots)
@@ -188,9 +191,12 @@ class RowNormSampler:
         sel = jnp.asarray(np.ascontiguousarray(idx, np.int32))
         self._row_evals += len(idx) * self.n
         if self._rows_engine is not None:
-            return np.asarray(self._rows_engine.kernel_rows(self.x[sel]))
-        out = sampler_ops.kernel_rows(self.x[sel], self.x, self.x_sq,
-                                      **self._row_cfg)
+            out, cw = self._rows_engine.kernel_rows(self.x[sel])
+        else:
+            out, cw = sampler_ops.kernel_rows(self.x[sel], self.x,
+                                              self.x_sq, **self._row_cfg)
+        if hasattr(self._est, "device_counters"):
+            self._est.device_counters.note(cw)
         return np.asarray(out)
 
     def sketch_rows(self, idx: np.ndarray) -> np.ndarray:

@@ -238,15 +238,18 @@ class DegreeSampler:
             from repro.kernels.kde_sampler import ops as _ops
             from repro.kernels.kde_sampler.ref import static_pairwise
             k = est.kernel
-            d = np.asarray(_ops.degree_delta(
+            d, cw = _ops.degree_delta(
                 jnp.asarray(self.degrees, jnp.float32), x, x_sq,
                 jnp.asarray(slots), jnp.asarray(old_x, jnp.float32),
                 jnp.asarray(new_x, jnp.float32),
                 jnp.asarray(old_live), jnp.asarray(new_live),
                 kind=k.name, inv_bw=1.0 / k.bandwidth,
                 beta=getattr(k, "beta", 1.0),
-                pairwise=static_pairwise(k)), np.float64)
+                pairwise=static_pairwise(k))
+            d = np.asarray(d, np.float64)
             est.evals += 2 * len(np.asarray(slots)) * len(d)
+            if hasattr(est, "device_counters"):
+                est.device_counters.note(cw)
             live = np.zeros(len(d), bool)
             live[np.asarray(ds.live_slots())] = True
             self.degrees = np.where(live, np.maximum(d, 1e-12), 0.0)

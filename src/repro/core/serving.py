@@ -68,6 +68,8 @@ from repro.core.dataset import DynamicDataset
 from repro.core.kernels_fn import Kernel
 from repro.core.sampling.edge import _BENIGN, NeighborSampler
 from repro.ft import guards as _g
+from repro.obs import counters as _c
+from repro.obs import metrics as _m
 
 #: ops a request may name, and the payload key(s) each one takes
 REQUEST_OPS = ("query", "sample", "walk", "prob_of")
@@ -309,6 +311,9 @@ class KernelGraphServable:
         self.failed = 0
         self.status = 0
         self.flag_counts: Counter = Counter()
+        # realized device totals folded from every served group's counter
+        # words (DESIGN.md §15.1) -- the serving-side eval budget ledger
+        self.device_counters = _c.HostTotals()
 
     # ------------------------------------------------------------------ #
     # tenant lifecycle
@@ -404,10 +409,12 @@ class KernelGraphServable:
         reqs, self._queue = self._queue, []
         t0 = time.perf_counter()
         adm0, ev0 = self.admissions, self.evictions
+        evals0 = self.device_counters["evals"]
         stats = dict(requests=len(reqs), groups=0, served=0, failed=0,
                      stale=0)
         if not reqs:
-            stats.update(admissions=0, evictions=0, tick_ms=0.0)
+            stats.update(admissions=0, evictions=0, tick_ms=0.0,
+                         realized_evals=0)
             return stats
         needed = {r.tenant for r in reqs}
         admit_errors: dict = {}
@@ -457,8 +464,25 @@ class KernelGraphServable:
         self.ticks += 1
         stats.update(admissions=self.admissions - adm0,
                      evictions=self.evictions - ev0,
-                     tick_ms=1e3 * (time.perf_counter() - t0))
+                     tick_ms=1e3 * (time.perf_counter() - t0),
+                     realized_evals=self.device_counters["evals"] - evals0)
+        if _m.enabled():
+            self._record_metrics(reqs, stats)
         return stats
+
+    def _record_metrics(self, reqs, stats) -> None:
+        """Per-tenant / per-op latency histograms plus tick counters into
+        the obs registry (DESIGN.md §15.3); called only while the registry
+        is enabled, so the disabled-mode tick cost is one branch."""
+        for r in reqs:
+            if r.finished is not None:
+                _m.observe(f"serve.latency.{r.tenant}.{r.op}.us",
+                           (r.finished - r.submitted) * 1e6)
+        for k in ("served", "failed", "stale", "admissions", "evictions",
+                  "realized_evals"):
+            _m.counter_inc(f"serve.{k}", stats[k])
+        _m.observe("serve.tick.us", stats["tick_ms"] * 1e3)
+        _m.gauge_set("serve.resident", float(len(self._lru)))
 
     # ------------------------------------------------------------------ #
     @staticmethod
@@ -543,6 +567,11 @@ class KernelGraphServable:
     def _scatter(self, grp, results, statuses):
         """Slice each request's lanes out of the padded batch outputs and
         fan the per-request status words through the checks policy."""
+        if _c.is_word(statuses):
+            # batched (R, WIDTH) counter words, one row per request: fold
+            # the realized device work into the serving ledger before the
+            # status fan-out (DESIGN.md §15.1)
+            self.device_counters.note(statuses)
         ctxs = [f"serve:{r.op}:{r.tenant}" for r in grp]
         words, errors = _g.raise_per_request(statuses, ctxs, allow=_BENIGN)
         now = time.perf_counter()
@@ -644,7 +673,7 @@ class KernelGraphServable:
                                                  slack=2.0,
                                                  record_path=False)
                 res.append((np.asarray(end), None))
-                words.append(np.uint32(st))
+                words.append(np.asarray(st, np.uint32))
             self._scatter(grp, res, np.asarray(words))
             return
         if op == "query":
@@ -669,7 +698,7 @@ class KernelGraphServable:
             jnp.int32)
         offs = np.cumsum([0] + widths)
         if op == "sample":
-            nb, prob, _, st = engine.fused_sample(src, key0)
+            nb, prob, _, cw = engine.fused_sample(src, key0)
             nb, prob = np.asarray(nb), np.asarray(prob)
             res = [(nb[offs[i]:offs[i + 1]], prob[offs[i]:offs[i + 1]])
                    for i in range(len(grp))]
@@ -677,15 +706,19 @@ class KernelGraphServable:
             dst = jnp.asarray(np.concatenate(
                 [np.asarray(r.payload["dst"]).reshape(-1) for r in grp]),
                 jnp.int32)
-            bs = engine.masked_block_sums(src, key0)
-            prob_dev = engine.prob_of_from_block_sums(src, dst, bs)
-            # masked_block_sums carries no status word (no collective, no
-            # draw); flag the read itself -- NONFINITE_RESULT on NaN/Inf
-            st = _g.result_status(prob_dev)
+            bs, cw = engine.masked_block_sums(src, key0)
+            prob_dev, cw2 = engine.prob_of_from_block_sums(src, dst, bs)
+            # fold the level-1 read word into the prob-of word and flag
+            # the read itself -- NONFINITE_RESULT on NaN/Inf
+            cw = _c.fold_status(_c.fold(cw, cw2),
+                                _g.result_status(prob_dev))
             prob = np.asarray(prob_dev)
             res = [prob[offs[i]:offs[i + 1]] for i in range(len(grp))]
-        word = np.uint32(st)
-        self._scatter(grp, res, np.full(len(grp), word, np.uint32))
+        # ONE counter word covers the whole concatenated draw batch: note
+        # it once (replicating it per request would multiply-count the
+        # realized work) and fan only its status bits out to the group
+        st = self.device_counters.note(cw)
+        self._scatter(grp, res, np.full(len(grp), np.uint32(st), np.uint32))
 
     # ------------------------------------------------------------------ #
     def report(self) -> dict:
@@ -696,4 +729,5 @@ class KernelGraphServable:
                     resident=[n for n in self._lru],
                     tenants=len(self._tenants),
                     flags=_g.decode_status(self.status),
-                    flag_counts=dict(self.flag_counts))
+                    flag_counts=dict(self.flag_counts),
+                    device_counters=self.device_counters.as_dict())

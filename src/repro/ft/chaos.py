@@ -24,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.ft import guards
+from repro.obs import metrics as _m
 
 # ------------------------------------------------------------- injectors
 
@@ -364,9 +365,15 @@ SURVIVE_OK = frozenset((
 
 
 def run_scenario(name: str, seed: int = 0) -> Dict:
-    """Run one registered scenario; returns the outcome dict."""
+    """Run one registered scenario; returns the outcome dict.  Injection
+    and outcome flow through the obs event ring (DESIGN.md §15.2) so a
+    chaos campaign is auditable from the same registry as the metrics."""
     rng = np.random.default_rng(seed)
-    return _outcome(lambda: SCENARIOS[name](rng))
+    _m.event("chaos.inject", scenario=name, seed=seed)
+    out = _outcome(lambda: SCENARIOS[name](rng))
+    _m.event("chaos.outcome", scenario=name, detected=out["detected"],
+             survived=out["survived"])
+    return out
 
 
 def run_all(seed: int = 0) -> Dict[str, Dict]:

@@ -71,9 +71,25 @@ RETRYABLE = REJECT_EXHAUSTED | HT_HEAVY
 FATAL = NONFINITE | ZERO_MASS | STATE_CORRUPT | NONFINITE_RESULT
 
 
+def host_status(status) -> int:
+    """Host-side status coercion: python ints and scalar uint32 statuses
+    pass through; PR-10 counter words (trailing dim == ``obs.WIDTH``)
+    read slot 0; batches of either or-fold over the batch axis."""
+    if isinstance(status, (int, np.integer)):
+        return int(status)
+    arr = np.asarray(jax.device_get(status))
+    if arr.ndim == 0:
+        return int(arr)
+    from repro.obs import counters as _c
+    if arr.shape[-1] == _c.WIDTH:
+        arr = arr[..., _c.STATUS]
+    return int(np.bitwise_or.reduce(arr.astype(np.uint32).reshape(-1)))
+
+
 def decode_status(status) -> list:
-    """Human-readable flag names set in an integer/array status word."""
-    s = int(np.asarray(status))
+    """Human-readable flag names set in an integer/array status word (or
+    in slot 0 of a counter word)."""
+    s = host_status(status)
     return [name for bit, name in STATUS_NAMES.items() if s & bit]
 
 
@@ -103,8 +119,9 @@ def raise_on_status(status, context: str = "", allow: int = 0) -> int:
     Returns the (python int) status word either way so callers can
     accumulate it into their counters.  ``allow`` masks flags that the
     caller handles itself (e.g. a sampler that counts rejection fallbacks).
+    Accepts scalar statuses and PR-10 counter words alike.
     """
-    s = int(np.asarray(status))
+    s = host_status(status)
     bad = s & ~allow
     if bad and checks_enabled():
         raise EstimationError(
@@ -123,8 +140,13 @@ def raise_per_request(statuses, contexts, allow: int = 0):
     when the request is clean or checks are off).  Never raises itself:
     one poisoned request must not take down the other R-1 lanes of a
     serving tick -- the servable attaches each error to its one request.
+    Accepts an (R,) scalar-status vector or an (R, obs.WIDTH) stack of
+    counter words (slot 0 is the per-request status).
     """
     arr = np.asarray(jax.device_get(jnp.asarray(statuses, jnp.uint32)))
+    if arr.ndim == 2:                       # (R, WIDTH) counter words
+        from repro.obs import counters as _c
+        arr = arr[:, _c.STATUS]
     arr = arr.reshape(-1)
     on = checks_enabled()
     out, errors = [], []
@@ -142,7 +164,7 @@ def raise_per_request(statuses, contexts, allow: int = 0):
 
 def count_flags(counter: dict, status) -> dict:
     """Accumulate per-flag event counts into ``counter`` (name -> int)."""
-    s = int(np.asarray(status))
+    s = host_status(status)
     for bit, name in STATUS_NAMES.items():
         if s & bit:
             counter[name] = counter.get(name, 0) + 1
@@ -330,11 +352,11 @@ class RobustEstimator:
             except EstimationError:
                 if last:
                     raise
-                status = int(np.asarray(getattr(stage, "status", 0)))
+                status = host_status(getattr(stage, "status", 0))
                 self.status |= status
                 count_flags(self.flag_counts, status)
                 continue                    # escalate every pending row
-            status = int(np.asarray(getattr(stage, "last_status", 0)))
+            status = host_status(getattr(stage, "last_status", 0))
             bad = self._bad_rows(vals)
             if (status & FATAL) and not last:
                 # batch-level corruption: per-row values may LOOK sane
@@ -351,8 +373,7 @@ class RobustEstimator:
                     vals[redo] = np.asarray(
                         stage.query(y[jnp.asarray(pending[redo])]),
                         np.float64)
-                    status |= int(np.asarray(getattr(stage,
-                                                     "last_status", 0)))
+                    status |= host_status(getattr(stage, "last_status", 0))
                 except EstimationError:
                     pass                    # retry failed too -> escalate
                 bad = self._bad_rows(vals)

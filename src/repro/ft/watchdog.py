@@ -13,6 +13,8 @@ import dataclasses
 import time
 from typing import Dict, List, Optional
 
+from repro.obs import metrics as _m
+
 
 @dataclasses.dataclass
 class HostStats:
@@ -43,6 +45,8 @@ class Watchdog:
                      else self.alpha * step_time_s + (1 - self.alpha) * st.ewma_s)
         st.steps += 1
         st.last_beat = now if now is not None else time.monotonic()
+        _m.event("watchdog.beat", host=host, step_time_s=step_time_s,
+                 ewma_s=st.ewma_s)
 
     def median_ewma(self) -> float:
         vals = sorted(s.ewma_s for s in self.stats.values() if s.steps > 0)
@@ -60,4 +64,6 @@ class Watchdog:
                 dead.append(h)
             elif st.steps > 0 and med > 0 and st.ewma_s > self.factor * med:
                 stragglers.append(h)
+        _m.event("watchdog.decide", stragglers=stragglers, dead=dead,
+                 median_ewma_s=med)
         return {"stragglers": stragglers, "dead": dead}

@@ -33,6 +33,7 @@ from repro.kernels.kde_hash import kernel as _k
 from repro.kernels.kde_hash import ref as _ref
 from repro.kernels.kde_sampler import ops as _sops
 from repro.kernels.kde_sampler.ref import BLOCK_SUM_FLOOR, BUILTIN_KINDS
+from repro.obs import counters as _c
 
 TRACE_COUNTS = _sops.TRACE_COUNTS
 
@@ -181,9 +182,9 @@ def _weighted_pass(q, xr, wgt, *, kind, inv_bw, beta, pairwise, use_pallas,
 def hashed_query(x, y, state, key, *, kind, inv_bw, beta, pairwise,
                  cell_width, num_far, n, use_pallas=False, interpret=False,
                  bm=32, precision="f32"):
-    """(m,) row-sum estimates + (m,) realized NEAR eval counts + a status
-    bitmask -- the Definition 1.1 read at O(max_bucket + num_far) evals
-    per query.  The status flags bucket truncation, out-of-range member
+    """(m,) row-sum estimates + (m,) realized NEAR eval counts + a counter
+    word -- the Definition 1.1 read at O(max_bucket + num_far) evals
+    per query.  The word's status slot flags bucket truncation, out-of-range member
     indices (JAX gathers clamp, so corruption is otherwise silent), and a
     Horvitz-Thompson FAR sample dominating the estimate (on the jnp path
     per element against ``REPRO_HT_FRAC``; the Pallas kernel only sees the
@@ -214,7 +215,15 @@ def hashed_query(x, y, state, key, *, kind, inv_bw, beta, pairwise,
                   _g.flag_if(jnp.any(trunc), _g.BUCKET_OVERFLOW),
                   _g.flag_if(heavy, _g.HT_HEAVY),
                   _g.result_status(est))
-    return est, cnt, st
+    # realized gather width per query row (ref.query_gather): max_bucket
+    # NEAR slots + the overflow sweep + num_far HT samples
+    m = y.shape[0]
+    ov = (int(state.overflow.shape[0])
+          if state.overflow is not None else 0)
+    mb = int(state.members.shape[1])
+    cw = _c.word(status=st, evals=m * (mb + ov + num_far), l1_reads=m,
+                 far_samples=m * num_far, overflow=m * ov)
+    return est, cnt, cw
 
 
 def _hashed_block_sums(x, src, state, key, *, kind, inv_bw, beta, pairwise,
@@ -247,13 +256,24 @@ def hashed_block_sums(x, src, state, key, *, kind, inv_bw, beta, pairwise,
     """(w, B) §2-contract level-1 estimates of a dataset frontier from
     O(max_bucket + B num_far) evals per row: exact NEAR scatter +
     ``num_far`` stratified FAR slots per block (the ``level1="hash"``
-    read; DESIGN.md §10).  Returns ``(block sums, status bitmask)``."""
+    read; DESIGN.md §10).  Returns ``(block sums, counter word)``."""
     TRACE_COUNTS["hashed_block_sums"] += 1
-    return _hashed_block_sums(x, src, state, key, kind=kind, inv_bw=inv_bw,
-                              beta=beta, pairwise=pairwise, num_far=num_far,
-                              block_size=block_size, num_blocks=num_blocks,
-                              n=n, use_pallas=use_pallas, interpret=interpret,
-                              bm=bm, precision=precision)
+    bs, st = _hashed_block_sums(x, src, state, key, kind=kind, inv_bw=inv_bw,
+                                beta=beta, pairwise=pairwise,
+                                num_far=num_far, block_size=block_size,
+                                num_blocks=num_blocks, n=n,
+                                use_pallas=use_pallas, interpret=interpret,
+                                bm=bm, precision=precision)
+    # realized gather width per frontier row (ref.frontier_gather):
+    # max_bucket NEAR slots + the overflow sweep + B*num_far FAR slots
+    w = src.shape[0]
+    ov = (int(state.overflow.shape[0])
+          if state.overflow is not None else 0)
+    mb = int(state.members.shape[1])
+    far = int(num_blocks) * int(num_far)
+    cw = _c.word(status=st, evals=w * (mb + ov + far), l1_reads=w,
+                 far_samples=w * far, overflow=w * ov)
+    return bs, cw
 
 
 # --------------------------------------------------------------------- #
@@ -290,9 +310,9 @@ def batched_hashed_query(xa, tidx, y, state, keys, *, kind, inv_bw, beta,
     ONE program: ``xa (T, n, d)`` stacked tenant rows, ``state`` a
     :func:`stack_hash_states` pytree, ``y (R, q, d)`` padded query points,
     ``keys (R, 2)`` per-request PRNG keys.  Returns (estimates (R, q),
-    NEAR eval counts (R, q), per-request status words (R,)) -- each lane
-    is ``hashed_query`` on its own tenant and key, so estimates match the
-    sequential single-tenant calls."""
+    NEAR eval counts (R, q), per-request counter words (R, obs.WIDTH)) --
+    each lane is ``hashed_query`` on its own tenant and key, so estimates
+    match the sequential single-tenant calls."""
     TRACE_COUNTS["batched_hashed_query"] += 1
 
     def one(ti, y_r, key_r):

@@ -39,6 +39,7 @@ from repro.kernels.kde_hash import ref as _ref
 from repro.kernels.kde_rowsum.ops import _PAD_OFFSET
 from repro.kernels.kde_sampler.ref import static_pairwise
 from repro.kernels.kde_sampler.sharded import _flat_index
+from repro.obs import counters as _c
 
 TRACE_COUNTS = _ops.TRACE_COUNTS
 
@@ -276,11 +277,12 @@ class ShardedHashTable:
 
     def query(self, y, key):
         """(m,) replicated row-sum estimates + (m,) NEAR eval counts + a
-        status bitmask: local NEAR lookup + local FAR partials, then
-        exactly ONE psum (Definition 1.1 over the sharded hashed table).
-        The status is computed from replicated/static values only --
-        build-time bucket overflow, the static per-shard HT weight bound,
-        and non-finite estimates -- so the collective schedule is
+        counter word: local NEAR lookup + local FAR partials, then
+        exactly ONE psum (Definition 1.1 over the sharded hashed table;
+        PSUMS slot = 1).  The word is assembled host-side from
+        replicated/static values only -- build-time bucket overflow, the
+        static per-shard HT weight bound, non-finite estimates, and the
+        static per-shard gather width -- so the collective schedule is
         untouched."""
         est, cnt = self._program()(
             self._keys, self._members, self._counts, self._overflow,
@@ -296,7 +298,14 @@ class ShardedHashTable:
                                         & _g.OVERFLOW_SATURATED)),
                        _g.OVERFLOW_SATURATED),
             _g.result_status(est))
-        return est, cnt, st
+        m = int(jnp.shape(y)[0])
+        mb = int(self._members.shape[-1])
+        per_row = sp.num_shards * (mb + sp.ov_cap + sp.num_far)
+        cw = _c.fold_status(
+            _c.word(evals=m * per_row, l1_reads=m,
+                    far_samples=m * sp.num_shards * sp.num_far,
+                    overflow=m * sp.num_shards * sp.ov_cap, psums=1), st)
+        return est, cnt, cw
 
     # ------------------------------------------------------------------ #
     # streaming patches (DESIGN.md §12)

@@ -32,12 +32,19 @@ Public entry points (all jitted; static config is passed by keyword):
   (DESIGN.md §13): vmap over a request axis with per-request PRNG keys,
   per-request status words, and a stacked tenant arena.
 
-Every sampling / application program additionally returns a ``uint32``
-status bitmask (``repro.ft.guards``): cheap in-program reductions over
-values the program already computed -- NaN/Inf sums, zero-mass rows at the
-``BLOCK_SUM_FLOOR``, rejection exhaustion, CG non-convergence.  Flags are
-advisory; consumers escalate via ``guards.raise_on_status`` under
-``REPRO_CHECKS=1`` (DESIGN.md §11).
+Every sampling / application program additionally returns a ``(obs.WIDTH,)``
+uint32 **counter word** (``repro.obs.counters``, DESIGN.md §15): slot 0 is
+the PR-6 status bitmask (``repro.ft.guards``) -- cheap in-program
+reductions over values the program already computed (NaN/Inf sums,
+zero-mass rows at the ``BLOCK_SUM_FLOOR``, rejection exhaustion, CG
+non-convergence) -- and slots 1+ count the realized device work (kernel
+evals, level-1 reads, draws, rejection retries, FAR samples).  The
+counters are trace-time constants derived from static shapes (plus the
+data-dependent rejection-retry count), so the word costs nothing at run
+time and adds zero collectives; scan programs fold per-step words through
+their carries.  Flags stay advisory; consumers escalate via
+``guards.raise_on_status`` under ``REPRO_CHECKS=1`` (DESIGN.md §11) and
+reconcile the eval counters against the host-side ``.evals`` accounting.
 
 ``TRACE_COUNTS`` increments only while a function is being traced --
 tests use it to certify that repeated calls hit the compiled path.
@@ -56,8 +63,25 @@ from repro.kernels import tuning as _tuning
 from repro.kernels.kde_rowsum.ops import _PAD_OFFSET, _pad_rows
 from repro.kernels.kde_sampler import kernel as _k
 from repro.kernels.kde_sampler import ref as _ref
+from repro.obs import counters as _c
 
 TRACE_COUNTS = collections.Counter()
+
+
+def _l1_cols(level1, exact, num_blocks, s, n, num_far, hstate):
+    """(cols, far, overflow) realized PER FRONTIER ROW by one level-1
+    read -- the static shape products the counter words are built from,
+    mirroring the host accounting in ``core.sampling.edge`` exactly:
+    hashed reads sweep ``max_bucket + overflow_cap`` exact columns plus
+    ``B * num_far`` stratified FAR slots (``ref.frontier_gather``),
+    blocked reads sweep ``n`` (exact) or ``B * s`` (stratified)."""
+    if level1 == "hash":
+        mb = int(hstate.members.shape[1])
+        ov = (int(hstate.overflow.shape[0])
+              if hstate.overflow is not None else 0)
+        far = int(num_blocks) * int(num_far)
+        return mb + ov + far, far, ov
+    return (int(n) if exact else int(num_blocks) * int(s)), 0, 0
 
 # Static (hashable) configuration forwarded to every jitted entry point.
 # ``level1`` selects the frontier read: "blocked" (the §2 depth-2 block
@@ -96,10 +120,15 @@ def stratified_block_sums(y, x, x_sq, key, *, kind, inv_bw, beta, pairwise,
     where ``s_b = min(s, size_b)`` counts only *real* (non-padded) samples:
     the tail block is no longer inflated by duplicated pad indices.  The
     subsample *draw* is precision-independent; only the gathered kernel
-    evals honor ``precision``.
+    evals honor ``precision``.  Returns ``(block sums, counter word)``.
     """
     TRACE_COUNTS["stratified_block_sums"] += 1
     m = y.shape[0]
+
+    def _word(bs):
+        return _c.word(status=_g.nonfinite_status(bs),
+                       evals=m * num_blocks * s, l1_reads=m)
+
     base = jnp.arange(num_blocks, dtype=jnp.int32) * block_size
     u = jax.random.uniform(key, (num_blocks, block_size))
     if n == num_blocks * block_size:
@@ -111,7 +140,8 @@ def stratified_block_sums(y, x, x_sq, key, *, kind, inv_bw, beta, pairwise,
         flat = (base[:, None] + order).reshape(-1)
         kv = _ref.kv_matrix(y, x[flat], x_sq[flat], kind, inv_bw, beta,
                             pairwise, precision=precision)
-        return kv.reshape(m, num_blocks, s).sum(-1) * (block_size / float(s))
+        bs = kv.reshape(m, num_blocks, s).sum(-1) * (block_size / float(s))
+        return bs, _word(bs)
     pos = base[:, None] + jnp.arange(block_size, dtype=jnp.int32)[None, :]
     valid_pos = pos < n
     u = jnp.where(valid_pos, u, jnp.inf)          # invalid slots sort last
@@ -125,7 +155,8 @@ def stratified_block_sums(y, x, x_sq, key, *, kind, inv_bw, beta, pairwise,
     kv = kv.reshape(m, num_blocks, s) * sel_valid[None]
     sizes = jnp.minimum(n - base, block_size).astype(jnp.float32)
     s_b = jnp.minimum(sizes, float(s))
-    return kv.sum(-1) * (sizes / jnp.maximum(s_b, 1.0))[None, :]
+    bs = kv.sum(-1) * (sizes / jnp.maximum(s_b, 1.0))[None, :]
+    return bs, _word(bs)
 
 
 @_jit
@@ -133,18 +164,26 @@ def exact_block_sums(y, x, x_sq, *, kind, inv_bw, beta, pairwise,
                      block_size, num_blocks, n, precision="f32"):
     """Exact (m, B) block sums: one dense vectorized sweep, zero host loops.
     The bf16 policy swaps in the blocked column-tile scan (f32 accumulator,
-    O(m * tile) peak memory) instead of materializing the (m, n) matrix."""
+    O(m * tile) peak memory) instead of materializing the (m, n) matrix.
+    Returns ``(block sums, counter word)``."""
     TRACE_COUNTS["exact_block_sums"] += 1
+    m = y.shape[0]
+
+    def _word(bs):
+        return _c.word(status=_g.nonfinite_status(bs), evals=m * n,
+                       l1_reads=m)
+
     if precision == "bf16":
         _ref.check_precision(precision, kind, pairwise)
-        return _ref.kv_block_sums_bf16(y, x, kind, inv_bw, beta,
-                                       bn=block_size)
-    m = y.shape[0]
+        bs = _ref.kv_block_sums_bf16(y, x, kind, inv_bw, beta,
+                                     bn=block_size)
+        return bs, _word(bs)
     kv = _ref.kv_matrix(y, x, x_sq, kind, inv_bw, beta, pairwise)
     pad = num_blocks * block_size - n
     if pad:
         kv = jnp.pad(kv, ((0, 0), (0, pad)))
-    return kv.reshape(m, num_blocks, block_size).sum(-1)
+    bs = kv.reshape(m, num_blocks, block_size).sum(-1)
+    return bs, _word(bs)
 
 
 def _pallas_pad(x, src, bm, block_size):
@@ -164,16 +203,22 @@ def _masked_block_sums(x, x_sq, src, key, *, kind, inv_bw, beta, pairwise,
     """Level-1 sums for a frontier of dataset indices, own-block corrected
     (k(x, x) = 1 subtracted) and floored -- the cacheable object."""
     q = x[src]
+    # inner counter words are discarded: the public program boundary
+    # (masked_block_sums / fused_sample / ...) rebuilds the counts from
+    # the same static shapes, so nothing is double-counted
     if exact:
-        bs = exact_block_sums(q, x, x_sq, kind=kind, inv_bw=inv_bw, beta=beta,
-                              pairwise=pairwise, block_size=block_size,
-                              num_blocks=num_blocks, n=n, precision=precision)
+        bs, _ = exact_block_sums(q, x, x_sq, kind=kind, inv_bw=inv_bw,
+                                 beta=beta, pairwise=pairwise,
+                                 block_size=block_size,
+                                 num_blocks=num_blocks, n=n,
+                                 precision=precision)
     else:
-        bs = stratified_block_sums(q, x, x_sq, key, kind=kind, inv_bw=inv_bw,
-                                   beta=beta, pairwise=pairwise,
-                                   block_size=block_size,
-                                   num_blocks=num_blocks, n=n, s=s,
-                                   precision=precision)
+        bs, _ = stratified_block_sums(q, x, x_sq, key, kind=kind,
+                                      inv_bw=inv_bw, beta=beta,
+                                      pairwise=pairwise,
+                                      block_size=block_size,
+                                      num_blocks=num_blocks, n=n, s=s,
+                                      precision=precision)
     own = (src // block_size).astype(jnp.int32)
     corr = jnp.arange(num_blocks, dtype=jnp.int32)[None, :] == own[:, None]
     bs = jnp.where(corr, bs - 1.0, bs)
@@ -187,15 +232,19 @@ def masked_block_sums(x, x_sq, src, key, hstate=None, *, kind, inv_bw, beta,
                       level1="blocked", num_far=64, precision="f32"):
     """Level-1 frontier read; dispatches to the Pallas masked-blocksum
     kernel (no Gumbel state) on the exact+Pallas path, or to the hashed
-    read when ``level1="hash"``."""
+    read when ``level1="hash"``.  Returns ``(block sums, counter word)``."""
     TRACE_COUNTS["masked_block_sums"] += 1
-    bs, _ = _masked_sums_any(x, x_sq, src, key, hstate, kind=kind,
-                             inv_bw=inv_bw, beta=beta, pairwise=pairwise,
-                             block_size=block_size, num_blocks=num_blocks,
-                             n=n, s=s, exact=exact, use_pallas=use_pallas,
-                             interpret=interpret, bm=bm, level1=level1,
-                             num_far=num_far, precision=precision)
-    return bs
+    bs, st = _masked_sums_any(x, x_sq, src, key, hstate, kind=kind,
+                              inv_bw=inv_bw, beta=beta, pairwise=pairwise,
+                              block_size=block_size, num_blocks=num_blocks,
+                              n=n, s=s, exact=exact, use_pallas=use_pallas,
+                              interpret=interpret, bm=bm, level1=level1,
+                              num_far=num_far, precision=precision)
+    w = src.shape[0]
+    cols, far, ov = _l1_cols(level1, exact, num_blocks, s, n, num_far,
+                             hstate)
+    return bs, _c.word(status=st, evals=w * cols, l1_reads=w,
+                       far_samples=w * far, overflow=w * ov)
 
 
 # --------------------------------------------------------------------- #
@@ -253,6 +302,7 @@ def _fused_sample(x, x_sq, src, key, hstate=None, *, kind, inv_bw, beta,
                   precision="f32", views=None):
     if views is None:
         views = _block_views(x, x_sq, block_size)
+    w = src.shape[0]
     k_l1, k_rest = jax.random.split(key)
     if level1 == "hash":
         bs, st = _masked_sums_any(x, x_sq, src, k_l1, hstate=hstate,
@@ -265,10 +315,9 @@ def _fused_sample(x, x_sq, src, key, hstate=None, *, kind, inv_bw, beta,
         nb, prob = _sample_core(x, x_sq, views, src, bs, k_rest, kind=kind,
                                 inv_bw=inv_bw, beta=beta, pairwise=pairwise,
                                 block_size=block_size, n=n)
-        return nb, prob, bs, _g.merge(st, _g.result_status(prob))
-    if exact and use_pallas:
+        st = _g.merge(st, _g.result_status(prob))
+    elif exact and use_pallas:
         # Fully fused level-1: block sums + Gumbel-max draw in one Pallas pass.
-        w = src.shape[0]
         k_g, k_in = jax.random.split(k_rest)
         q, own, xp, rem = _pallas_pad(x, src, bm, block_size)
         gp = jnp.pad(jax.random.gumbel(k_g, (w, num_blocks)),
@@ -286,17 +335,23 @@ def _fused_sample(x, x_sq, src, key, hstate=None, *, kind, inv_bw, beta,
         prob = pb * pin
         st = _g.merge(_g.sums_status(bs, _ref.BLOCK_SUM_FLOOR),
                       _g.result_status(prob))
-        return nb, prob, bs, st
-    bs = _masked_block_sums(x, x_sq, src, k_l1, kind=kind, inv_bw=inv_bw,
-                            beta=beta, pairwise=pairwise,
-                            block_size=block_size, num_blocks=num_blocks,
-                            n=n, s=s, exact=exact, precision=precision)
-    nb, prob = _sample_core(x, x_sq, views, src, bs, k_rest, kind=kind,
-                            inv_bw=inv_bw, beta=beta, pairwise=pairwise,
-                            block_size=block_size, n=n)
-    st = _g.merge(_g.sums_status(bs, _ref.BLOCK_SUM_FLOOR),
-                  _g.result_status(prob))
-    return nb, prob, bs, st
+    else:
+        bs = _masked_block_sums(x, x_sq, src, k_l1, kind=kind, inv_bw=inv_bw,
+                                beta=beta, pairwise=pairwise,
+                                block_size=block_size, num_blocks=num_blocks,
+                                n=n, s=s, exact=exact, precision=precision)
+        nb, prob = _sample_core(x, x_sq, views, src, bs, k_rest, kind=kind,
+                                inv_bw=inv_bw, beta=beta, pairwise=pairwise,
+                                block_size=block_size, n=n)
+        st = _g.merge(_g.sums_status(bs, _ref.BLOCK_SUM_FLOOR),
+                      _g.result_status(prob))
+    # one level-1 read of the w-frontier + w exact level-2 rows -- the
+    # host accounting in NeighborSampler.sample, verbatim
+    cols, far, ov = _l1_cols(level1, exact, num_blocks, s, n, num_far,
+                             hstate)
+    cw = _c.word(status=st, evals=w * (cols + block_size), l1_reads=w,
+                 draws=w, far_samples=w * far, overflow=w * ov)
+    return nb, prob, bs, cw
 
 
 @_jit
@@ -305,7 +360,7 @@ def fused_sample(x, x_sq, src, key, hstate=None, *, kind, inv_bw, beta,
                  interpret, bm, level1="blocked", num_far=64,
                  precision="f32"):
     """One depth-2 sampling step: (neighbors, realized probs, level-1 sums,
-    status bitmask)."""
+    counter word)."""
     TRACE_COUNTS["fused_sample"] += 1
     return _fused_sample(x, x_sq, src, key, hstate, kind=kind, inv_bw=inv_bw,
                          beta=beta, pairwise=pairwise, block_size=block_size,
@@ -318,7 +373,7 @@ def fused_sample(x, x_sq, src, key, hstate=None, *, kind, inv_bw, beta,
 def sample_from_block_sums(x, x_sq, src, bs, key, *, kind, inv_bw, beta,
                            pairwise, block_size, n):
     """Depth-2 step reusing cached level-1 sums (no dataset re-sweep).
-    Returns (neighbors, realized probs, status bitmask)."""
+    Returns (neighbors, realized probs, counter word)."""
     TRACE_COUNTS["sample_from_block_sums"] += 1
     views = _block_views(x, x_sq, block_size)
     nb, prob = _sample_core(x, x_sq, views, src, bs, key, kind=kind,
@@ -326,7 +381,8 @@ def sample_from_block_sums(x, x_sq, src, bs, key, *, kind, inv_bw, beta,
                             block_size=block_size, n=n)
     st = _g.merge(_g.sums_status(bs, _ref.BLOCK_SUM_FLOOR),
                   _g.result_status(prob))
-    return nb, prob, st
+    w = src.shape[0]
+    return nb, prob, _c.word(status=st, evals=w * block_size, draws=w)
 
 
 def _prob_core(x, x_sq, views, src, dst, bs, *, kind, inv_bw, beta, pairwise,
@@ -353,12 +409,16 @@ def _prob_core(x, x_sq, views, src, dst, bs, *, kind, inv_bw, beta, pairwise,
 @_jit
 def prob_of_from_block_sums(x, x_sq, src, dst, bs, *, kind, inv_bw, beta,
                             pairwise, block_size, n):
-    """q(dst | src) the sampler assigns, from cached level-1 sums."""
+    """q(dst | src) the sampler assigns, from cached level-1 sums.
+    Returns ``(probs, counter word)``."""
     TRACE_COUNTS["prob_of_from_block_sums"] += 1
     views = _block_views(x, x_sq, block_size)
-    return _prob_core(x, x_sq, views, src, dst, bs, kind=kind, inv_bw=inv_bw,
+    prob = _prob_core(x, x_sq, views, src, dst, bs, kind=kind, inv_bw=inv_bw,
                       beta=beta, pairwise=pairwise, block_size=block_size,
                       n=n)
+    st = _g.merge(_g.sums_status(bs, _ref.BLOCK_SUM_FLOOR),
+                  _g.result_status(prob))
+    return prob, _c.word(status=st, evals=src.shape[0] * block_size)
 
 
 # --------------------------------------------------------------------- #
@@ -415,7 +475,7 @@ def _edge_batch_core(x, x_sq, views, cdf, degs, inv_total, inv_t, key,
     probability (from the same level-1 sums that drew v)."""
     k_u, k_fwd = jax.random.split(key)
     u = _ref.inverse_cdf_index(cdf, jax.random.uniform(k_u, (batch,)))
-    v, q_uv, _, st = _fused_sample(x, x_sq, u, k_fwd, hstate, kind=kind,
+    v, q_uv, _, cw = _fused_sample(x, x_sq, u, k_fwd, hstate, kind=kind,
                                    inv_bw=inv_bw, beta=beta,
                                    pairwise=pairwise, block_size=block_size,
                                    num_blocks=num_blocks, n=n, s=s,
@@ -429,8 +489,11 @@ def _edge_batch_core(x, x_sq, views, cdf, degs, inv_total, inv_t, key,
     # term telescopes to k(u,v) / sum(deg).
     q_edge = inv_total * (degs[u] * q_uv + kuv)
     wgt = kuv * inv_t / jnp.maximum(q_edge, 1e-30)
-    st = _g.merge(st, _g.result_status(wgt, q_vu))
-    return u, v, wgt, q_uv, q_vu, st
+    # fused_sample's word + the batch aligned k(u,v) pairs + the batch
+    # inverse-CDF u draws (host accounting: level1 + batch*bs + batch)
+    cw = _c.fold(cw, _c.word(status=_g.result_status(wgt, q_vu),
+                             evals=batch, draws=batch))
+    return u, v, wgt, q_uv, q_vu, cw
 
 
 @_jit
@@ -439,7 +502,7 @@ def fused_edge_batch(x, x_sq, cdf, degs, inv_total, inv_t, key, hstate=None,
                      num_blocks, n, s, exact, use_pallas, interpret, bm,
                      level1="blocked", num_far=64, precision="f32"):
     """One fused Algorithm 5.1 edge batch: (u, v, weight, q_uv, q_vu,
-    status)."""
+    counter word)."""
     TRACE_COUNTS["fused_edge_batch"] += 1
     views = _block_views(x, x_sq, block_size)
     return _edge_batch_core(x, x_sq, views, cdf, degs, inv_total, inv_t, key,
@@ -460,23 +523,23 @@ def edge_batch_scan(x, x_sq, cdf, degs, inv_total, inv_t, keys, hstate=None,
     ``lax.scan`` over per-batch keys whose body is one fused edge batch.
     The whole Algorithm 5.1 sampling loop runs with a single dispatch and
     a single device->host transfer of the (T, batch) edge lists.  The
-    per-batch status words are or-folded into one scalar carried through
-    the scan -- the last output is the run's merged status."""
+    per-batch counter words are folded (status ors, counters add) through
+    the scan carry -- the last output is the run's merged word."""
     TRACE_COUNTS["edge_batch_scan"] += 1
     views = _block_views(x, x_sq, block_size)
 
-    def body(st, k):
-        u, v, wgt, q_uv, q_vu, st_b = _edge_batch_core(
+    def body(cw, k):
+        u, v, wgt, q_uv, q_vu, cw_b = _edge_batch_core(
             x, x_sq, views, cdf, degs, inv_total, inv_t, k, hstate,
             batch=batch, kind=kind, inv_bw=inv_bw, beta=beta,
             pairwise=pairwise, block_size=block_size, num_blocks=num_blocks,
             n=n, s=s, exact=exact, use_pallas=use_pallas,
             interpret=interpret, bm=bm, level1=level1, num_far=num_far,
             precision=precision)
-        return st | st_b, (u, v, wgt, q_uv, q_vu)
+        return _c.fold(cw, cw_b), (u, v, wgt, q_uv, q_vu)
 
-    status, out = jax.lax.scan(body, jnp.uint32(0), keys)
-    return out + (status,)
+    word, out = jax.lax.scan(body, _c.word(), keys)
+    return out + (word,)
 
 
 @_jit
@@ -484,10 +547,12 @@ def kernel_rows(q, x, x_sq, *, kind, inv_bw, beta, pairwise,
                 precision="f32"):
     """Exact (m, n) kernel rows in one program -- the FKV sketch rows and
     the CP17 column reads of Section 5.2, replacing the host chunk loop
-    over ``kernel.pairwise``."""
+    over ``kernel.pairwise``.  Returns ``(rows, counter word)``."""
     TRACE_COUNTS["kernel_rows"] += 1
-    return _ref.kv_matrix(q, x, x_sq, kind, inv_bw, beta, pairwise,
-                          precision=precision)
+    kv = _ref.kv_matrix(q, x, x_sq, kind, inv_bw, beta, pairwise,
+                        precision=precision)
+    return kv, _c.word(status=_g.nonfinite_status(kv),
+                       evals=q.shape[0] * x.shape[0])
 
 
 def _sample_exact_core(x, x_sq, views, src, bs, key, *, kind, inv_bw, beta,
@@ -520,8 +585,9 @@ def fused_sample_exact(x, x_sq, src, bs, key, *, kind, inv_bw, beta, pairwise,
     """Theorem 4.12 rejection rounds in one program.  The cached level-1
     sums ``bs`` are shared across every proposal round AND the degree
     estimate -- the seed re-swept the dataset once per round.  Returns
-    (neighbors, status, fallback count): draws whose rounds all rejected
-    keep the round-0 proposal (biased) and are counted, not hidden."""
+    (neighbors, counter word, fallback count): draws whose rounds all
+    rejected keep the round-0 proposal (biased) and are counted in the
+    word's RETRIES slot, not hidden."""
     TRACE_COUNTS["fused_sample_exact"] += 1
     views = _block_views(x, x_sq, block_size)
     cur, st, fallbacks = _sample_exact_core(
@@ -529,7 +595,13 @@ def fused_sample_exact(x, x_sq, src, bs, key, *, kind, inv_bw, beta, pairwise,
         pairwise=pairwise, block_size=block_size, n=n, rounds=rounds,
         slack=slack)
     st = _g.merge(st, _g.sums_status(bs, _ref.BLOCK_SUM_FLOOR))
-    return cur, st, fallbacks
+    w = src.shape[0]
+    # (rounds + 1) level-2 rows + rounds aligned accept pairs -- the host
+    # accounting in NeighborSampler.sample_exact, verbatim
+    cw = _c.word(status=st,
+                 evals=(rounds + 1) * w * block_size + rounds * w,
+                 draws=(rounds + 1) * w, retries=fallbacks)
+    return cur, cw, fallbacks
 
 
 # fold_in constant deriving a walk program's cache key from its first
@@ -637,9 +709,9 @@ def walk_scan(x, x_sq, starts, keys, hstate=None, *, kind, inv_bw, beta,
     ``record_path=False`` the path is never materialized (the scan emits no
     per-step output, so long walks cost O(w) device memory, not O(T w))
     and None is returned in its place.  The key stream is identical either
-    way, so endpoints match bitwise.  Returns (endpoints, path, status,
-    rejection-fallback count) -- status and fallbacks are or/sum-folded
-    across the T steps inside the scan carry.
+    way, so endpoints match bitwise.  Returns (endpoints, path, counter
+    word, rejection-fallback count) -- per-step words are fold-reduced
+    (status ors, counters add) across the T steps inside the scan carry.
 
     On the stratified blocked path (``exact=False``, jnp level-1) the
     level-1 read runs against the walk-resident subsample cache built ONCE
@@ -658,8 +730,12 @@ def walk_scan(x, x_sq, starts, keys, hstate=None, *, kind, inv_bw, beta,
                                    num_blocks=w_blocks, n=n, s=s_eff)
         views = _block_views(x, x_sq, wbs)
 
+    w = starts.shape[0]
+    cols, far, ov = _l1_cols(level1, exact, num_blocks, s, n, num_far,
+                             hstate)
+
     def body(carry, k):
-        cur, st, fb = carry
+        cur, cw, fb = carry
         if rounds > 0:
             k_l1, k_rs = jax.random.split(k)
             if cache is not None:
@@ -670,6 +746,7 @@ def walk_scan(x, x_sq, starts, keys, hstate=None, *, kind, inv_bw, beta,
                                         num_blocks=w_blocks, s=s_eff,
                                         precision=precision)
                 st1 = _g.sums_status(bs, _ref.BLOCK_SUM_FLOOR)
+                l1_evals, l1_far, l1_ov = w * w_blocks * s_eff, 0, 0
             else:
                 bs, st1 = _masked_sums_any(x, x_sq, cur, k_l1, hstate,
                                            kind=kind, inv_bw=inv_bw,
@@ -681,11 +758,16 @@ def walk_scan(x, x_sq, starts, keys, hstate=None, *, kind, inv_bw, beta,
                                            interpret=interpret, bm=bm,
                                            level1=level1, num_far=num_far,
                                            precision=precision)
+                l1_evals, l1_far, l1_ov = w * cols, w * far, w * ov
             nxt, st2, fb_k = _sample_exact_core(
                 x, x_sq, views, cur, bs, k_rs, kind=kind, inv_bw=inv_bw,
                 beta=beta, pairwise=pairwise, block_size=wbs, n=n,
                 rounds=rounds, slack=slack)
-            st = st | st1 | st2
+            cw_k = _c.word(
+                status=st1 | st2,
+                evals=l1_evals + (rounds + 1) * w * wbs + rounds * w,
+                l1_reads=w, draws=(rounds + 1) * w, retries=fb_k,
+                far_samples=l1_far, overflow=l1_ov)
             fb = fb + fb_k
         elif cache is not None:
             # mirrors _fused_sample's (k_l1, k_rest) discipline; k_l1 is
@@ -701,10 +783,12 @@ def walk_scan(x, x_sq, starts, keys, hstate=None, *, kind, inv_bw, beta,
                                           beta=beta, pairwise=pairwise,
                                           block_size=wbs, n=n,
                                           num_blocks=w_blocks)
-            st = st | _g.merge(_g.sums_status(bs, _ref.BLOCK_SUM_FLOOR),
-                               _g.result_status(prob))
+            cw_k = _c.word(
+                status=_g.merge(_g.sums_status(bs, _ref.BLOCK_SUM_FLOOR),
+                                _g.result_status(prob)),
+                evals=w * w_blocks * s_eff + w * wbs, l1_reads=w, draws=w)
         else:
-            nxt, _, _, st_k = _fused_sample(x, x_sq, cur, k, hstate,
+            nxt, _, _, cw_k = _fused_sample(x, x_sq, cur, k, hstate,
                                            kind=kind, inv_bw=inv_bw,
                                            beta=beta, pairwise=pairwise,
                                            block_size=block_size,
@@ -713,12 +797,11 @@ def walk_scan(x, x_sq, starts, keys, hstate=None, *, kind, inv_bw, beta,
                                            interpret=interpret, bm=bm,
                                            level1=level1, num_far=num_far,
                                            precision=precision, views=views)
-            st = st | st_k
-        return (nxt, st, fb), (nxt if record_path else None)
+        return (nxt, _c.fold(cw, cw_k), fb), (nxt if record_path else None)
 
-    (end, status, fallbacks), path = jax.lax.scan(
-        body, (starts, jnp.uint32(0), jnp.int32(0)), keys)
-    return end, path, status, fallbacks
+    (end, word, fallbacks), path = jax.lax.scan(
+        body, (starts, _c.word(), jnp.int32(0)), keys)
+    return end, path, word, fallbacks
 
 
 # --------------------------------------------------------------------- #
@@ -732,10 +815,12 @@ def noisy_power_scan(ksub, v0, keys, *, num_samples):
     by inverse CDF, forms the unbiased matvec estimate
     ``sum_j sign(v_j) z / S * ksub[:, j]``, and renormalizes -- all under
     ``lax.scan`` with no host round-trips.  Returns (Rayleigh quotient
-    from one exact final matvec, final unit vector, status bitmask --
+    from one exact final matvec, final unit vector, counter word --
     iterations whose sampled matvec collapsed or went non-finite are
-    flagged, not silently skipped).  Oracle: ``ref.noisy_power_ref``
-    (identical key stream, unrolled)."""
+    flagged, not silently skipped; the DRAWS slot counts the sampled
+    matvec lookups into the precomputed ``ksub``, which are NOT fresh
+    kernel evals).  Oracle: ``ref.noisy_power_ref`` (identical key
+    stream, unrolled)."""
     TRACE_COUNTS["noisy_power_scan"] += 1
     t = ksub.shape[0]
 
@@ -756,7 +841,9 @@ def noisy_power_scan(ksub, v0, keys, *, num_samples):
 
     (v, st), _ = jax.lax.scan(body, (v0, jnp.uint32(0)), keys)
     lam = v @ (ksub @ v)
-    return lam, v, _g.merge(st, _g.result_status(lam, v))
+    st = _g.merge(st, _g.result_status(lam, v))
+    return lam, v, _c.word(status=st,
+                           draws=keys.shape[0] * num_samples)
 
 
 @_jit
@@ -781,7 +868,9 @@ def laplacian_cg(src, dst, w, b, tol, *, n, iters):
     the best residual (the f32 plateau; without this exit a sub-f32
     ``tol`` would burn the full ``iters`` budget after convergence).
     Returns (best iterate, projected to 1^perp, its residual norm, and a
-    status bitmask flagging non-convergence / non-finite output)."""
+    counter word flagging non-convergence / non-finite output; the DRAWS
+    slot records the realized CG iteration count -- the one
+    data-dependent cost of this program)."""
     TRACE_COUNTS["laplacian_cg"] += 1
     deg = jnp.zeros((n,), w.dtype).at[src].add(w).at[dst].add(w)
     dinv = 1.0 / jnp.maximum(deg, 1e-30)
@@ -829,7 +918,7 @@ def laplacian_cg(src, dst, w, b, tol, *, n, iters):
     sol, res = proj(out[5]), out[6]
     st = _g.merge(_g.flag_if(res >= tol * bnorm, _g.CG_NO_CONVERGE),
                   _g.result_status(sol, res))
-    return sol, res, st
+    return sol, res, _c.word(status=st, draws=out[0])
 
 
 @_jit
@@ -837,10 +926,12 @@ def signed_endpoint_stat(ends, signs, *, n):
     """``sum_i (sum_j signs_j [ends_j = i])^2`` -- the collision part of
     the CDVV14 l2 statistic computed on device: with signs +1 for the u
     walks and -1 for the w walks this is ``sum_i (X_i - Y_i)^2`` over the
-    endpoint count vectors, one segment-sum and one reduction."""
+    endpoint count vectors, one segment-sum and one reduction.  Returns
+    ``(statistic, counter word)`` -- zero kernel evals by construction."""
     TRACE_COUNTS["signed_endpoint_stat"] += 1
     c = jnp.zeros((n,), signs.dtype).at[ends].add(signs)
-    return jnp.sum(c * c)
+    stat = jnp.sum(c * c)
+    return stat, _c.word(status=_g.result_status(stat))
 
 
 @_jit
@@ -855,8 +946,8 @@ def triangle_edge_scan(x, x_sq, u, v, degs, keys, hstate=None, *, kind,
     where each step draws w ~ k(v, .)/deg(v), masks by the ordering
     ``v < w`` and ``w != u``, and accumulates k(u,v) k(u,w); the final
     reweighting by deg(v)/num_draws also happens in-program.  Returns
-    (oriented u, oriented v, per-edge weight estimates W_e, status).
-    Oracle: ``ref.triangle_batch_ref``."""
+    (oriented u, oriented v, per-edge weight estimates W_e, counter
+    word).  Oracle: ``ref.triangle_batch_ref``."""
     TRACE_COUNTS["triangle_edge_scan"] += 1
     views = _block_views(x, x_sq, block_size)
     prec = _ref.degree_precedes(degs, u, v)
@@ -881,7 +972,16 @@ def triangle_edge_scan(x, x_sq, u, v, degs, keys, hstate=None, *, kind,
     acc, _ = jax.lax.scan(body, jnp.zeros_like(kuv), keys[1:])
     num_draws = keys.shape[0] - 1
     w_hat = acc * degs[vv] / num_draws
-    return uu, vv, w_hat, _g.merge(st, _g.result_status(w_hat))
+    m = u.shape[0]
+    cols, far, ov = _l1_cols(level1, exact, num_blocks, s, n, num_far,
+                             hstate)
+    # one level-1 read of the m-edge frontier + m k(u,v) pairs + per draw
+    # m level-2 rows and m k(u,w) pairs -- NeighborSampler.triangle_batches
+    cw = _c.word(status=_g.merge(st, _g.result_status(w_hat)),
+                 evals=m * cols + m + num_draws * (m * block_size + m),
+                 l1_reads=m, draws=num_draws * m, far_samples=m * far,
+                 overflow=m * ov)
+    return uu, vv, w_hat, cw
 
 
 # --------------------------------------------------------------------- #
@@ -917,8 +1017,8 @@ def batched_fused_sample(xa, xa_sq, tidx, src, keys, hstate=None, *, kind,
     ONE program: ``src (R, w)`` padded frontiers, ``keys (R, 2)``
     per-request PRNG keys, ``tidx (R,)`` tenant indices.  Returns
     (neighbors (R, w), probs (R, w), level-1 sums (R, w, B), per-request
-    status words (R,)).  Lane r is exactly ``fused_sample`` on tenant
-    ``tidx[r]`` with key ``keys[r]``."""
+    counter words (R, obs.WIDTH)).  Lane r is exactly ``fused_sample`` on
+    tenant ``tidx[r]`` with key ``keys[r]``."""
     TRACE_COUNTS["batched_fused_sample"] += 1
 
     def one(ti, src_r, key_r):
@@ -941,9 +1041,10 @@ def batched_walk_scan(xa, xa_sq, tidx, starts, keys, hstate=None, *, kind,
                       precision="f32"):
     """R independent T-step walks (``starts (R, w)``, ``keys (R, T, 2)``)
     across stacked tenants in ONE program.  Returns (endpoints (R, w),
-    path ((R, T, w) or None), status (R,), rejection fallbacks (R,)) --
-    lane r is ``walk_scan`` on its tenant with its own key stream, so
-    endpoints are bitwise equal to the sequential per-request calls."""
+    path ((R, T, w) or None), counter words (R, obs.WIDTH), rejection
+    fallbacks (R,)) -- lane r is ``walk_scan`` on its tenant with its own
+    key stream, so endpoints are bitwise equal to the sequential
+    per-request calls."""
     TRACE_COUNTS["batched_walk_scan"] += 1
 
     def one(ti, st_r, keys_r):
@@ -967,7 +1068,8 @@ def batched_prob_of(xa, xa_sq, tidx, src, dst, keys, hstate=None, *, kind,
     """q(dst | src) for R requests (``src``/``dst`` (R, w)) in ONE
     program: per lane one masked level-1 read of the src frontier (the
     same read ``prob_of`` performs when its cache is cold) followed by the
-    exact level-2 probability.  Returns (probs (R, w), status (R,))."""
+    exact level-2 probability.  Returns (probs (R, w), counter words
+    (R, obs.WIDTH))."""
     TRACE_COUNTS["batched_prob_of"] += 1
 
     def one(ti, src_r, dst_r, key_r):
@@ -983,7 +1085,12 @@ def batched_prob_of(xa, xa_sq, tidx, src, dst, keys, hstate=None, *, kind,
         prob = _prob_core(x, x_sq, views, src_r, dst_r, bs, kind=kind,
                           inv_bw=inv_bw, beta=beta, pairwise=pairwise,
                           block_size=block_size, n=n)
-        return prob, _g.merge(st, _g.result_status(prob))
+        wq = src_r.shape[0]
+        cols, far, ov = _l1_cols(level1, exact, num_blocks, s, n, num_far,
+                                 hs)
+        return prob, _c.word(status=_g.merge(st, _g.result_status(prob)),
+                             evals=wq * (cols + block_size), l1_reads=wq,
+                             far_samples=wq * far, overflow=wq * ov)
 
     return jax.vmap(one)(tidx, src, dst, keys)
 
@@ -997,28 +1104,29 @@ def batched_kde_query(xa, xa_sq, tidx, y, keys, *, kind, inv_bw, beta,
     per lane (exact or stratified, matching ``ExactBlockKDE`` /
     ``StratifiedKDE.query``).  Hash tenants are served by
     ``kde_hash.ops.batched_hashed_query`` instead.  Returns (estimates
-    (R, q), status (R,))."""
+    (R, q), counter words (R, obs.WIDTH))."""
     TRACE_COUNTS["batched_kde_query"] += 1
 
     def one(ti, y_r, key_r):
         x, x_sq = xa[ti], xa_sq[ti]
         if exact:
-            bs = exact_block_sums(y_r, x, x_sq, kind=kind, inv_bw=inv_bw,
-                                  beta=beta, pairwise=pairwise,
-                                  block_size=block_size,
-                                  num_blocks=num_blocks, n=n,
-                                  precision=precision)
+            bs, cw = exact_block_sums(y_r, x, x_sq, kind=kind,
+                                      inv_bw=inv_bw, beta=beta,
+                                      pairwise=pairwise,
+                                      block_size=block_size,
+                                      num_blocks=num_blocks, n=n,
+                                      precision=precision)
         else:
-            bs = stratified_block_sums(y_r, x, x_sq, key_r, kind=kind,
-                                       inv_bw=inv_bw, beta=beta,
-                                       pairwise=pairwise,
-                                       block_size=block_size,
-                                       num_blocks=num_blocks, n=n, s=s,
-                                       precision=precision)
+            bs, cw = stratified_block_sums(y_r, x, x_sq, key_r, kind=kind,
+                                           inv_bw=inv_bw, beta=beta,
+                                           pairwise=pairwise,
+                                           block_size=block_size,
+                                           num_blocks=num_blocks, n=n, s=s,
+                                           precision=precision)
         est = bs.sum(-1)
         st = _g.merge(_g.sums_status(bs, _ref.BLOCK_SUM_FLOOR),
                       _g.result_status(est))
-        return est, st
+        return est, _c.fold_status(cw, st)
 
     return jax.vmap(one)(tidx, y, keys)
 
@@ -1035,10 +1143,15 @@ def patch_block_sums(bs, x, src, slots, old_x, new_x, *, kind, inv_bw, beta,
     so the oracle parity is structural; equivalence vs a fresh rebuild is
     what the streaming tests assert.  Frontier rows that mutated must NOT
     be patched -- the consumer drops the cache instead (the ``src``
-    operand is only read for the frontier coordinates)."""
+    operand is only read for the frontier coordinates).  Returns
+    ``(patched sums, counter word)``."""
     TRACE_COUNTS["patch_block_sums"] += 1
-    return _ref.patch_block_sums_ref(bs, x[src], slots, old_x, new_x, kind,
-                                     inv_bw, beta, block_size, pairwise)
+    out = _ref.patch_block_sums_ref(bs, x[src], slots, old_x, new_x, kind,
+                                    inv_bw, beta, block_size, pairwise)
+    # old + new kernel values per (frontier row, mutated slot) pair --
+    # the host accounting in NeighborSampler._sync, verbatim
+    return out, _c.word(status=_g.nonfinite_status(out),
+                        evals=2 * src.shape[0] * slots.shape[0])
 
 
 @_jit
@@ -1047,8 +1160,13 @@ def degree_delta(degs, x, x_sq, slots, old_x, new_x, old_live, new_live, *,
     """Incremental Algorithm 4.3 degree update after a mutation batch:
     O(n m) evals against the post-mutation padded arrays (column deltas
     for untouched rows, exact recompute for the mutated slots), replacing
-    the O(n^2 / estimator-budget) degree rebuild."""
+    the O(n^2 / estimator-budget) degree rebuild.  Returns ``(degrees,
+    counter word)``."""
     TRACE_COUNTS["degree_delta"] += 1
-    return _ref.degree_delta_ref(degs, x, x_sq, slots, old_x, new_x,
-                                 old_live, new_live, kind, inv_bw, beta,
-                                 pairwise)
+    out = _ref.degree_delta_ref(degs, x, x_sq, slots, old_x, new_x,
+                                old_live, new_live, kind, inv_bw, beta,
+                                pairwise)
+    # old + new kernel column per mutated slot against all n rows -- the
+    # host accounting in DegreeSampler._sync / RowNormSampler._sync
+    return out, _c.word(status=_g.nonfinite_status(out),
+                        evals=2 * slots.shape[0] * degs.shape[0])

@@ -38,6 +38,17 @@ the no-retrace tests cover the sharded programs too.  Compiled programs
 are cached at module level keyed on the full static config (mesh, layout,
 kernel) -- dataset arrays are always call arguments, so successive
 pipeline constructions over the same mesh share every program.
+
+Every public program returns an ``obs.counters`` ``(WIDTH,)`` counter
+word in the status position (DESIGN.md §15.1).  The words are assembled
+OUTSIDE the shard_map programs -- counter slots are trace-time constants
+from static shard shapes, status is the program's replicated post-psum
+scalar -- so widening provably adds ZERO collectives (``psum_total`` per
+draw batch is pinned by ``collective_counts`` in tests); the ``PSUMS``
+slot records the §9 collective budget each call realizes.  Counts are
+*global* realized work summed over shards, including the sentinel
+padding shards sweep (device-realized evals, which on padded meshes
+exceed the host's analytic per-row counts).
 """
 from __future__ import annotations
 
@@ -54,6 +65,7 @@ from repro.ft import guards as _g
 from repro.kernels.kde_rowsum.ops import _PAD_OFFSET
 from repro.kernels.kde_sampler import ops as _ops
 from repro.kernels.kde_sampler import ref as _ref
+from repro.obs import counters as _c
 
 TRACE_COUNTS = _ops.TRACE_COUNTS
 
@@ -339,6 +351,14 @@ class ShardedBlocks:
         ax = self.axes
         return (P(ax), P(ax), P(), P())
 
+    def _l1_evals(self, w: int) -> int:
+        """Global realized level-1 kernel evals of one frontier sweep:
+        every shard sweeps its whole padded slice (exact) or its
+        ``B_p * s`` stratified subsample -- trace-time constant."""
+        if self.exact:
+            return w * self.n_pad
+        return w * self.num_blocks_pad * self.samples_per_block
+
     # ------------------------------------------------------------------ #
     # public fused programs
     # ------------------------------------------------------------------ #
@@ -372,16 +392,21 @@ class ShardedBlocks:
         frontier copy is patched in place on every device -- ZERO new
         collectives per mutation batch, so the §9 one-psum-per-draw
         schedule is untouched.  Derived level-1 caches are the caller's
-        to patch or drop (``ops.patch_block_sums`` / the §4 cache)."""
+        to patch or drop (``ops.patch_block_sums`` / the §4 cache).
+        Returns a zero-eval counter word (scatters are not kernel
+        evals)."""
         fn = self._patch_program()
         self.x_sh, self.x_sq_sh, self.x_rep, self.x_sq_rep = fn(
             *self._sharded_args(), jnp.asarray(slots, jnp.int32),
             jnp.asarray(rows, jnp.float32))
+        return _c.word()
 
     def masked_block_sums(self, src, key):
-        """Global §2-contract level-1 sums of a frontier: (w, B_pad),
-        sharded along columns, no collective at all (sampling needs only
-        the psum of totals, which each draw performs itself)."""
+        """Global §2-contract level-1 sums of a frontier: ``(sums, word)``
+        with sums (w, B_pad) sharded along columns, no collective at all
+        (sampling needs only the psum of totals, which each draw performs
+        itself).  The counter word is assembled host-side from static
+        shard shapes plus the non-finite check of the returned sums."""
         sp = self.spec
 
         def factory():
@@ -395,13 +420,19 @@ class ShardedBlocks:
                                self._specs4() + (P(), P()),
                                P(None, self.axes))
         fn = self._program("masked_block_sums", factory)
-        return fn(*self._sharded_args(), jnp.asarray(src, jnp.int32), key)
+        w = int(jnp.shape(src)[0])
+        sums = fn(*self._sharded_args(), jnp.asarray(src, jnp.int32), key)
+        cw = _c.fold_status(
+            _c.word(evals=self._l1_evals(w), l1_reads=w),
+            _g.nonfinite_status(sums))
+        return sums, cw
 
     def fused_sample(self, src, key):
         """One depth-2 collective draw: (nb, prob, global level-1 sums,
-        status) -- the sharded twin of ``ops.fused_sample`` (and the §4
-        cache producer).  The status is post-psum replicated, so the §9
-        one-psum schedule is unchanged."""
+        counter word) -- the sharded twin of ``ops.fused_sample`` (and
+        the §4 cache producer).  The status is post-psum replicated and
+        the counters are static, so the §9 one-psum schedule is
+        unchanged (PSUMS slot = 1)."""
         sp = self.spec
 
         def factory():
@@ -420,12 +451,19 @@ class ShardedBlocks:
                                self._specs4() + (P(), P()),
                                (P(), P(), P(None, self.axes), P()))
         fn = self._program("fused_sample", factory)
-        return fn(*self._sharded_args(), jnp.asarray(src, jnp.int32), key)
+        w = int(jnp.shape(src)[0])
+        nb, prob, sums, st = fn(*self._sharded_args(),
+                                jnp.asarray(src, jnp.int32), key)
+        cw = _c.fold_status(
+            _c.word(evals=self._l1_evals(w)
+                    + w * self.block_size * self.num_shards,
+                    l1_reads=w, draws=w, psums=1), st)
+        return nb, prob, sums, cw
 
     def sample_from_block_sums(self, src, sums, key):
         """Depth-2 collective draw reusing cached global level-1 sums
         (the §4 caching contract: no dataset re-sweep).  Returns
-        (nb, prob, status)."""
+        (nb, prob, counter word) -- PSUMS slot = 1, no level-1 evals."""
         sp = self.spec
 
         def factory():
@@ -440,8 +478,13 @@ class ShardedBlocks:
                                                  P()),
                                (P(), P(), P()))
         fn = self._program("sample_cached", factory)
-        return fn(*self._sharded_args(), jnp.asarray(src, jnp.int32), sums,
-                  key)
+        w = int(jnp.shape(src)[0])
+        nb, prob, st = fn(*self._sharded_args(), jnp.asarray(src, jnp.int32),
+                          sums, key)
+        cw = _c.fold_status(
+            _c.word(evals=w * self.block_size * self.num_shards,
+                    draws=w, psums=1), st)
+        return nb, prob, cw
 
     def prob_of_from_block_sums(self, src, dst, sums):
         """q(dst | src) from cached global sums.  The global (w, B_pad)
@@ -457,7 +500,8 @@ class ShardedBlocks:
 
     def sample_exact(self, src, sums, key, *, rounds: int, slack: float):
         """Theorem 4.12 rejection-exact draw from cached global sums.
-        Returns (cur, status, fallback count)."""
+        Returns (cur, counter word, fallback count) -- PSUMS slot =
+        ``rounds + 1`` (one psum per realized draw)."""
         sp = self.spec
 
         def factory():
@@ -471,16 +515,28 @@ class ShardedBlocks:
                                                  P()),
                                (P(), P(), P()))
         fn = self._program(("sample_exact", rounds, float(slack)), factory)
-        return fn(*self._sharded_args(), jnp.asarray(src, jnp.int32), sums,
-                  key)
+        w = int(jnp.shape(src)[0])
+        cur, st, fb = fn(*self._sharded_args(), jnp.asarray(src, jnp.int32),
+                         sums, key)
+        # level-2 draws on every shard + the replicated accept-ratio
+        # kv_pairs each rejection round computes on all shards
+        cw = _c.fold_status(
+            _c.word(evals=(rounds + 1) * w * self.block_size
+                    * self.num_shards + rounds * w * self.num_shards,
+                    draws=(rounds + 1) * w, retries=fb,
+                    psums=rounds + 1), st)
+        return cur, cw, fb
 
     def walk_scan(self, starts, keys, *, rounds: int = 0, slack: float = 2.0,
                   record_path: bool = False):
         """T walk steps under ``lax.scan`` inside one shard_map program:
         the frontier is replicated scan carry, every step one two-stage
-        draw (exactly one psum per step).  Returns (end, path, status,
-        fallbacks): the per-step status words and rejection-fallback
-        counts fold into the carry (replicated, zero extra collectives)."""
+        draw (exactly one psum per step).  Returns (end, path, counter
+        word, fallbacks): the per-step status bits and rejection-fallback
+        counts fold into the carry (replicated, zero extra collectives);
+        the word's counters are static per-step costs scaled by the step
+        count (PSUMS = steps, or steps * (rounds + 1) on the
+        rejection-exact path)."""
         sp = self.spec
 
         def factory():
@@ -516,8 +572,19 @@ class ShardedBlocks:
                                (P(), out_path, P(), P()))
         fn = self._program(("walk_scan", rounds, float(slack),
                             bool(record_path)), factory)
-        return fn(*self._sharded_args(), jnp.asarray(starts, jnp.int32),
-                  keys)
+        end, path, st, fb = fn(*self._sharded_args(),
+                               jnp.asarray(starts, jnp.int32), keys)
+        w = int(jnp.shape(starts)[0])
+        steps = int(jnp.shape(keys)[0])
+        draws_per = (rounds + 1) if rounds > 0 else 1
+        per_step = (self._l1_evals(w)
+                    + draws_per * w * self.block_size * self.num_shards
+                    + rounds * w * self.num_shards)
+        cw = _c.fold_status(
+            _c.word(evals=steps * per_step, l1_reads=steps * w,
+                    draws=steps * draws_per * w, retries=fb,
+                    psums=steps * draws_per), st)
+        return end, path, cw, fb
 
     def edge_batch_scan(self, cdf, degs, inv_total, inv_t, keys, *,
                         batch: int):
@@ -525,7 +592,8 @@ class ShardedBlocks:
         program -- u by replicated inverse CDF over the device degree
         prefix, v | u by the two-stage draw (one psum per batch), the
         collapsed reverse probability and reweighting replicated.  The
-        last output is the or-folded status word of every batch."""
+        last output is the counter word of the whole scan (status
+        or-folded over batches, PSUMS = number of batches)."""
         sp = self.spec
 
         def factory():
@@ -560,16 +628,28 @@ class ShardedBlocks:
                                self._specs4() + (P(), P(), P(), P(), P()),
                                (P(), P(), P(), P(), P(), P()))
         fn = self._program(("edge_batch_scan", int(batch)), factory)
-        return fn(*self._sharded_args(), jnp.asarray(cdf),
-                  jnp.asarray(degs), jnp.float32(inv_total),
-                  jnp.float32(inv_t), keys)
+        out = fn(*self._sharded_args(), jnp.asarray(cdf),
+                 jnp.asarray(degs), jnp.float32(inv_total),
+                 jnp.float32(inv_t), keys)
+        *data, st = out
+        steps = int(jnp.shape(keys)[0])
+        # per batch: one level-1 sweep + the speculative level-2 rows on
+        # every shard + the replicated k(u, v) pair eval per shard
+        per_batch = (self._l1_evals(batch)
+                     + batch * self.block_size * self.num_shards
+                     + batch * self.num_shards)
+        cw = _c.fold_status(
+            _c.word(evals=steps * per_batch, l1_reads=steps * batch,
+                    draws=steps * batch, psums=steps), st)
+        return tuple(data) + (cw,)
 
     def triangle_edge_scan(self, u, v, degs, keys):
         """Theorem 6.17's per-edge inner loop sharded: orientation
         replicated, ONE local level-1 read of the oriented v frontier
         (keys[0]) shared by every draw, then a scan over keys[1:] of
         two-stage draws (one psum each) with the ordering mask and the
-        in-program reweighting."""
+        in-program reweighting.  The last output is the counter word
+        (PSUMS = number of draws)."""
         sp = self.spec
 
         def factory():
@@ -605,16 +685,28 @@ class ShardedBlocks:
                                self._specs4() + (P(), P(), P(), P()),
                                (P(), P(), P(), P()))
         fn = self._program("triangle_edge_scan", factory)
-        return fn(*self._sharded_args(), jnp.asarray(u, jnp.int32),
-                  jnp.asarray(v, jnp.int32), jnp.asarray(degs), keys)
+        uu, vv, w_hat, st = fn(*self._sharded_args(),
+                               jnp.asarray(u, jnp.int32),
+                               jnp.asarray(v, jnp.int32),
+                               jnp.asarray(degs), keys)
+        m = int(jnp.shape(u)[0])
+        num_draws = int(jnp.shape(keys)[0]) - 1
+        # one shared level-1 read + per-shard k(u, v) pairs + per draw the
+        # per-shard level-2 rows and k(u, w) pairs
+        cw = _c.fold_status(
+            _c.word(evals=self._l1_evals(m) + m * self.num_shards
+                    + num_draws * (m * self.block_size * self.num_shards
+                                   + m * self.num_shards),
+                    l1_reads=m, draws=num_draws * m, psums=num_draws), st)
+        return uu, vv, w_hat, cw
 
     # ------------------------------------------------------------------ #
     # KDE-structure reads (the Definition 1.1 surface)
     # ------------------------------------------------------------------ #
     def kde_query(self, y, key):
-        """(m,) row-sum estimates of replicated queries: local sweep (or
-        local stratified block sums) + one psum -- Definition 1.1 over the
-        sharded dataset."""
+        """Row-sum estimates of replicated queries: ``((m,), word)`` --
+        local sweep (or local stratified block sums) + one psum,
+        Definition 1.1 over the sharded dataset (PSUMS slot = 1)."""
         sp = self.spec
 
         def factory():
@@ -631,12 +723,18 @@ class ShardedBlocks:
             return self._build("sharded_kde_query", body,
                                (P(self.axes), P(self.axes), P(), P()), P())
         fn = self._program("kde_query", factory)
-        return fn(self.x_sh, self.x_sq_sh, jnp.asarray(y, jnp.float32), key)
+        est = fn(self.x_sh, self.x_sq_sh, jnp.asarray(y, jnp.float32), key)
+        m = int(jnp.shape(y)[0])
+        cw = _c.fold_status(
+            _c.word(evals=self._l1_evals(m), l1_reads=m, psums=1),
+            _g.nonfinite_status(est))
+        return est, cw
 
     def kernel_rows(self, q):
         """Exact (m, n) kernel rows against the sharded dataset -- the FKV
-        sketch / CP17 column reads, computed shard-local and returned as
-        one globally-addressable array (no collective)."""
+        sketch / CP17 column reads, computed shard-local and returned
+        with a counter word (no collective; evals count the padded
+        sweep each shard realizes)."""
         sp = self.spec
 
         def factory():
@@ -648,19 +746,27 @@ class ShardedBlocks:
                                P(None, self.axes))
         fn = self._program("kernel_rows", factory)
         out = fn(self.x_sh, self.x_sq_sh, jnp.asarray(q, jnp.float32))
-        return out[:, :self.n]
+        out = out[:, :self.n]
+        m = int(jnp.shape(q)[0])
+        cw = _c.fold_status(_c.word(evals=m * self.n_pad),
+                            _g.nonfinite_status(out))
+        return out, cw
 
     def degrees_ring(self, kernel):
         """Algorithm 4.3 over the sharded dataset: the ring-permute
         all-to-all accumulation (O(n^2 / P) work and O(shard^2) memory per
         device), minus the kernel's *actual* per-point diagonal.  Returns
-        the (n,) degree vector (replicated host-side read)."""
+        the ((n,) degree vector, counter word) -- the ring uses ppermute
+        only, so the PSUMS slot is 0."""
         def factory():
             body = _ring_degrees_body(kernel, self.axes, self.num_shards)
             return self._build("sharded_degrees_ring", body,
                                (P(self.axes),), P(self.axes))
         fn = self._program("degrees_ring", factory)
-        return fn(self.x_sh)[:self.n]
+        deg = fn(self.x_sh)[:self.n]
+        cw = _c.fold_status(_c.word(evals=self.n_pad * self.n_pad),
+                            _g.nonfinite_status(deg))
+        return deg, cw
 
 
 def _ring_degrees_body(kernel, axes, size: int):
@@ -828,8 +934,10 @@ def sharded_noisy_power(mesh: Mesh, ksub, v0, keys, *, num_samples: int,
     per iteration (the §9 collective budget).  Same math and key stream
     as ``ops.noisy_power_scan`` (per-shard partial sums reorder the float
     accumulation, so floats agree to f32 tolerance, not bitwise).
-    Returns ``(lam, v, status)``; the status word folds the stalled-
-    iterate (zero mass) and non-finite flags across all iterations."""
+    Returns ``(lam, v, counter word)``; slot 0 folds the stalled-iterate
+    (zero mass) and non-finite flags across all iterations, DRAWS counts
+    the importance draws, PSUMS the one-per-iteration matvec psums plus
+    the final Rayleigh-quotient psum."""
     axes = tuple(data_axes)
     num = 1
     for a in axes:
@@ -842,4 +950,7 @@ def sharded_noisy_power(mesh: Mesh, ksub, v0, keys, *, num_samples: int,
     ksub_sh = jax.device_put(ksub, NamedSharding(mesh, P(None, axes)))
     fn = _noisy_power_program(mesh, axes, int(num_samples), t_pad // num)
     lam, v, st = fn(ksub_sh, jnp.asarray(v0, jnp.float32), keys)
-    return lam, v, st
+    iters = int(jnp.shape(keys)[0])
+    cw = _c.fold_status(
+        _c.word(draws=iters * int(num_samples), psums=iters + 1), st)
+    return lam, v, cw

@@ -34,7 +34,6 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import json
 import sys
 import time
 
@@ -45,13 +44,16 @@ import numpy as np
 from repro.configs.base import ShapeConfig, get_config, get_reduced
 from repro.data.pipeline import make_batch, token_split
 from repro.models import transformer as T
+from repro.obs import export as _export
+from repro.obs import metrics as _metrics
 from repro.train.train_step import make_decode_step
 
 
 def _emit_metrics(payload: dict) -> None:
-    """One machine-parsable metrics line (tests and dashboards grep for
-    the ``[serve] metrics `` prefix and json-load the rest)."""
-    print("[serve] metrics " + json.dumps(payload, sort_keys=True))
+    """One schema-stamped JSON-lines metrics record (``obs.export``;
+    tests, dashboards and ``tools/check_metrics_schema.py`` grep the
+    ``[serve] metrics `` prefix and validate the rest)."""
+    _export.emit_jsonl(payload)
 
 
 def run_graph_stream(args, trace=None) -> int:
@@ -149,6 +151,8 @@ def run_multi_tenant(args) -> int:
     from repro.core.kernels_fn import gaussian
     from repro.core.serving import KernelGraphServable
 
+    if args.telemetry:
+        _metrics.enable()
     S, R = int(args.serve_tenants), int(args.requests)
     n, d = 2048, 8
     rng = np.random.default_rng(args.seed)
@@ -187,14 +191,22 @@ def run_multi_tenant(args) -> int:
     submit_mix(0)
     srv.tick()                       # warmup: compiles every group shape
     lat = []
-    failed = 0
+    failed = stale = 0
+    per_tenant: dict = {}
     t0 = time.perf_counter()
     for tick in range(1, args.ticks + 1):
         reqs = submit_mix(tick)
-        srv.tick()
+        stale += srv.tick()["stale"]
         for r in reqs:
             lat.append(r.latency)
-            failed += r.error is not None
+            pt = per_tenant.setdefault(
+                r.tenant, dict(served=0, failed=0, lat_ms=[]))
+            pt["lat_ms"].append(1e3 * r.latency)
+            if r.error is None:
+                pt["served"] += 1
+            else:
+                pt["failed"] += 1
+                failed += 1
     wall = time.perf_counter() - t0
     lat_ms = 1e3 * np.asarray(lat)
     rep = srv.report()
@@ -207,12 +219,20 @@ def run_multi_tenant(args) -> int:
           f"(admissions={rep['admissions']} evictions={rep['evictions']})")
     _emit_metrics(dict(
         mode="multi-tenant", tenants=S, requests_per_tick=R,
-        ticks=args.ticks, served=served, failed=failed,
+        ticks=args.ticks, served=served, failed=failed, stale=stale,
         p50_ms=round(float(np.percentile(lat_ms, 50)), 3),
         p99_ms=round(float(np.percentile(lat_ms, 99)), 3),
         throughput_rps=round(served / max(wall, 1e-9), 2),
         admissions=rep["admissions"], evictions=rep["evictions"],
+        realized_evals=rep["device_counters"]["evals"],
+        device_counters=rep["device_counters"],
+        per_tenant={
+            k: dict(served=v["served"], failed=v["failed"],
+                    p50_ms=round(float(np.percentile(v["lat_ms"], 50)), 3))
+            for k, v in sorted(per_tenant.items())},
         flags=rep["flags"]))
+    if args.metrics_format == "prometheus":
+        print(_export.prometheus_text(), end="")
     return 3 if failed else 0
 
 
@@ -250,6 +270,14 @@ def main(argv=None) -> int:
                     help="concurrent requests per serving tick")
     ap.add_argument("--max-resident", type=int, default=4,
                     help="LRU bound on tenants holding device state")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="enable the obs metrics registry (latency "
+                         "histograms, counters; off by default so the "
+                         "serving hot path stays branch-only)")
+    ap.add_argument("--metrics-format", choices=["jsonl", "prometheus"],
+                    default="jsonl",
+                    help="'prometheus' additionally dumps the registry "
+                         "in Prometheus text format after the run")
     args = ap.parse_args(argv)
 
     if args.serve_tenants:

@@ -1,0 +1,167 @@
+"""Device counter words (DESIGN.md §15.1).
+
+The PR-6 scalar uint32 status word generalized in place: every fused
+device program returns a ``(WIDTH,)`` uint32 vector instead of a scalar.
+Slot 0 carries the exact same status bitmask as before (``ft.guards``
+bits); slots 1+ count realized device work.  The widening changes no
+call-site unpack arity -- the word rides in the status position -- and
+adds no collectives: every counter is either a trace-time constant
+derived from static shapes or a replicated post-psum scalar.
+
+Slot layout (all uint32, wrap at 2^32 -- ``EVALS`` wraps after ~4.3e9
+kernel evaluations per word, so host accumulation must fold words
+frequently, which every consumer already does per call):
+
+===========  ====  =====================================================
+slot name     idx  meaning
+===========  ====  =====================================================
+STATUS          0  ``ft.guards`` status bitmask (or-folded)
+EVALS           1  realized kernel evaluations executed by the program
+L1_READS        2  level-1 block-structure reads (rows read x 1)
+DRAWS           3  categorical / Gumbel draws realized
+RETRIES         4  rejection-sampling fallback rows (REJECT_EXHAUSTED)
+FAR_SAMPLES     5  Hashing-Based-Estimator FAR samples drawn
+OVERFLOW        6  hash overflow-region columns swept
+PSUMS           7  collective psums executed by the program
+===========  ====  =====================================================
+
+Fold rule (scan carries, host accumulation): slot 0 ors, slots 1+ add.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable
+
+import jax.numpy as jnp
+import numpy as np
+
+WIDTH = 8
+
+STATUS = 0
+EVALS = 1
+L1_READS = 2
+DRAWS = 3
+RETRIES = 4
+FAR_SAMPLES = 5
+OVERFLOW = 6
+PSUMS = 7
+
+COUNTER_SLOTS: Dict[str, int] = {
+    "status": STATUS, "evals": EVALS, "l1_reads": L1_READS, "draws": DRAWS,
+    "retries": RETRIES, "far_samples": FAR_SAMPLES, "overflow": OVERFLOW,
+    "psums": PSUMS,
+}
+
+_MOD = 1 << 32
+
+
+def _u32(v):
+    """Trace-safe uint32 coercion: python ints wrap mod 2^32 (static shape
+    products can exceed the word width), traced scalars cast."""
+    if isinstance(v, (int, np.integer)):
+        return jnp.uint32(int(v) % _MOD)
+    return jnp.asarray(v).astype(jnp.uint32)
+
+
+def word(status=0, evals=0, l1_reads=0, draws=0, retries=0, far_samples=0,
+         overflow=0, psums=0) -> jnp.ndarray:
+    """Build one ``(WIDTH,)`` counter word.  Every argument is a python
+    int (static shape product) or a traced scalar; the result is safe to
+    return from inside jit / fold through scan carries."""
+    return jnp.stack([
+        _u32(status), _u32(evals), _u32(l1_reads), _u32(draws),
+        _u32(retries), _u32(far_samples), _u32(overflow), _u32(psums)])
+
+
+def fold(a, b) -> jnp.ndarray:
+    """Fold two counter words: status bits or, counters add (the scan
+    carry rule -- associative, commutative, identity ``word()``)."""
+    a = jnp.asarray(a, jnp.uint32)
+    b = jnp.asarray(b, jnp.uint32)
+    return jnp.concatenate([a[..., :1] | b[..., :1], a[..., 1:] + b[..., 1:]],
+                           axis=-1)
+
+
+def fold_status(w, status) -> jnp.ndarray:
+    """Or extra status bits into a word's slot 0, counters untouched."""
+    w = jnp.asarray(w, jnp.uint32)
+    return w.at[..., STATUS].set(w[..., STATUS] | _u32(status))
+
+
+def scale(w, k: int) -> jnp.ndarray:
+    """``k`` repetitions of the same program: status unchanged, counters
+    multiplied (e.g. a word built once for one scan step, realized
+    ``k`` times)."""
+    w = jnp.asarray(w, jnp.uint32)
+    return jnp.concatenate(
+        [w[..., :1], w[..., 1:] * jnp.uint32(int(k) % _MOD)], axis=-1)
+
+
+def status_of(w):
+    """The status bitmask of a scalar status OR a counter word: scalars
+    pass through (legacy host ints), words read slot 0, batched ``(R,
+    WIDTH)`` words read column 0."""
+    if isinstance(w, (int, np.integer)):
+        return w
+    arr = jnp.asarray(w)
+    if arr.ndim == 0:
+        return arr
+    return arr[..., STATUS]
+
+
+def is_word(w) -> bool:
+    """True when ``w`` is a counter word (trailing dim == WIDTH)."""
+    if isinstance(w, (int, np.integer)):
+        return False
+    arr = np.asarray(jnp.shape(w))
+    return arr.size > 0 and int(arr[-1]) == WIDTH
+
+
+def counter(w, slot) -> int:
+    """Host-side read of one counter slot (name or index) of a word --
+    batched words sum over the batch axis."""
+    idx = COUNTER_SLOTS[slot] if isinstance(slot, str) else int(slot)
+    arr = np.asarray(w, np.uint64).reshape(-1, WIDTH)
+    if idx == STATUS:
+        return int(np.bitwise_or.reduce(arr[:, STATUS].astype(np.uint32)))
+    return int(arr[:, idx].sum())
+
+
+def totals(w) -> Dict[str, int]:
+    """Host-side dict view of a word (or a batch of words, fold-reduced):
+    ``{"status": ..., "evals": ..., ...}`` with python-int counters."""
+    arr = np.asarray(w, np.uint64).reshape(-1, WIDTH)
+    out = {"status": int(np.bitwise_or.reduce(
+        arr[:, STATUS].astype(np.uint32)))}
+    for name, idx in COUNTER_SLOTS.items():
+        if idx != STATUS:
+            out[name] = int(arr[:, idx].sum())
+    return out
+
+
+class HostTotals:
+    """Host-side accumulator reconciling device words against the
+    analytic ``.evals`` counters: python-int sums (no uint32 wrap across
+    calls), one ``note(word)`` per program return."""
+
+    def __init__(self):
+        self.counts: Dict[str, int] = {
+            k: 0 for k in COUNTER_SLOTS if k != "status"}
+        self.status = 0
+        self.words = 0
+
+    def note(self, w) -> int:
+        """Fold one device word (or batch of words) in; returns the
+        or-folded status bits of the noted word."""
+        t = totals(w)
+        st = t.pop("status")
+        self.status |= st
+        self.words += 1
+        for k, v in t.items():
+            self.counts[k] += v
+        return st
+
+    def as_dict(self) -> Dict[str, int]:
+        return dict(status=self.status, words=self.words, **self.counts)
+
+    def __getitem__(self, k: str) -> int:
+        return self.counts[k]

@@ -163,3 +163,42 @@ def test_edge_batches_status_surfaced():
     assert len(u) == 256 and np.all(np.isfinite(w))
     assert nbr.status & guards.FATAL == 0, guards.decode_status(nbr.status)
     assert isinstance(nbr.flag_counts, dict)
+
+
+def test_chaos_and_watchdog_events_flow_through_registry():
+    """DESIGN.md §15.2: chaos injections and watchdog heartbeat/decision
+    traffic land in the obs event ring when the registry is enabled, and
+    leave NO trace when it is disabled (the chaos path must not pay for
+    telemetry it did not ask for)."""
+    from repro.ft.watchdog import Watchdog
+    from repro.obs import metrics as M
+
+    M.reset()
+    M.disable()
+    chaos.run_scenario("silent_host_watchdog", seed=0)
+    assert not M.events()                      # disabled -> nothing stored
+
+    M.enable()
+    try:
+        report = chaos.run_scenario("silent_host_watchdog", seed=0)
+        assert report["detected"]
+        inj = M.events("chaos.inject")
+        out = M.events("chaos.outcome")
+        assert inj and inj[0][1]["scenario"] == "silent_host_watchdog"
+        assert out and out[0][1]["detected"]
+        # the scenario drove a real Watchdog: its beats + decision are in
+        # the same ring
+        beats = M.events("watchdog.beat")
+        decisions = M.events("watchdog.decide")
+        assert len(beats) == 3                 # 4 hosts, host 2 silent
+        assert decisions and decisions[-1][1]["dead"] == [2]
+        # direct decision path: a straggler flags in the event stream too
+        M.reset()
+        wd = Watchdog(hosts=3, now=0.0)
+        for h, t in ((0, 1.0), (1, 1.0), (2, 9.0)):
+            wd.beat(h, t, now=1.0)
+        wd.decide(now=2.0)
+        assert M.events("watchdog.decide")[-1][1]["stragglers"] == [2]
+    finally:
+        M.reset()
+        M.disable()

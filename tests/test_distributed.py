@@ -144,7 +144,7 @@ xd = jnp.asarray(x)
 want = np.asarray(sops.masked_block_sums(
     xd, jnp.sum(xd * xd, -1), jnp.asarray(src), jax.random.PRNGKey(0),
     kind="gaussian", inv_bw=1.0, beta=1.0, pairwise=None, block_size=bs,
-    num_blocks=n // bs, n=n, s=16, exact=True))
+    num_blocks=n // bs, n=n, s=16, exact=True)[0])
 np.testing.assert_array_equal(got, want)
 print("CONTRACT_BITWISE_OK")
 """)
@@ -173,7 +173,7 @@ for exact in (True, False):
     eng = ShardedBlocks(mesh, x, ker, block_size=bsz, exact=exact,
                         samples_per_block=8)
     nb, prob, sums, st = eng.fused_sample(src, key)
-    assert int(np.asarray(st)) == 0, st
+    assert int(np.asarray(st)[0]) == 0, st
     rnb, rprob, rsums = sref.sharded_fused_sample_ref(
         eng.x_rep, eng.x_sq_rep, src, key, "gaussian", 1.0, 1.0, bsz,
         eng.blocks_per_shard, eng.num_shards, n, exact=exact, s=8)
@@ -184,7 +184,7 @@ for exact in (True, False):
 eng = ShardedBlocks(mesh, x, ker, block_size=bsz, exact=True)
 keys = jax.random.split(jax.random.PRNGKey(7), 5)
 end, _, wst, wfb = eng.walk_scan(src, keys)
-assert int(np.asarray(wst)) == 0 and int(np.asarray(wfb)) == 0
+assert int(np.asarray(wst)[0]) == 0 and int(np.asarray(wfb)) == 0
 rend = sref.sharded_walk_ref(eng.x_rep, eng.x_sq_rep, src, keys, "gaussian",
                              1.0, 1.0, bsz, eng.blocks_per_shard,
                              eng.num_shards, n, exact=True)
@@ -194,8 +194,8 @@ xd = jnp.asarray(x)
 sd = np.asarray(sops.masked_block_sums(
     xd, jnp.sum(xd * xd, -1), src, key, kind="gaussian", inv_bw=1.0,
     beta=1.0, pairwise=None, block_size=bsz, num_blocks=-(-n // bsz), n=n,
-    s=16, exact=True))
-sums = np.asarray(eng.masked_block_sums(src, key))
+    s=16, exact=True)[0])
+sums = np.asarray(eng.masked_block_sums(src, key)[0])
 np.testing.assert_array_equal(sums[:, :sd.shape[1]], sd)
 assert np.all(sums[:, sd.shape[1]:] == 0.0)
 # collective schedule: one psum, no ppermute, per draw batch

@@ -125,11 +125,11 @@ def test_kde_sampler_stratified_tail_block_unbiased():
     y = x[:4]
     cfg = dict(kind="gaussian", inv_bw=0.5, beta=1.0, pairwise=ker.pairwise,
                block_size=bn, num_blocks=6, n=n)
-    exact = np.asarray(sops.exact_block_sums(y, x, x_sq, **cfg))
+    exact = np.asarray(sops.exact_block_sums(y, x, x_sq, **cfg)[0])
     reps = 300
     keys = jax.random.split(jax.random.PRNGKey(0), reps)
     est = np.stack([np.asarray(sops.stratified_block_sums(y, x, x_sq, k,
-                                                          s=s, **cfg))
+                                                          s=s, **cfg)[0])
                     for k in keys]).mean(0)
     # the tail block (last column) is exact when s >= tail size; all blocks
     # must match the exact sums in expectation

@@ -91,12 +91,13 @@ def test_prob_of_bitwise_parity(srv2):
     assert r.error is None
     nbr = srv2.tenant("b").admit()
     key = jax.random.PRNGKey(55)
-    bs = _ops.masked_block_sums(nbr.x, nbr.x_sq, jnp.asarray(src, jnp.int32),
-                                key, **nbr._cfg)
-    p0 = _ops.prob_of_from_block_sums(nbr.x, nbr.x_sq,
-                                      jnp.asarray(src, jnp.int32),
-                                      jnp.asarray(dst, jnp.int32), bs,
-                                      **nbr._l2_cfg)
+    bs, _ = _ops.masked_block_sums(nbr.x, nbr.x_sq,
+                                   jnp.asarray(src, jnp.int32),
+                                   key, **nbr._cfg)
+    p0, _ = _ops.prob_of_from_block_sums(nbr.x, nbr.x_sq,
+                                         jnp.asarray(src, jnp.int32),
+                                         jnp.asarray(dst, jnp.int32), bs,
+                                         **nbr._l2_cfg)
     np.testing.assert_array_equal(r.result, np.asarray(p0))
 
 
@@ -112,7 +113,7 @@ def test_query_parity_dense(srv2):
     assert r.error is None
     nbr = srv2.tenant("a").admit()
     c = nbr._cfg
-    bs = _ops.stratified_block_sums(
+    bs, _ = _ops.stratified_block_sums(
         jnp.asarray(y), nbr.x, nbr.x_sq, jax.random.PRNGKey(33),
         kind=c["kind"], inv_bw=c["inv_bw"], beta=c["beta"],
         pairwise=c["pairwise"], block_size=c["block_size"],
@@ -448,10 +449,10 @@ assert st2["failed"] == 0, [str(r.error) for r in (rw, rq, rp)]
 assert rw.result[0].shape == (8,)
 assert np.isfinite(rq.result).all() and rq.result.shape == (6,)
 assert rp.error is None and rp.status == 0
-bs = eng.masked_block_sums(jnp.asarray(src_p, jnp.int32),
-                           jax.random.PRNGKey(rp.seed))
-p0 = eng.prob_of_from_block_sums(jnp.asarray(src_p, jnp.int32),
-                                 jnp.asarray(dst_p, jnp.int32), bs)
+bs, _ = eng.masked_block_sums(jnp.asarray(src_p, jnp.int32),
+                              jax.random.PRNGKey(rp.seed))
+p0, _ = eng.prob_of_from_block_sums(jnp.asarray(src_p, jnp.int32),
+                                    jnp.asarray(dst_p, jnp.int32), bs)
 np.testing.assert_array_equal(rp.result, np.asarray(p0))
 assert np.isfinite(rp.result).all() and (rp.result > 0).all()
 print("MESH_SERVE_OK")

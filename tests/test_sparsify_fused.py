@@ -53,7 +53,7 @@ def test_fused_edge_batch_matches_ref_oracle_interpret(graph):
                                      1.0 / 1.5, 1.0, bs, nb, n)
     u, v, w, q_uv, q_vu, st = [np.asarray(a) for a in got]
     ru, rv, rw, rq_uv, rq_vu = [np.asarray(a) for a in want]
-    assert int(st) == 0, "clean graph, clean status expected"
+    assert int(st[0]) == 0, "clean graph, clean status expected"
     np.testing.assert_array_equal(u, ru)
     np.testing.assert_array_equal(v, rv)
     np.testing.assert_allclose(w, rw, rtol=2e-4)

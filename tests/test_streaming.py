@@ -378,8 +378,8 @@ assert pcc["psum_total"] == 0 and pcc["ppermute_total"] == 0, pcc
 eng.patch_rows(slots, new_x)
 
 fresh = ShardedBlocks(mesh, ds.x_pad, ker, block_size=16, exact=True)
-s1 = np.asarray(eng.masked_block_sums(src, key))
-s2 = np.asarray(fresh.masked_block_sums(src, key))
+s1 = np.asarray(eng.masked_block_sums(src, key)[0])
+s2 = np.asarray(fresh.masked_block_sums(src, key)[0])
 np.testing.assert_allclose(s1, s2, rtol=1e-5, atol=1e-6)
 after = collective_counts(lambda s, k: eng.fused_sample(s, k), src, key)
 assert after == base, (base, after)

@@ -1,0 +1,88 @@
+"""CI gate for the observability exporters (DESIGN.md §15.3).
+
+Validates the two machine-readable metric surfaces against the pinned
+``repro.obs.export.SCHEMA_VERSION``:
+
+* ``launch/serve.py`` JSON-lines: every ``[serve] metrics {...}`` line in
+  the given log file(s) must json-parse and carry the required keys for
+  its ``mode`` (``multi-tenant`` / ``graph-stream``).
+* ``BENCH_*.json`` artifacts: every artifact must embed a ``telemetry``
+  block (``schema_version`` / ``backend`` / ``fenced`` / ``wall_us``) --
+  the shared stamp proving the numbers came off a fenced ``obs.Timer``
+  path.
+
+Usage::
+
+    PYTHONPATH=src python tools/check_metrics_schema.py [logfile ...]
+    PYTHONPATH=src python tools/check_metrics_schema.py --no-bench serve.log
+
+Exit 0 when everything validates; exit 1 with a per-failure listing
+otherwise.  Log files are optional (the BENCH sweep alone is a valid
+invocation); passing a log file that contains NO metrics line is an
+error, because it usually means the prefix drifted.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import sys
+
+from repro.obs import export
+
+
+def check_log(path: str, errors: list) -> int:
+    """Validate every metrics line in one serve log; returns the count."""
+    seen = 0
+    with open(path) as fh:
+        for ln, line in enumerate(fh, 1):
+            if not line.startswith(export.METRICS_PREFIX):
+                continue
+            seen += 1
+            try:
+                obj = json.loads(line[len(export.METRICS_PREFIX):])
+                export.validate_metrics_line(obj)
+            except (ValueError, KeyError) as e:
+                errors.append(f"{path}:{ln}: {e}")
+    if seen == 0:
+        errors.append(f"{path}: no '{export.METRICS_PREFIX.strip()}' line "
+                      f"found (prefix drift?)")
+    return seen
+
+
+def check_bench(pattern: str, errors: list) -> int:
+    """Validate the telemetry block of every matching BENCH artifact."""
+    paths = sorted(glob.glob(pattern))
+    for path in paths:
+        try:
+            blk = json.load(open(path)).get("telemetry")
+            if blk is None:
+                raise ValueError("no 'telemetry' block")
+            export.validate_telemetry_block(blk, path=path)
+        except (ValueError, KeyError, json.JSONDecodeError) as e:
+            errors.append(f"{path}: {e}")
+    return len(paths)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("logs", nargs="*",
+                    help="serve.py log files to scan for metrics lines")
+    ap.add_argument("--bench-glob", default="BENCH_*.json")
+    ap.add_argument("--no-bench", action="store_true",
+                    help="skip the BENCH_*.json telemetry sweep")
+    args = ap.parse_args(argv)
+    errors: list = []
+    lines = sum(check_log(p, errors) for p in args.logs)
+    artifacts = 0 if args.no_bench else check_bench(args.bench_glob, errors)
+    if errors:
+        print("\n".join("SCHEMA FAIL " + e for e in errors))
+        return 1
+    print(f"# metrics schema ok: {lines} serve line(s), "
+          f"{artifacts} BENCH artifact(s), "
+          f"schema_version={export.SCHEMA_VERSION}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
